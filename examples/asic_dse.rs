@@ -1,0 +1,77 @@
+//! ASIC flow: design an accelerator for a sensor-side vision workload
+//! under the ShiDianNao-class budget (paper Table 9 row 2: 15 FPS, 600 mW,
+//! 128 KB SRAM, 64 MACs, 1 GHz / 65 nm), compare the three ASIC templates,
+//! and report energy vs the ShiDianNao expert baseline (Fig. 14/15 flow).
+//!
+//! ```sh
+//! cargo run --release --example asic_dse -- [model]
+//! ```
+
+use autodnnchip::builder::{build_accelerator, stage1, Spec, SweepGrid};
+use autodnnchip::dnn::zoo;
+use autodnnchip::experiments::fig14_15::shidiannao_baseline_energy_uj;
+use autodnnchip::rtlgen;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(|s| s.as_str()).unwrap_or("sdn_ocr");
+    let model = zoo::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let spec = Spec::asic_vision();
+    println!("=== ASIC Chip Builder: {} (EDP objective) ===", model.name);
+
+    // Show the per-template design-space structure first (Fig. 14's cloud).
+    let grid = SweepGrid::for_backend(&spec.backend);
+    let s1 = stage1(&model, &spec, &grid, 6)?;
+    println!("stage-1: {} points, {} feasible", s1.evaluated, s1.feasible);
+    for t in ["systolic", "shidiannao", "eyeriss_rs"] {
+        let pts: Vec<_> = s1.trace.iter().filter(|p| p.template.name() == t && p.feasible).collect();
+        if let Some(best) = pts
+            .iter()
+            .min_by(|a, b| (a.energy_uj * a.latency_ms).partial_cmp(&(b.energy_uj * b.latency_ms)).unwrap())
+        {
+            println!(
+                "  {t:<12} {} feasible pts; best EDP point: {:.2} µJ × {:.3} ms",
+                pts.len(),
+                best.energy_uj,
+                best.latency_ms
+            );
+        } else {
+            println!("  {t:<12} no feasible points under the budget");
+        }
+    }
+
+    // Full flow with stage-2 co-optimization.
+    let out = build_accelerator(&model, &spec, 4, 1)?;
+    let Some(best) = out.survivors.first() else {
+        anyhow::bail!("no feasible ASIC design");
+    };
+    let ours_uj = (best.coarse.dynamic_pj
+        + best.cfg.tech.costs.leakage_mw * best.fine_latency_ms * 1e6)
+        / 1e6;
+    let base_uj = shidiannao_baseline_energy_uj(&model)?;
+    println!(
+        "\nwinner: {} | {} MACs | {:.0}+{:.0} KB SRAM | pipeline {}",
+        best.template.name(),
+        best.cfg.unroll,
+        best.cfg.act_buf_bits as f64 / 8192.0,
+        best.cfg.w_buf_bits as f64 / 8192.0,
+        best.cfg.pipeline
+    );
+    println!(
+        "        {:.3} ms | {:.2} µJ/inf vs ShiDianNao baseline {:.2} µJ ({:+.1}% energy)",
+        best.fine_latency_ms,
+        ours_uj,
+        base_uj,
+        (ours_uj / base_uj - 1.0) * 100.0
+    );
+
+    // Emit the ASIC RTL bundle (synthesizable Verilog + memory specs for
+    // the memory compiler + testbench).
+    let bundle = rtlgen::generate(&model, best)?;
+    let dir = std::path::PathBuf::from("results/asic_dse_rtl");
+    rtlgen::emit(&bundle, &dir)?;
+    println!("\nRTL + memory specs written to {}:", dir.display());
+    println!("{}", bundle.file("mem_spec.txt").unwrap_or(""));
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: predict the performance of a DNN on an accelerator template
+//! with both Chip-Predictor modes, in ~20 lines of API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use autodnnchip::dnn::zoo;
+use autodnnchip::predictor::{predict_coarse, simulate};
+use autodnnchip::templates::{HwConfig, TemplateId};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a DNN from the zoo (or parse one via dnn::parser).
+    let model = zoo::by_name("SK").expect("SkyNet is in the zoo");
+    let stats = model.stats()?;
+    println!(
+        "model {}: {} layers, {:.2} M params, {:.0} M MACs",
+        model.name,
+        model.layers.len(),
+        stats.total_params as f64 / 1e6,
+        stats.total_macs as f64 / 1e6
+    );
+
+    // 2. Instantiate an accelerator template on the Ultra96 configuration.
+    let cfg = HwConfig::ultra96_default();
+    let graph = TemplateId::Hetero.build(&model, &cfg)?;
+    graph.validate()?;
+    println!(
+        "design graph '{}': {} IPs, {} edges",
+        graph.name,
+        graph.nodes.len(),
+        graph.edges.len()
+    );
+
+    // 3. Coarse mode: analytical Eqs. 1-8 (what stage-1 DSE sweeps).
+    let coarse = predict_coarse(&graph, &cfg.tech)?;
+    println!(
+        "coarse: {:.2} ms ({:.0} fps), {:.0} µJ/inference, {} DSP, {} BRAM18K",
+        coarse.latency_ms,
+        coarse.fps(),
+        coarse.energy_uj(),
+        coarse.resources.dsp,
+        coarse.resources.bram18k
+    );
+
+    // 4. Fine mode: Algorithm-1 run-time simulation with inter-IP
+    //    pipelining (what stage-2 co-optimization iterates on).
+    let fine = simulate(&graph, cfg.tech.costs.leakage_mw, false)?;
+    println!(
+        "fine:   {:.2} ms ({:.0} fps) — {:.1}% faster than the critical path \
+         thanks to inter-IP pipelining",
+        fine.latency_ms,
+        1000.0 / fine.latency_ms,
+        (1.0 - fine.cycles as f64 / coarse.latency_cycles as f64) * 100.0
+    );
+    let bn = &graph.nodes[fine.bottleneck];
+    println!(
+        "bottleneck IP: '{}' (idle {} cycles) — stage-2 DSE would target it",
+        bn.name, fine.per_node[fine.bottleneck].idle_cycles
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+"""AOT bridge: lower the L2 jax models (with their L1 Pallas kernels) to
+HLO *text* and write the artifact manifest the rust runtime consumes.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the rust side's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: `cd python && python -m compile.aot --out ../artifacts`
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = [
+        ("matmul_tile", model.matmul_entry, list(model.MATMUL_SHAPES)),
+        ("conv_block", model.conv_block_entry, [model.CONV_BLOCK_SHAPE]),
+        ("skynet_tiny", model.skynet_tiny, [model.INPUT_SHAPE]),
+    ]
+    manifest = []
+    for name, fn, shapes in entries:
+        lowered = lower_entry(fn, shapes)
+        text = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, hlo_file), "w") as f:
+            f.write(text)
+        # Probe output arity by abstract evaluation.
+        outs = jax.eval_shape(fn, *[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes])
+        manifest.append(
+            {
+                "name": name,
+                "hlo": hlo_file,
+                "inputs": [list(s) for s in shapes],
+                "num_outputs": len(outs),
+            }
+        )
+        print(f"wrote {hlo_file} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"wrote manifest.json with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

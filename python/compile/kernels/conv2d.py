@@ -1,0 +1,67 @@
+"""L1: convolutions built on the Pallas matmul kernel.
+
+Dense (and 1×1) convolutions lower to im2col + the tiled matmul — this is
+the path the accelerator's MAC array executes, so it runs through the
+Pallas kernel. Depthwise convolutions are pure data-reorganisation-bound
+(9 MACs/output) and map to the vector path in every template, so they use
+`lax.conv_general_dilated` directly (documented substitution, DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul
+
+DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
+
+def conv2d_pallas(x, w, stride: int = 1, pad: int = 0):
+    """Dense conv via im2col + Pallas matmul.
+
+    x: (N, C, H, W); w: (O, C, k, k) → (N, O, H', W').
+    """
+    n, c, h, wd = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wd + 2 * pad - kw) // stride + 1
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    # im2col: patches (N, C*kh*kw, oh*ow).
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, :, i : i + oh * stride : stride, j : j + ow * stride : stride])
+    patches = jnp.stack(cols, axis=2).reshape(n, c * kh * kw, oh * ow)
+    wmat = w.reshape(o, c * kh * kw)
+    outs = [matmul(wmat, patches[b]) for b in range(n)]
+    return jnp.stack(outs).reshape(n, o, oh, ow)
+
+
+def conv2d_dw(x, w, stride: int = 1, pad: int = 1):
+    """Depthwise conv (groups == channels) via lax (vector path)."""
+    c = x.shape[1]
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=DIMNUMS,
+        feature_group_count=c,
+    )
+
+
+def conv2d_any(x, w, stride: int = 1, pad: int = 0, groups: int = 1):
+    """Dispatch: depthwise → vector path; dense → Pallas matmul path."""
+    if groups == x.shape[1] and groups > 1:
+        return conv2d_dw(x, w, stride, pad)
+    if groups == 1:
+        return conv2d_pallas(x, w, stride, pad)
+    # Grouped dense conv: split, run each group through the matmul path.
+    xg = jnp.split(x, groups, axis=1)
+    wg = jnp.split(w, groups, axis=0)
+    return jnp.concatenate(
+        [conv2d_pallas(xi, wi, stride, pad) for xi, wi in zip(xg, wg)], axis=1
+    )

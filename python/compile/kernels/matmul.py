@@ -1,0 +1,90 @@
+"""L1: Pallas tiled matmul — the accelerator PE-array analogue.
+
+The paper's compute hot-spot is a weight-stationary MAC array; on TPU the
+equivalent structure is a (TM×TK)·(TK×TN) block matmul whose K-grid
+revisits the output block as a VMEM-resident accumulator (the BlockSpec
+index maps below *are* the HBM↔VMEM schedule the paper's state machines
+express — see DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; interpret-mode lowers to plain HLO so the AOT artifact runs
+under the rust runtime while keeping the same block structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-friendly multiples (128 lanes); modest TM keeps
+# VMEM footprint small (see vmem_footprint_bits below).
+TM, TN, TK = 64, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid (M/TM, N/TN, K/TK); the output block is revisited across the
+    K dimension and used as the accumulator."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(a, m0, m1):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def matmul(x, y, tm: int = TM, tn: int = TN, tk: int = TK):
+    """`x @ y` via the Pallas kernel, any (m, k) × (k, n) f32/bf16."""
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"bad shapes {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    tm = min(tm, max(1, m))
+    tn = min(tn, max(1, n))
+    tk = min(tk, max(1, k))
+    xp = _pad_to(x, tm, tk)
+    yp = _pad_to(y, tk, tn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def vmem_footprint_bits(tm: int = TM, tn: int = TN, tk: int = TK, dtype_bits: int = 32) -> int:
+    """Static VMEM estimate for one grid step: x-tile + y-tile + out-tile
+    (×2 for double buffering of the streamed operands)."""
+    return (2 * (tm * tk + tk * tn) + tm * tn) * dtype_bits
+
+
+def mxu_utilization(tm: int = TM, tn: int = TN, tk: int = TK) -> float:
+    """Fraction of 128×128×8 MXU issue slots a tile keeps busy (padding
+    waste only; interpret-mode wallclock is *not* a TPU proxy)."""
+
+    def eff(t, native):
+        import math
+
+        return t / (math.ceil(t / native) * native)
+
+    return eff(tm, 128) * eff(tn, 128) * eff(tk, 8)

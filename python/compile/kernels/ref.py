@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Everything here is straight-line jax.numpy / lax with no Pallas, so a
+mismatch between kernel and oracle is a kernel bug, full stop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
+
+def matmul_ref(x, y):
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def conv2d_ref(x, w, stride: int = 1, pad: int = 0, groups: int = 1):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=DIMNUMS,
+        feature_group_count=groups,
+    )
+
+
+def maxpool2_ref(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )

@@ -1,0 +1,130 @@
+"""L2: the JAX golden models, built on the L1 Pallas kernels.
+
+`skynet_tiny` mirrors `zoo::skynet_tiny` in the rust layer *exactly* —
+same layer list, same weight-initialization stream (compile.rng ==
+util::rng) — so the rust funcsim of a generated accelerator can be
+validated against the PJRT execution of this model (paper §6 Step III's
+"design validation through RTL generation and execution").
+
+Weights are baked into the lowered HLO as constants: the rust hot path
+feeds only the input image.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import rng
+from .kernels.conv2d import conv2d_any
+from .kernels.matmul import matmul
+from .kernels.ref import maxpool2_ref
+
+# Shared with rust (examples/e2e_validate.rs): weight seed.
+WEIGHT_SEED = 0xE2E
+
+# skynet_tiny layer table: (index, kind, params) — keep in lock-step with
+# rust/src/dnn/zoo.rs::skynet_tiny.
+#   0 b1_dw   dw3x3 c=3
+#   1 b1_pw   1x1 -> 16
+#   2 b1_relu
+#   3 pool1   2x2
+#   4 b2_dw   dw3x3 c=16
+#   5 b2_pw   1x1 -> 32
+#   6 b2_relu
+#   7 pool2   2x2
+#   8 b3_dw   dw3x3 c=32
+#   9 b3_pw   1x1 -> 48
+#  10 b3_relu
+#  11 concat  with layer 7 output -> 80 ch
+#  12 b4_pw   1x1 -> 32
+#  13 b4_relu
+#  14 head    1x1 -> 8, bias
+
+INPUT_SHAPE = (1, 3, 32, 64)  # NCHW
+
+
+def _w(layer, out_c, icg, k, bias=False):
+    w, b = rng.conv_weights(WEIGHT_SEED, layer, out_c, icg, k, bias)
+    return jnp.asarray(w), (jnp.asarray(b) if b is not None else None)
+
+
+def skynet_tiny(x):
+    """Forward pass; x: (1, 3, 32, 64) float32 → (1, 8, 8, 16)."""
+    w0, _ = _w(0, 3, 1, 3)
+    x = conv2d_any(x, w0, stride=1, pad=1, groups=3)
+    w1, _ = _w(1, 16, 3, 1)
+    x = conv2d_any(x, w1)
+    x = jnp.maximum(x, 0.0)
+    x = maxpool2_ref(x)
+    w4, _ = _w(4, 16, 1, 3)
+    x = conv2d_any(x, w4, stride=1, pad=1, groups=16)
+    w5, _ = _w(5, 32, 16, 1)
+    x = conv2d_any(x, w5)
+    x = jnp.maximum(x, 0.0)
+    x = maxpool2_ref(x)
+    bypass = x  # layer-7 output
+    w8, _ = _w(8, 32, 1, 3)
+    x = conv2d_any(x, w8, stride=1, pad=1, groups=32)
+    w9, _ = _w(9, 48, 32, 1)
+    x = conv2d_any(x, w9)
+    x = jnp.maximum(x, 0.0)
+    x = jnp.concatenate([x, bypass], axis=1)
+    w12, _ = _w(12, 32, 80, 1)
+    x = conv2d_any(x, w12)
+    x = jnp.maximum(x, 0.0)
+    w14, b14 = _w(14, 8, 32, 1, bias=True)
+    x = conv2d_any(x, w14)
+    x = x + b14.reshape(1, -1, 1, 1)
+    return (x,)
+
+
+def skynet_tiny_ref(x):
+    """Same network on the pure-jnp oracle path (no Pallas) — used by the
+    pytest suite to isolate kernel bugs from model bugs."""
+    from .kernels.ref import conv2d_ref
+
+    w0, _ = _w(0, 3, 1, 3)
+    x = conv2d_ref(x, w0, stride=1, pad=1, groups=3)
+    w1, _ = _w(1, 16, 3, 1)
+    x = conv2d_ref(x, w1)
+    x = jnp.maximum(x, 0.0)
+    x = maxpool2_ref(x)
+    w4, _ = _w(4, 16, 1, 3)
+    x = conv2d_ref(x, w4, stride=1, pad=1, groups=16)
+    w5, _ = _w(5, 32, 16, 1)
+    x = conv2d_ref(x, w5)
+    x = jnp.maximum(x, 0.0)
+    x = maxpool2_ref(x)
+    bypass = x
+    w8, _ = _w(8, 32, 1, 3)
+    x = conv2d_ref(x, w8, stride=1, pad=1, groups=32)
+    w9, _ = _w(9, 48, 32, 1)
+    x = conv2d_ref(x, w9)
+    x = jnp.maximum(x, 0.0)
+    x = jnp.concatenate([x, bypass], axis=1)
+    w12, _ = _w(12, 32, 80, 1)
+    x = conv2d_ref(x, w12)
+    x = jnp.maximum(x, 0.0)
+    w14, b14 = _w(14, 8, 32, 1, bias=True)
+    x = conv2d_ref(x, w14)
+    x = x + b14.reshape(1, -1, 1, 1)
+    return (x,)
+
+
+def matmul_entry(x, y):
+    """Raw kernel entry point for the rust runtime's kernel-level check."""
+    return (matmul(x, y),)
+
+
+def conv_block_entry(x):
+    """One DW+PW bundle with baked weights — the hetero template's
+    pipeline stage as an artifact."""
+    wd, _ = _w(100, 16, 1, 3)
+    wp, _ = _w(101, 32, 16, 1)
+    y = conv2d_any(x, wd, stride=1, pad=1, groups=16)
+    y = conv2d_any(y, wp)
+    return (jnp.maximum(y, 0.0),)
+
+
+CONV_BLOCK_SHAPE = (1, 16, 16, 32)
+MATMUL_SHAPES = ((64, 96), (96, 80))

@@ -1,0 +1,100 @@
+"""Deterministic RNG matching `rust/src/util/rng.rs` bit-for-bit.
+
+The rust funcsim and the JAX golden model must initialize identical
+weights so the end-to-end validation (funcsim fixed-point vs PJRT float)
+is meaningful. Both sides derive weights from this xoshiro256** stream
+(seeded via SplitMix64), so the parity is exact by construction; the
+`test_rng_parity` pytest pins golden values produced by the rust
+implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 (== rust `util::rng::Rng`)."""
+
+    def __init__(self, seed: int) -> None:
+        x = seed & MASK
+        s = []
+        for _ in range(4):
+            x = (x + GOLDEN) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        r = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def f64(self) -> float:
+        """Uniform in [0, 1) — same 53-bit construction as rust."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def layer_rng(seed: int, layer_index: int) -> Rng:
+    """Per-layer stream: `Rng::new(seed ^ ((i+1) * GOLDEN))` (wrapping)."""
+    return Rng(seed ^ (((layer_index + 1) * GOLDEN) & MASK))
+
+
+def conv_weights(seed: int, layer_index: int, out_c: int, in_c_per_group: int, k: int, bias: bool):
+    """Replicates `funcsim::init_weights` for a Conv layer.
+
+    Returns `(w[out_c, icg, k, k] float32, b[out_c] float32 or None)`.
+    """
+    rng = layer_rng(seed, layer_index)
+    fan_in = in_c_per_group * k * k
+    n = out_c * fan_in
+    w = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        w[i] = (np.float32(rng.f64()) - np.float32(0.5)) / np.float32(fan_in)
+    b = None
+    if bias:
+        b = np.empty(out_c, dtype=np.float32)
+        for i in range(out_c):
+            b[i] = (np.float32(rng.f64()) - np.float32(0.5)) * np.float32(0.01)
+    return w.reshape(out_c, in_c_per_group, k, k), b
+
+
+def fc_weights(seed: int, layer_index: int, out_features: int, fan_in: int, bias: bool):
+    """Replicates `funcsim::init_weights` for an Fc layer."""
+    rng = layer_rng(seed, layer_index)
+    n = out_features * fan_in
+    w = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        w[i] = (np.float32(rng.f64()) - np.float32(0.5)) / np.float32(fan_in)
+    b = None
+    if bias:
+        b = np.empty(out_features, dtype=np.float32)
+        for i in range(out_features):
+            b[i] = (np.float32(rng.f64()) - np.float32(0.5)) * np.float32(0.01)
+    return w.reshape(out_features, fan_in), b
+
+
+def random_input(seed: int, shape, scale: float = 1.0) -> np.ndarray:
+    """Replicates `funcsim::Tensor::random` (CHW order)."""
+    rng = Rng(seed)
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = (np.float32(rng.f64()) * np.float32(2.0) - np.float32(1.0)) * np.float32(scale)
+    return out.reshape(shape)

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/tile sizes/dtypes; assert_allclose against
+ref.py is the core correctness signal for the compute hot-spot.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d import conv2d_any, conv2d_pallas
+from compile.kernels.matmul import matmul, mxu_utilization, vmem_footprint_bits
+from compile.kernels.ref import conv2d_ref, matmul_ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref_any_shape(m, k, n, seed):
+    x = rand((m, k), seed)
+    y = rand((k, n), seed + 1)
+    # Tiled-K accumulation order differs from a single dot; allow
+    # a few ULPs of float32 reassociation slack.
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    tm=st.sampled_from([1, 8, 32, 64]),
+    tn=st.sampled_from([1, 16, 128]),
+    tk=st.sampled_from([1, 8, 128]),
+)
+def test_matmul_tile_size_invariance(tm, tn, tk):
+    x = rand((70, 90), 3)
+    y = rand((90, 50), 4)
+    np.testing.assert_allclose(
+        matmul(x, y, tm=tm, tn=tn, tk=tk), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = rand((33, 47), 5).astype(dtype)
+    y = rand((47, 29), 6).astype(dtype)
+    out = matmul(x, y)
+    assert out.dtype == x.dtype
+    tol = 1e-5 if dtype == np.float32 else 6e-2
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(matmul_ref(x, y), dtype=np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+@given(
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    hw=st.integers(3, 14),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.sampled_from([0, 1]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_pallas_matches_ref(c, o, hw, k, stride, pad, seed):
+    if hw + 2 * pad < k:
+        return
+    x = rand((1, c, hw, hw + 2), seed)
+    w = rand((o, c, k, k), seed + 9)
+    got = conv2d_pallas(x, w, stride=stride, pad=pad)
+    want = conv2d_ref(x, w, stride=stride, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(c=st.sampled_from([2, 4, 16]), seed=st.integers(0, 2**31))
+def test_depthwise_conv_matches_ref(c, seed):
+    x = rand((1, c, 10, 12), seed)
+    w = rand((c, 1, 3, 3), seed + 1)
+    got = conv2d_any(x, w, stride=1, pad=1, groups=c)
+    want = conv2d_ref(x, w, stride=1, pad=1, groups=c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_conv_matches_ref():
+    # AlexNet-style 2-group dense conv goes down the split-matmul path.
+    x = rand((1, 8, 9, 9), 11)
+    w = rand((6, 4, 3, 3), 12)
+    got = conv2d_any(x, w, stride=1, pad=1, groups=2)
+    want = conv2d_ref(x, w, stride=1, pad=1, groups=2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul(rand((3, 4), 0), rand((5, 6), 1))
+
+
+def test_vmem_footprint_within_budget():
+    # Default tiles with double-buffered operands must fit 16 MiB VMEM.
+    assert vmem_footprint_bits() <= 16 * 1024 * 1024 * 8
+
+
+def test_mxu_utilization_estimate():
+    # MXU-aligned tiles waste nothing; odd tiles pad.
+    assert mxu_utilization(tm=128, tn=128, tk=8) == 1.0
+    assert mxu_utilization() >= 0.5
+    assert mxu_utilization(tm=100, tn=100, tk=7) < 0.7

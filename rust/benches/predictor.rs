@@ -1,0 +1,68 @@
+//! Predictor benchmarks — the paper's headline DSE-throughput claim is
+//! 0.65 ms per stage-1 design point on a single-thread laptop CPU (§7.2);
+//! the coarse path here must beat that with a wide margin, and the fine
+//! simulator must be fast enough for stage-2's inner loop.
+
+use autodnnchip::dnn::zoo;
+use autodnnchip::predictor::{predict_coarse, simulate};
+use autodnnchip::templates::{HwConfig, TemplateId};
+use autodnnchip::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("predictor");
+
+    let sk = zoo::by_name("SK").unwrap();
+    let mb = zoo::by_name("V-Model4").unwrap();
+    let alex = zoo::alexnet();
+    let fpga = HwConfig::ultra96_default();
+    let asic = {
+        let mut c = HwConfig::asic_default();
+        c.unroll = 168;
+        c
+    };
+
+    // --- stage-1 inner loop: build graph + coarse predict (one "design
+    // point" as the paper counts them). Paper: 0.65 ms/point. ---
+    let r = b.run("coarse_point/skynet/hetero", || {
+        let g = TemplateId::Hetero.build(&sk, &fpga).unwrap();
+        predict_coarse(&g, &fpga.tech).unwrap().latency_cycles
+    });
+    let per_point_ms = r.mean_ns / 1e6;
+    b.run("coarse_point/mobilenetv2/systolic", || {
+        let g = TemplateId::Systolic.build(&mb, &fpga).unwrap();
+        predict_coarse(&g, &fpga.tech).unwrap().latency_cycles
+    });
+    b.run("coarse_point/alexnet/eyeriss", || {
+        let g = TemplateId::Eyeriss.build(&alex, &asic).unwrap();
+        predict_coarse(&g, &asic.tech).unwrap().latency_cycles
+    });
+
+    // --- coarse predict alone on a prebuilt graph ---
+    let g_sk = TemplateId::Hetero.build(&sk, &fpga).unwrap();
+    b.run("coarse_predict_only/skynet", || {
+        predict_coarse(&g_sk, &fpga.tech).unwrap().latency_cycles
+    });
+
+    // --- fine-grained simulation (stage-2 inner loop) ---
+    b.run("fine_sim/skynet/hetero_pipe2", || simulate(&g_sk, 0.0, false).unwrap().cycles);
+    let mut deep = fpga.clone();
+    deep.pipeline = 16;
+    let g_deep = TemplateId::Hetero.build(&sk, &deep).unwrap();
+    b.run("fine_sim/skynet/hetero_pipe16", || simulate(&g_deep, 0.0, false).unwrap().cycles);
+    let g_alex = TemplateId::Eyeriss.build(&alex, &asic).unwrap();
+    b.run("fine_sim/alexnet/eyeriss", || simulate(&g_alex, 0.0, false).unwrap().cycles);
+
+    // --- model zoo / parser substrate ---
+    b.run("model_stats/mobilenetv2", || mb.stats().unwrap().total_macs);
+    let json = autodnnchip::dnn::parser::to_json(&sk).to_string();
+    b.run("parser_roundtrip/skynet", || {
+        autodnnchip::dnn::parser::parse_str(&json).unwrap().layers.len()
+    });
+
+    println!(
+        "\npaper stage-1 throughput: 0.65 ms/point; ours: {per_point_ms:.4} ms/point ({}x faster)",
+        (0.65 / per_point_ms) as u64
+    );
+    assert!(per_point_ms < 0.65, "stage-1 point evaluation misses the paper's 0.65 ms target");
+}

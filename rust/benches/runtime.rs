@@ -1,0 +1,46 @@
+//! Runtime-path benchmarks: PJRT artifact execution (the golden-reference
+//! path) and the funcsim fixed-point executor (the RTL-simulation
+//! stand-in). Skips gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use autodnnchip::dnn::zoo;
+use autodnnchip::funcsim::{self, Mode, Tensor};
+use autodnnchip::ip::Precision;
+use autodnnchip::runtime::Runtime;
+use autodnnchip::util::bench::Bench;
+use autodnnchip::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("runtime");
+
+    let model = zoo::skynet_tiny();
+    let weights = funcsim::init_weights(&model, 0xE2E).unwrap();
+    let input = Tensor::random(model.input, &mut Rng::new(7), 1.0);
+
+    b.run("funcsim_float/skynet_tiny", || {
+        funcsim::run(&model, &weights, &input, Mode::Float).unwrap().len()
+    });
+    b.run("funcsim_quant11_9/skynet_tiny", || {
+        funcsim::run(&model, &weights, &input, Mode::Quantized(Precision::new(11, 9)))
+            .unwrap()
+            .len()
+    });
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts not built — skipping PJRT benches; run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let tiny = rt.load("skynet_tiny").unwrap();
+    b.run("pjrt_exec/skynet_tiny", || tiny.run_f32(&[input.data.clone()]).unwrap().len());
+    let mm = rt.load("matmul_tile").unwrap();
+    let x = vec![0.5f32; 64 * 96];
+    let y = vec![0.25f32; 96 * 80];
+    b.run("pjrt_exec/matmul_tile", || mm.run_f32(&[x.clone(), y.clone()]).unwrap().len());
+
+    // Compile (load) cost — once per design variant, off the hot path.
+    b.run("pjrt_compile/matmul_tile", || rt.load("matmul_tile").unwrap().meta.num_outputs);
+}

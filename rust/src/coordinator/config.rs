@@ -1,0 +1,103 @@
+//! Run configuration: JSON config file ↔ [`RunConfig`].
+
+use anyhow::{anyhow, Result};
+
+use crate::builder::{Backend, Objective, Spec};
+use crate::util::json::Json;
+
+/// One Chip-Builder run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub spec: Spec,
+    /// Stage-1 survivors carried into stage 2 (paper's N₂).
+    pub n2: usize,
+    /// Final candidates emitted (paper's N_opt).
+    pub n_opt: usize,
+    pub out_dir: Option<String>,
+    pub rtl_out: Option<String>,
+}
+
+impl RunConfig {
+    /// Parse from a JSON config:
+    /// ```json
+    /// { "model": "SK", "backend": "fpga", "objective": "latency",
+    ///   "min_fps": 20, "max_power_mw": 10000, "n2": 4, "n_opt": 2,
+    ///   "out_dir": "results/sk", "rtl_out": "results/sk/rtl" }
+    /// ```
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let model = j
+            .get("model")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("config: missing 'model'"))?
+            .to_string();
+        let backend = match j.get("backend").and_then(|v| v.as_str()).unwrap_or("fpga") {
+            "fpga" => Backend::Fpga {
+                dsp: j.get("dsp").and_then(|v| v.as_usize()).unwrap_or(360),
+                bram18k: j.get("bram18k").and_then(|v| v.as_usize()).unwrap_or(432),
+                lut: j.get("lut").and_then(|v| v.as_usize()).unwrap_or(70_560),
+                ff: j.get("ff").and_then(|v| v.as_usize()).unwrap_or(141_120),
+            },
+            "asic" => Backend::Asic {
+                sram_kb: j.get("sram_kb").and_then(|v| v.as_f64()).unwrap_or(128.0),
+                macs: j.get("macs").and_then(|v| v.as_usize()).unwrap_or(64),
+            },
+            other => return Err(anyhow!("config: unknown backend '{other}'")),
+        };
+        let objective = match j.get("objective").and_then(|v| v.as_str()).unwrap_or("latency") {
+            "latency" => Objective::Latency,
+            "energy" => Objective::Energy,
+            "edp" => Objective::Edp,
+            other => return Err(anyhow!("config: unknown objective '{other}'")),
+        };
+        let spec = Spec {
+            backend,
+            min_fps: j.get("min_fps").and_then(|v| v.as_f64()).unwrap_or(20.0),
+            max_power_mw: j.get("max_power_mw").and_then(|v| v.as_f64()).unwrap_or(10_000.0),
+            objective,
+        };
+        Ok(RunConfig {
+            model,
+            spec,
+            n2: j.get("n2").and_then(|v| v.as_usize()).unwrap_or(4),
+            n_opt: j.get("n_opt").and_then(|v| v.as_usize()).unwrap_or(2),
+            out_dir: j.get("out_dir").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            rtl_out: j.get("rtl_out").and_then(|v| v.as_str()).map(|s| s.to_string()),
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        RunConfig::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal() {
+        let j = Json::parse(r#"{"model":"SK"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "SK");
+        assert_eq!(c.n2, 4);
+        assert!(matches!(c.spec.backend, Backend::Fpga { dsp: 360, .. }));
+    }
+
+    #[test]
+    fn parses_asic_with_objective() {
+        let j = Json::parse(r#"{"model":"sdn_ocr","backend":"asic","objective":"edp","macs":64}"#)
+            .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(matches!(c.spec.backend, Backend::Asic { macs: 64, .. }));
+        assert_eq!(c.spec.objective, Objective::Edp);
+    }
+
+    #[test]
+    fn rejects_unknown_backend() {
+        let j = Json::parse(r#"{"model":"SK","backend":"quantum"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Run coordination: job configuration, a worker pool for parallel design
+//! evaluation, and the end-to-end orchestration that the CLI drives
+//! (load config → DSE → PnR → RTL emit → result dump).
+//!
+//! The paper's contribution is the predictor/builder, so this layer is a
+//! thin driver by design — but it is a *real* one: config files, a thread
+//! pool for the embarrassingly-parallel stage-1 sweep, structured result
+//! artifacts, and process exit discipline.
+
+pub mod config;
+pub mod pool;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::builder::{build_accelerator, pnr_check, BuildOutput, PnrOutcome};
+use crate::dnn::zoo;
+use crate::rtlgen;
+use crate::util::json::{obj, Json};
+
+pub use config::RunConfig;
+pub use pool::Pool;
+
+/// Outcome summary written to `<out_dir>/result.json`.
+pub struct RunSummary {
+    pub build: BuildOutput,
+    pub result_json: Json,
+}
+
+/// Execute a full Chip-Builder run from a configuration.
+pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
+    let model = zoo::by_name(&cfg.model)
+        .with_context(|| format!("unknown model '{}' (see `autodnnchip list-models`)", cfg.model))?;
+    let build = build_accelerator(&model, &cfg.spec, cfg.n2, cfg.n_opt)?;
+
+    let mut designs = Vec::new();
+    for (rank, cand) in build.survivors.iter().enumerate() {
+        let pnr = pnr_check(cand, &cfg.spec);
+        let achieved = match pnr {
+            PnrOutcome::Pass { achieved_freq_mhz } => achieved_freq_mhz,
+            PnrOutcome::Fail { .. } => 0.0,
+        };
+        designs.push(obj(vec![
+            ("rank", rank.into()),
+            ("template", cand.template.name().into()),
+            ("unroll", cand.cfg.unroll.into()),
+            ("act_buf_bits", cand.cfg.act_buf_bits.into()),
+            ("w_buf_bits", cand.cfg.w_buf_bits.into()),
+            ("bus_bits", cand.cfg.bus_bits.into()),
+            ("pipeline", cand.cfg.pipeline.into()),
+            ("latency_ms", cand.fine_latency_ms.into()),
+            ("energy_uj", cand.coarse.energy_uj().into()),
+            ("dsp", cand.coarse.resources.dsp.into()),
+            ("bram18k", cand.coarse.resources.bram18k.into()),
+            ("achieved_freq_mhz", achieved.into()),
+        ]));
+        // Emit RTL for every surviving design.
+        if let Some(dir) = &cfg.rtl_out {
+            let bundle = rtlgen::generate(&model, cand)?;
+            rtlgen::emit(&bundle, &Path::new(dir).join(format!("design_{rank}")))?;
+        }
+    }
+    let result_json = obj(vec![
+        ("model", cfg.model.as_str().into()),
+        ("evaluated", build.evaluated.into()),
+        ("survivors", Json::Arr(designs)),
+        (
+            "stage2_improvement_pct",
+            Json::Arr(
+                build
+                    .stage2_reports
+                    .iter()
+                    .map(|r| {
+                        Json::Num(
+                            (r.initial_latency_ms - r.best.fine_latency_ms) / r.initial_latency_ms
+                                * 100.0,
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(Path::new(dir).join("result.json"), result_json.pretty())?;
+    }
+    Ok(RunSummary { build, result_json })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::Spec;
+
+    #[test]
+    fn full_run_writes_result() {
+        let dir = std::env::temp_dir().join(format!("coord_{}", std::process::id()));
+        let cfg = RunConfig {
+            model: "SK8".into(),
+            spec: Spec::ultra96_object_detection(),
+            n2: 2,
+            n_opt: 1,
+            out_dir: Some(dir.to_string_lossy().into_owned()),
+            rtl_out: Some(dir.join("rtl").to_string_lossy().into_owned()),
+        };
+        let s = run(&cfg).unwrap();
+        assert!(s.build.evaluated > 0);
+        assert!(dir.join("result.json").exists());
+        if !s.build.survivors.is_empty() {
+            assert!(dir.join("rtl/design_0/top.v").exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let cfg = RunConfig {
+            model: "not_a_model".into(),
+            spec: Spec::ultra96_object_detection(),
+            n2: 1,
+            n_opt: 1,
+            out_dir: None,
+            rtl_out: None,
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! A small fixed-size worker pool over `std::sync::mpsc` for the
+//! embarrassingly-parallel parts of the flow (stage-1 sweeps, per-model
+//! experiment loops). Built from scratch — the offline registry has no
+//! rayon/tokio — and kept deliberately simple: submit `FnOnce` jobs,
+//! collect results in completion order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Pool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("dse-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().expect("pool lock").recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped → shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    /// Pool sized to the machine (cores, min 1, max 8).
+    pub fn default_size() -> Pool {
+        let n = thread::available_parallelism().map(|v| v.get()).unwrap_or(1).clamp(1, 8);
+        Pool::new(n)
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().expect("pool alive").send(Box::new(f)).expect("pool send");
+    }
+
+    /// Map `items` through `f` in parallel, preserving input order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let n = items.len();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("pool result");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("all jobs completed")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let p = Pool::new(4);
+        let out = p.map((0..100).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run() {
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        {
+            let p = Pool::new(3);
+            for _ in 0..50 {
+                p.submit(|| {
+                    COUNT.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            drop(p); // joins workers
+        }
+        assert_eq!(COUNT.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn pool_of_one_works() {
+        let p = Pool::new(1);
+        assert_eq!(p.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+}

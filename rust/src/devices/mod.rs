@@ -1,0 +1,99 @@
+//! Virtual measured devices — the reproduction's stand-ins for the paper's
+//! physical testbeds (Ultra96 FPGA, Edge TPU, Jetson TX2, the published
+//! Eyeriss/ShiDianNao numbers, and the Pixel2 XL baseline).
+//!
+//! Each device exposes two views:
+//!
+//! * [`Device::predict`] — what the Chip Predictor computes: the clean
+//!   analytical/simulated model built from unit parameters (paper §5).
+//! * [`Device::measure`] — the "real measurement": the same physics plus
+//!   the secondary effects the predictor's simplified models deliberately
+//!   omit (DRAM contention/refresh, PnR clock derate, CPU fallback for
+//!   unsupported ops, kernel-launch overheads, DVFS ripple) plus a small
+//!   stochastic measurement noise.
+//!
+//! The predictor never sees the secondary-effect terms, so the <10 %
+//! prediction-error claim is earned by the *structure* of the models, not
+//! baked in — the same way the paper's predictor earns it against silicon.
+//! Effect magnitudes are documented per device module and in DESIGN.md.
+
+pub mod asic_refs;
+pub mod edge;
+pub mod ultra96;
+
+use crate::dnn::Model;
+use crate::util::rng::Rng;
+
+/// One energy/latency observation for a model on a device.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Measurement {
+    pub energy_uj: f64,
+    pub latency_ms: f64,
+}
+
+impl Measurement {
+    /// Energy efficiency in inferences per joule (Fig. 13's y-axis).
+    pub fn inf_per_joule(&self) -> f64 {
+        if self.energy_uj <= 0.0 {
+            return 0.0;
+        }
+        1.0e6 / self.energy_uj
+    }
+}
+
+/// A benchmarkable platform.
+pub trait Device {
+    fn name(&self) -> &'static str;
+    /// Chip-Predictor view (clean analytical model).
+    fn predict(&self, m: &Model) -> Measurement;
+    /// "Real-device" view (secondary effects + measurement noise).
+    fn measure(&self, m: &Model, rng: &mut Rng) -> Measurement;
+}
+
+/// The three edge platforms of the paper's Fig. 8/10 validation.
+pub fn edge_devices() -> Vec<Box<dyn Device>> {
+    vec![
+        Box::new(ultra96::Ultra96::default()),
+        Box::new(edge::EdgeTpu::default()),
+        Box::new(edge::JetsonTx2::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    #[test]
+    fn prediction_error_under_10pct_for_all_models_and_devices() {
+        // The headline Fig. 8/10 property, asserted as a test.
+        let mut rng = Rng::new(0xF18);
+        for dev in edge_devices() {
+            for m in zoo::compact15() {
+                let p = dev.predict(&m);
+                let g = dev.measure(&m, &mut rng);
+                let e_err = (p.energy_uj - g.energy_uj).abs() / g.energy_uj * 100.0;
+                let l_err = (p.latency_ms - g.latency_ms).abs() / g.latency_ms * 100.0;
+                assert!(
+                    e_err < 10.0,
+                    "{} on {}: energy err {e_err:.1}% (pred {} vs meas {})",
+                    m.name,
+                    dev.name(),
+                    p.energy_uj,
+                    g.energy_uj
+                );
+                assert!(l_err < 10.0, "{} on {}: latency err {l_err:.1}%", m.name, dev.name());
+            }
+        }
+    }
+
+    #[test]
+    fn measurements_are_reproducible_per_seed() {
+        let dev = edge::EdgeTpu::default();
+        let m = zoo::compact15().remove(0);
+        let a = dev.measure(&m, &mut Rng::new(7));
+        let b = dev.measure(&m, &mut Rng::new(7));
+        assert_eq!(a.energy_uj, b.energy_uj);
+        assert_eq!(a.latency_ms, b.latency_ms);
+    }
+}

@@ -1,0 +1,301 @@
+//! Layer-level IR: operator kinds, tensor shapes, shape inference and
+//! per-layer workload (MAC / parameter / activation) accounting.
+
+use anyhow::{bail, Result};
+
+/// Shape of an activation tensor in CHW order (batch is always 1 — the
+/// paper's accelerators are latency-oriented edge designs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        TensorShape { c, h, w }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// Pooling flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Supported operator kinds — the set the paper's DNN parser extracts
+/// (CONV, Pooling, ReLU, Reorg, Concat, Add, ... — §6 Step I).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard convolution. `groups == 1` is dense; `groups == in_c` is
+    /// depthwise (DW_CONV in the paper's Fig. 4(b) template).
+    Conv {
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        /// Fused bias add (costs one extra add per output, modeled in MACs).
+        bias: bool,
+    },
+    /// Fully connected layer.
+    Fc { out_features: usize, bias: bool },
+    Pool { kind: PoolKind, k: usize, stride: usize },
+    GlobalAvgPool,
+    ReLU,
+    /// ReLU6, used by MobileNetV2.
+    ReLU6,
+    /// Inference-time batch-norm (folded scale+shift; 2 ops/element).
+    BatchNorm,
+    /// Element-wise residual add with another layer's output.
+    Add { with: usize },
+    /// Channel concatenation with other layers' outputs.
+    Concat { with: Vec<usize> },
+    /// Space-to-depth reorganisation (SkyNet's `Reorg`, stride 2:
+    /// C×H×W → 4C×H/2×W/2).
+    Reorg { stride: usize },
+    /// Nearest-neighbour upsample.
+    Upsample { factor: usize },
+}
+
+impl LayerKind {
+    /// Short mnemonic used in graphs, RTL names and reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            LayerKind::Conv { groups, k, .. } => {
+                if *groups > 1 {
+                    "dwconv"
+                } else if *k == 1 {
+                    "conv1x1"
+                } else {
+                    "conv"
+                }
+            }
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::Pool { .. } => "pool",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::ReLU => "relu",
+            LayerKind::ReLU6 => "relu6",
+            LayerKind::BatchNorm => "bn",
+            LayerKind::Add { .. } => "add",
+            LayerKind::Concat { .. } => "concat",
+            LayerKind::Reorg { .. } => "reorg",
+            LayerKind::Upsample { .. } => "upsample",
+        }
+    }
+
+    /// Whether the op runs on the accelerator's MAC array (vs. data
+    /// movement / elementwise logic).
+    pub fn is_compute(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+}
+
+/// One layer: a kind plus the indices of its producer layers.
+/// `inputs` is empty for the first layer (it reads the model input);
+/// side inputs of `Add`/`Concat` are carried in the kind itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Index of the main producer layer; `None` reads the model input.
+    pub input: Option<usize>,
+}
+
+impl Layer {
+    pub fn new(name: &str, kind: LayerKind, input: Option<usize>) -> Self {
+        Layer { name: name.to_string(), kind, input }
+    }
+}
+
+/// Convolution output spatial size with padding.
+fn conv_out(dim: usize, k: usize, stride: usize, pad: usize) -> Result<usize> {
+    let padded = dim + 2 * pad;
+    if padded < k {
+        bail!("kernel {k} larger than padded input {padded}");
+    }
+    Ok((padded - k) / stride + 1)
+}
+
+/// Infer the output shape of `kind` given input shape(s).
+/// `side_shapes` carries the shapes of `Add`/`Concat` side inputs.
+pub fn infer_shape(
+    kind: &LayerKind,
+    input: TensorShape,
+    side_shapes: &[TensorShape],
+) -> Result<TensorShape> {
+    Ok(match kind {
+        LayerKind::Conv { out_c, k, stride, pad, groups, .. } => {
+            if input.c % groups != 0 || out_c % groups != 0 {
+                bail!("groups {groups} does not divide channels {}→{out_c}", input.c);
+            }
+            TensorShape::new(
+                *out_c,
+                conv_out(input.h, *k, *stride, *pad)?,
+                conv_out(input.w, *k, *stride, *pad)?,
+            )
+        }
+        LayerKind::Fc { out_features, .. } => TensorShape::new(*out_features, 1, 1),
+        LayerKind::Pool { k, stride, .. } => TensorShape::new(
+            input.c,
+            conv_out(input.h, *k, *stride, 0)?,
+            conv_out(input.w, *k, *stride, 0)?,
+        ),
+        LayerKind::GlobalAvgPool => TensorShape::new(input.c, 1, 1),
+        LayerKind::ReLU | LayerKind::ReLU6 | LayerKind::BatchNorm => input,
+        LayerKind::Add { .. } => {
+            let side = side_shapes
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("Add missing side input"))?;
+            if *side != input {
+                bail!("Add shape mismatch: {input:?} vs {side:?}");
+            }
+            input
+        }
+        LayerKind::Concat { .. } => {
+            let mut c = input.c;
+            for s in side_shapes {
+                if s.h != input.h || s.w != input.w {
+                    bail!("Concat spatial mismatch: {input:?} vs {s:?}");
+                }
+                c += s.c;
+            }
+            TensorShape::new(c, input.h, input.w)
+        }
+        LayerKind::Reorg { stride } => {
+            if input.h % stride != 0 || input.w % stride != 0 {
+                bail!("Reorg stride {stride} does not divide {input:?}");
+            }
+            TensorShape::new(input.c * stride * stride, input.h / stride, input.w / stride)
+        }
+        LayerKind::Upsample { factor } => {
+            TensorShape::new(input.c, input.h * factor, input.w * factor)
+        }
+    })
+}
+
+/// MAC count for a layer (multiply-accumulates; elementwise ops are counted
+/// as ops on the vector unit, reported separately).
+pub fn macs(kind: &LayerKind, input: TensorShape, output: TensorShape) -> u64 {
+    match kind {
+        LayerKind::Conv { k, groups, bias, .. } => {
+            let per_out = (input.c / groups) * k * k;
+            let mut m = output.numel() as u64 * per_out as u64;
+            if *bias {
+                m += output.numel() as u64;
+            }
+            m
+        }
+        LayerKind::Fc { out_features, bias } => {
+            let mut m = (input.numel() * out_features) as u64;
+            if *bias {
+                m += *out_features as u64;
+            }
+            m
+        }
+        _ => 0,
+    }
+}
+
+/// Elementwise / data-movement op count (vector-unit work).
+pub fn vector_ops(kind: &LayerKind, input: TensorShape, output: TensorShape) -> u64 {
+    match kind {
+        LayerKind::Pool { k, .. } => output.numel() as u64 * (*k * *k) as u64,
+        LayerKind::GlobalAvgPool => input.numel() as u64,
+        LayerKind::ReLU | LayerKind::ReLU6 => output.numel() as u64,
+        LayerKind::BatchNorm => 2 * output.numel() as u64,
+        LayerKind::Add { .. } => output.numel() as u64,
+        LayerKind::Concat { .. } | LayerKind::Reorg { .. } | LayerKind::Upsample { .. } => {
+            output.numel() as u64
+        }
+        _ => 0,
+    }
+}
+
+/// Weight parameter count.
+pub fn params(kind: &LayerKind, input: TensorShape) -> u64 {
+    match kind {
+        LayerKind::Conv { out_c, k, groups, bias, .. } => {
+            let w = (out_c * (input.c / groups) * k * k) as u64;
+            w + if *bias { *out_c as u64 } else { 0 }
+        }
+        LayerKind::Fc { out_features, bias } => {
+            (input.numel() * out_features) as u64 + if *bias { *out_features as u64 } else { 0 }
+        }
+        LayerKind::BatchNorm => 2 * input.c as u64,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let k = LayerKind::Conv { out_c: 64, k: 3, stride: 1, pad: 1, groups: 1, bias: false };
+        let i = TensorShape::new(32, 16, 16);
+        let o = infer_shape(&k, i, &[]).unwrap();
+        assert_eq!(o, TensorShape::new(64, 16, 16));
+        assert_eq!(macs(&k, i, o), 64 * 16 * 16 * 32 * 9);
+        assert_eq!(params(&k, i), 64 * 32 * 9);
+    }
+
+    #[test]
+    fn depthwise_conv() {
+        let k = LayerKind::Conv { out_c: 32, k: 3, stride: 2, pad: 1, groups: 32, bias: false };
+        let i = TensorShape::new(32, 16, 16);
+        let o = infer_shape(&k, i, &[]).unwrap();
+        assert_eq!(o, TensorShape::new(32, 8, 8));
+        assert_eq!(macs(&k, i, o), 32 * 8 * 8 * 9);
+        assert_eq!(params(&k, i), 32 * 9);
+    }
+
+    #[test]
+    fn pool_fc_gap() {
+        let i = TensorShape::new(8, 8, 8);
+        let p = LayerKind::Pool { kind: PoolKind::Max, k: 2, stride: 2 };
+        assert_eq!(infer_shape(&p, i, &[]).unwrap(), TensorShape::new(8, 4, 4));
+        let f = LayerKind::Fc { out_features: 10, bias: true };
+        assert_eq!(infer_shape(&f, i, &[]).unwrap(), TensorShape::new(10, 1, 1));
+        assert_eq!(macs(&f, i, TensorShape::new(10, 1, 1)), (8 * 8 * 8 * 10 + 10) as u64);
+        assert_eq!(infer_shape(&LayerKind::GlobalAvgPool, i, &[]).unwrap().numel(), 8);
+    }
+
+    #[test]
+    fn reorg_and_concat() {
+        let i = TensorShape::new(4, 8, 8);
+        let r = LayerKind::Reorg { stride: 2 };
+        assert_eq!(infer_shape(&r, i, &[]).unwrap(), TensorShape::new(16, 4, 4));
+        let c = LayerKind::Concat { with: vec![0] };
+        let o = infer_shape(&c, i, &[TensorShape::new(6, 8, 8)]).unwrap();
+        assert_eq!(o.c, 10);
+    }
+
+    #[test]
+    fn add_shape_mismatch_rejected() {
+        let i = TensorShape::new(4, 8, 8);
+        let a = LayerKind::Add { with: 0 };
+        assert!(infer_shape(&a, i, &[TensorShape::new(4, 4, 4)]).is_err());
+        assert!(infer_shape(&a, i, &[i]).is_ok());
+    }
+
+    #[test]
+    fn invalid_kernel_rejected() {
+        let k = LayerKind::Conv { out_c: 1, k: 9, stride: 1, pad: 0, groups: 1, bias: false };
+        assert!(infer_shape(&k, TensorShape::new(1, 4, 4), &[]).is_err());
+    }
+
+    #[test]
+    fn groups_must_divide() {
+        let k = LayerKind::Conv { out_c: 6, k: 1, stride: 1, pad: 0, groups: 4, bias: false };
+        assert!(infer_shape(&k, TensorShape::new(8, 4, 4), &[]).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! DNN intermediate representation and model zoo.
+//!
+//! The Chip Builder's Step I (paper §6) parses a DNN from a machine-learning
+//! framework into layer types, feature-map inter-connections and tensor
+//! shapes. This module is that substrate: a layer IR with shape inference
+//! ([`layer`]), a model container with validation and workload accounting
+//! ([`model`]), the paper's benchmark networks (Tables 4–5, AlexNet, the
+//! ShiDianNao small nets) built programmatically ([`zoo`]), and a JSON
+//! import/export of the framework-export format ([`parser`]).
+
+pub mod layer;
+pub mod model;
+pub mod parser;
+pub mod zoo;
+
+pub use layer::{Layer, LayerKind, PoolKind, TensorShape};
+pub use model::{LayerStats, Model, ModelStats};

@@ -1,0 +1,211 @@
+//! Model container: an ordered DAG of layers with validation, shape
+//! inference and whole-network workload statistics.
+
+use anyhow::{bail, Context, Result};
+
+use super::layer::{self, Layer, LayerKind, TensorShape};
+
+/// A DNN model: an input shape plus a topologically-ordered layer list.
+/// Layer `i` may only reference producers `< i`.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub input: TensorShape,
+    pub layers: Vec<Layer>,
+    /// Weight/activation bit precision `<W, A>` (paper Table 3).
+    pub w_bits: usize,
+    pub a_bits: usize,
+}
+
+/// Per-layer workload statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerStats {
+    pub in_shape: TensorShape,
+    pub out_shape: TensorShape,
+    pub macs: u64,
+    pub vector_ops: u64,
+    pub params: u64,
+    /// Input activation traffic in bits (main + side inputs).
+    pub in_act_bits: u64,
+    pub out_act_bits: u64,
+    pub weight_bits: u64,
+}
+
+/// Whole-model statistics.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub per_layer: Vec<LayerStats>,
+    pub total_macs: u64,
+    pub total_params: u64,
+    pub model_size_bytes: u64,
+    pub peak_act_bits: u64,
+}
+
+impl Model {
+    pub fn new(name: &str, input: TensorShape, w_bits: usize, a_bits: usize) -> Self {
+        Model { name: name.to_string(), input, layers: Vec::new(), w_bits, a_bits }
+    }
+
+    /// Append a layer consuming the previous layer's output (or the model
+    /// input for the first layer). Returns its index.
+    pub fn push(&mut self, name: &str, kind: LayerKind) -> usize {
+        let input = if self.layers.is_empty() { None } else { Some(self.layers.len() - 1) };
+        self.layers.push(Layer::new(name, kind, input));
+        self.layers.len() - 1
+    }
+
+    /// Append a layer consuming a specific producer's output.
+    pub fn push_from(&mut self, name: &str, kind: LayerKind, from: usize) -> usize {
+        self.layers.push(Layer::new(name, kind, Some(from)));
+        self.layers.len() - 1
+    }
+
+    /// Side-input producer indices (Add / Concat) of layer `i`.
+    pub fn side_inputs(&self, i: usize) -> Vec<usize> {
+        match &self.layers[i].kind {
+            LayerKind::Add { with } => vec![*with],
+            LayerKind::Concat { with } => with.clone(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// All producer indices of layer `i` (main + side).
+    pub fn producers(&self, i: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = self.layers[i].input.into_iter().collect();
+        p.extend(self.side_inputs(i));
+        p
+    }
+
+    /// Validate the DAG: topological ordering, in-range references, and
+    /// shape-inference success for every layer. Returns per-layer shapes.
+    pub fn infer_shapes(&self) -> Result<Vec<TensorShape>> {
+        let mut shapes: Vec<TensorShape> = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            for &p in &self.producers(i) {
+                if p >= i {
+                    bail!("layer {i} ({}) references non-topological producer {p}", l.name);
+                }
+            }
+            let in_shape = match l.input {
+                None => self.input,
+                Some(p) => shapes[p],
+            };
+            let side: Vec<TensorShape> = self.side_inputs(i).iter().map(|&p| shapes[p]).collect();
+            let out = layer::infer_shape(&l.kind, in_shape, &side)
+                .with_context(|| format!("layer {i} ({})", l.name))?;
+            shapes.push(out);
+        }
+        Ok(shapes)
+    }
+
+    /// Input shape of layer `i` given inferred shapes.
+    pub fn layer_input_shape(&self, i: usize, shapes: &[TensorShape]) -> TensorShape {
+        match self.layers[i].input {
+            None => self.input,
+            Some(p) => shapes[p],
+        }
+    }
+
+    /// Compute full workload statistics (validates the model first).
+    pub fn stats(&self) -> Result<ModelStats> {
+        let shapes = self.infer_shapes()?;
+        let mut per_layer = Vec::with_capacity(self.layers.len());
+        let mut total_macs = 0u64;
+        let mut total_params = 0u64;
+        let mut peak_act_bits = (self.input.numel() * self.a_bits) as u64;
+        for (i, l) in self.layers.iter().enumerate() {
+            let in_shape = self.layer_input_shape(i, &shapes);
+            let out_shape = shapes[i];
+            let macs = layer::macs(&l.kind, in_shape, out_shape);
+            let vector_ops = layer::vector_ops(&l.kind, in_shape, out_shape);
+            let params = layer::params(&l.kind, in_shape);
+            let side_elems: usize =
+                self.side_inputs(i).iter().map(|&p| shapes[p].numel()).sum();
+            let in_act_bits = ((in_shape.numel() + side_elems) * self.a_bits) as u64;
+            let out_act_bits = (out_shape.numel() * self.a_bits) as u64;
+            total_macs += macs;
+            total_params += params;
+            peak_act_bits = peak_act_bits.max(in_act_bits + out_act_bits);
+            per_layer.push(LayerStats {
+                in_shape,
+                out_shape,
+                macs,
+                vector_ops,
+                params,
+                in_act_bits,
+                out_act_bits,
+                weight_bits: params * self.w_bits as u64,
+            });
+        }
+        Ok(ModelStats {
+            per_layer,
+            total_macs,
+            total_params,
+            model_size_bytes: total_params * self.w_bits as u64 / 8,
+            peak_act_bits,
+        })
+    }
+
+    /// Number of layers that run on the MAC array.
+    pub fn compute_layer_count(&self) -> usize {
+        self.layers.iter().filter(|l| l.kind.is_compute()).count()
+    }
+}
+
+impl ModelStats {
+    /// Model size in MB (as reported in paper Table 4).
+    pub fn size_mb(&self) -> f64 {
+        self.model_size_bytes as f64 / 1.0e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::PoolKind;
+
+    fn tiny() -> Model {
+        let mut m = Model::new("tiny", TensorShape::new(3, 8, 8), 8, 8);
+        m.push("c1", LayerKind::Conv { out_c: 4, k: 3, stride: 1, pad: 1, groups: 1, bias: false });
+        m.push("r1", LayerKind::ReLU);
+        m.push("p1", LayerKind::Pool { kind: PoolKind::Max, k: 2, stride: 2 });
+        m.push("fc", LayerKind::Fc { out_features: 10, bias: true });
+        m
+    }
+
+    #[test]
+    fn shapes_and_stats() {
+        let m = tiny();
+        let shapes = m.infer_shapes().unwrap();
+        assert_eq!(shapes[0], TensorShape::new(4, 8, 8));
+        assert_eq!(shapes[2], TensorShape::new(4, 4, 4));
+        assert_eq!(shapes[3], TensorShape::new(10, 1, 1));
+        let s = m.stats().unwrap();
+        assert_eq!(s.per_layer.len(), 4);
+        assert_eq!(s.total_macs, (4 * 8 * 8 * 3 * 9) as u64 + (4 * 4 * 4 * 10 + 10) as u64);
+        assert_eq!(s.total_params, (4 * 3 * 9) as u64 + (4 * 4 * 4 * 10 + 10) as u64);
+    }
+
+    #[test]
+    fn residual_add_validates() {
+        let mut m = Model::new("res", TensorShape::new(4, 8, 8), 8, 8);
+        let a = m.push("c1", LayerKind::Conv { out_c: 4, k: 3, stride: 1, pad: 1, groups: 1, bias: false });
+        m.push("c2", LayerKind::Conv { out_c: 4, k: 3, stride: 1, pad: 1, groups: 1, bias: false });
+        m.push("add", LayerKind::Add { with: a });
+        assert!(m.infer_shapes().is_ok());
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut m = Model::new("bad", TensorShape::new(4, 8, 8), 8, 8);
+        m.push("add", LayerKind::Add { with: 5 });
+        assert!(m.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn size_mb_uses_w_bits() {
+        let m = tiny();
+        let s = m.stats().unwrap();
+        assert_eq!(s.model_size_bytes, s.total_params); // 8-bit weights
+    }
+}

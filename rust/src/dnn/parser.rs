@@ -1,0 +1,222 @@
+//! Framework-export JSON format: import/export of [`Model`].
+//!
+//! This is the reproduction's stand-in for the paper's "DNN parser" that
+//! ingests PyTorch/TensorFlow models (§6 Step I): a framework-side script
+//! exports `{name, input, precision, layers:[{name,type,...,input}]}` and
+//! this module parses it into the IR. Export is provided too so the zoo can
+//! be serialized for the python layer (the L2 JAX model reads the same
+//! format to build its forward pass).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::layer::{Layer, LayerKind, PoolKind, TensorShape};
+use super::model::Model;
+use crate::util::json::{obj, Json};
+
+/// Serialize a model to the framework-export JSON format.
+pub fn to_json(m: &Model) -> Json {
+    let layers: Vec<Json> = m
+        .layers
+        .iter()
+        .map(|l| {
+            let mut fields: Vec<(&str, Json)> = vec![("name", l.name.as_str().into())];
+            match &l.kind {
+                LayerKind::Conv { out_c, k, stride, pad, groups, bias } => {
+                    fields.push(("type", "conv".into()));
+                    fields.push(("out_c", (*out_c).into()));
+                    fields.push(("k", (*k).into()));
+                    fields.push(("stride", (*stride).into()));
+                    fields.push(("pad", (*pad).into()));
+                    fields.push(("groups", (*groups).into()));
+                    fields.push(("bias", (*bias).into()));
+                }
+                LayerKind::Fc { out_features, bias } => {
+                    fields.push(("type", "fc".into()));
+                    fields.push(("out_features", (*out_features).into()));
+                    fields.push(("bias", (*bias).into()));
+                }
+                LayerKind::Pool { kind, k, stride } => {
+                    fields.push(("type", "pool".into()));
+                    fields.push((
+                        "pool",
+                        match kind {
+                            PoolKind::Max => "max".into(),
+                            PoolKind::Avg => "avg".into(),
+                        },
+                    ));
+                    fields.push(("k", (*k).into()));
+                    fields.push(("stride", (*stride).into()));
+                }
+                LayerKind::GlobalAvgPool => fields.push(("type", "gap".into())),
+                LayerKind::ReLU => fields.push(("type", "relu".into())),
+                LayerKind::ReLU6 => fields.push(("type", "relu6".into())),
+                LayerKind::BatchNorm => fields.push(("type", "bn".into())),
+                LayerKind::Add { with } => {
+                    fields.push(("type", "add".into()));
+                    fields.push(("with", (*with).into()));
+                }
+                LayerKind::Concat { with } => {
+                    fields.push(("type", "concat".into()));
+                    fields.push(("with", Json::Arr(with.iter().map(|&w| w.into()).collect())));
+                }
+                LayerKind::Reorg { stride } => {
+                    fields.push(("type", "reorg".into()));
+                    fields.push(("stride", (*stride).into()));
+                }
+                LayerKind::Upsample { factor } => {
+                    fields.push(("type", "upsample".into()));
+                    fields.push(("factor", (*factor).into()));
+                }
+            }
+            if let Some(i) = l.input {
+                fields.push(("input", i.into()));
+            }
+            obj(fields)
+        })
+        .collect();
+    obj(vec![
+        ("name", m.name.as_str().into()),
+        ("input", Json::Arr(vec![m.input.c.into(), m.input.h.into(), m.input.w.into()])),
+        ("w_bits", m.w_bits.into()),
+        ("a_bits", m.a_bits.into()),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+fn need_usize(o: &BTreeMap<String, Json>, key: &str) -> Result<usize> {
+    o.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("missing/invalid field '{key}'"))
+}
+
+/// Parse the framework-export JSON format into a [`Model`]; validates
+/// shapes before returning.
+pub fn from_json(j: &Json) -> Result<Model> {
+    let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("model").to_string();
+    let input = j.get("input").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("missing input"))?;
+    if input.len() != 3 {
+        bail!("input must be [c, h, w]");
+    }
+    let shape = TensorShape::new(
+        input[0].as_usize().ok_or_else(|| anyhow!("bad input c"))?,
+        input[1].as_usize().ok_or_else(|| anyhow!("bad input h"))?,
+        input[2].as_usize().ok_or_else(|| anyhow!("bad input w"))?,
+    );
+    let w_bits = j.get("w_bits").and_then(|v| v.as_usize()).unwrap_or(16);
+    let a_bits = j.get("a_bits").and_then(|v| v.as_usize()).unwrap_or(16);
+    let mut m = Model::new(&name, shape, w_bits, a_bits);
+
+    let layers = j.get("layers").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("missing layers"))?;
+    for (i, lj) in layers.iter().enumerate() {
+        let o = lj.as_obj().ok_or_else(|| anyhow!("layer {i} not an object"))?;
+        let lname =
+            o.get("name").and_then(|v| v.as_str()).map(|s| s.to_string()).unwrap_or(format!("l{i}"));
+        let ty = o.get("type").and_then(|v| v.as_str()).ok_or_else(|| anyhow!("layer {i}: no type"))?;
+        let kind = match ty {
+            "conv" => LayerKind::Conv {
+                out_c: need_usize(o, "out_c").with_context(|| format!("layer {i}"))?,
+                k: need_usize(o, "k")?,
+                stride: o.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+                pad: o.get("pad").and_then(|v| v.as_usize()).unwrap_or(0),
+                groups: o.get("groups").and_then(|v| v.as_usize()).unwrap_or(1),
+                bias: o.get("bias").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            "fc" => LayerKind::Fc {
+                out_features: need_usize(o, "out_features")?,
+                bias: o.get("bias").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            "pool" => LayerKind::Pool {
+                kind: match o.get("pool").and_then(|v| v.as_str()).unwrap_or("max") {
+                    "avg" => PoolKind::Avg,
+                    _ => PoolKind::Max,
+                },
+                k: need_usize(o, "k")?,
+                stride: o.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+            },
+            "gap" => LayerKind::GlobalAvgPool,
+            "relu" => LayerKind::ReLU,
+            "relu6" => LayerKind::ReLU6,
+            "bn" => LayerKind::BatchNorm,
+            "add" => LayerKind::Add { with: need_usize(o, "with")? },
+            "concat" => LayerKind::Concat {
+                with: o
+                    .get("with")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("layer {i}: concat needs 'with'"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad concat index")))
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            "reorg" => LayerKind::Reorg { stride: need_usize(o, "stride")? },
+            "upsample" => LayerKind::Upsample { factor: need_usize(o, "factor")? },
+            other => bail!("layer {i}: unknown type '{other}'"),
+        };
+        let input_idx = o.get("input").and_then(|v| v.as_usize());
+        let default_input = if i == 0 { None } else { Some(i - 1) };
+        m.layers.push(Layer { name: lname, kind, input: input_idx.or(default_input) });
+    }
+    m.infer_shapes().context("model failed shape validation")?;
+    Ok(m)
+}
+
+/// Parse from a JSON string.
+pub fn parse_str(text: &str) -> Result<Model> {
+    let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    from_json(&j)
+}
+
+/// Load a model from a `.json` file.
+pub fn load_file(path: &std::path::Path) -> Result<Model> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    parse_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for m in zoo::compact15().into_iter().chain([zoo::alexnet()]) {
+            let j = to_json(&m);
+            let back = from_json(&j).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert_eq!(back.name, m.name);
+            assert_eq!(back.layers, m.layers, "{}", m.name);
+            assert_eq!(back.input, m.input);
+            assert_eq!(
+                back.stats().unwrap().total_macs,
+                m.stats().unwrap().total_macs
+            );
+        }
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let m = parse_str(
+            r#"{"name":"t","input":[1,8,8],"layers":[
+                {"name":"c","type":"conv","out_c":2,"k":3,"pad":1},
+                {"name":"r","type":"relu"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.infer_shapes().unwrap()[1], TensorShape::new(2, 8, 8));
+    }
+
+    #[test]
+    fn bad_type_rejected() {
+        assert!(parse_str(r#"{"name":"t","input":[1,8,8],"layers":[{"type":"warp"}]}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_shapes_rejected_at_parse() {
+        // 9x9 kernel on 4x4 input must fail validation.
+        assert!(parse_str(
+            r#"{"name":"t","input":[1,4,4],"layers":[{"type":"conv","out_c":1,"k":9}]}"#
+        )
+        .is_err());
+    }
+}

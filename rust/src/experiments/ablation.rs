@@ -1,0 +1,130 @@
+//! Ablation studies for the design choices DESIGN.md calls out (not a
+//! paper artifact; run with `exp ablation`):
+//!
+//! 1. **Inter-IP pipeline depth** (Fig. 5(b) → (c)): latency and
+//!    bottleneck idle cycles vs the pipeline knob, SkyNet on Ultra96.
+//! 2. **PE micro-architecture** (Forwarding vs Direct): energy breakdown
+//!    on the ShiDianNao template across the Fig. 15 networks.
+//! 3. **Buffer sizing**: SRAM access energy vs capacity (the √-scaling
+//!    lever behind Fig. 15).
+
+use anyhow::Result;
+
+use crate::dnn::zoo;
+use crate::predictor::{predict_coarse, simulate};
+use crate::templates::{HwConfig, PeStyle, TemplateId};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::ExpReport;
+
+pub fn run() -> Result<ExpReport> {
+    let mut text = String::new();
+    let mut json_parts: Vec<(&str, Json)> = Vec::new();
+
+    // --- 1. pipeline-depth sweep ---------------------------------------
+    let m = zoo::by_name("SK").unwrap();
+    let mut t = Table::new(
+        "Ablation 1 — inter-IP pipeline depth (SkyNet, hetero, Ultra96)",
+        &["pipeline", "fine latency (ms)", "coarse latency (ms)", "overlap gain %", "total idle cycles"],
+    );
+    let mut rows = Vec::new();
+    for pipe in [1u64, 2, 4, 8, 16, 32, 64] {
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = pipe;
+        let g = TemplateId::Hetero.build(&m, &cfg)?;
+        let coarse = predict_coarse(&g, &cfg.tech)?;
+        let fine = simulate(&g, 0.0, false)?;
+        let gain = (1.0 - fine.cycles as f64 / coarse.latency_cycles as f64) * 100.0;
+        let idle: u64 = fine.per_node.iter().map(|n| n.idle_cycles).sum();
+        t.row(vec![
+            pipe.to_string(),
+            f(fine.latency_ms, 3),
+            f(coarse.latency_ms, 3),
+            f(gain, 1),
+            idle.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("pipeline", pipe.into()),
+            ("fine_ms", fine.latency_ms.into()),
+            ("gain_pct", gain.into()),
+        ]));
+    }
+    text.push_str(&t.render());
+    json_parts.push(("pipeline_sweep", Json::Arr(rows)));
+
+    // --- 2. PE style ----------------------------------------------------
+    let mut t = Table::new(
+        "Ablation 2 — PE micro-architecture (ShiDianNao template, 64 MACs)",
+        &["network", "forwarding (µJ)", "direct (µJ)", "direct wins?"],
+    );
+    let mut rows = Vec::new();
+    for net in zoo::fig15_networks() {
+        let mut e = [0.0f64; 2];
+        for (i, style) in [PeStyle::Forwarding, PeStyle::Direct].into_iter().enumerate() {
+            let mut cfg = HwConfig::asic_default();
+            cfg.pe_style = style;
+            let g = TemplateId::ShiDianNao.build(&net, &cfg)?;
+            let r = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+            e[i] = r.energy_pj / 1e6;
+        }
+        t.row(vec![
+            net.name.clone(),
+            f(e[0], 2),
+            f(e[1], 2),
+            if e[1] < e[0] { "yes".into() } else { "no".into() },
+        ]);
+        rows.push(obj(vec![
+            ("network", net.name.as_str().into()),
+            ("forwarding_uj", e[0].into()),
+            ("direct_uj", e[1].into()),
+        ]));
+    }
+    text.push_str(&t.render());
+    json_parts.push(("pe_style", Json::Arr(rows)));
+
+    // --- 3. buffer sizing -----------------------------------------------
+    let net = zoo::fig15_networks().remove(2);
+    let mut t = Table::new(
+        "Ablation 3 — SRAM capacity vs dynamic energy (sdn_ocr, shidiannao)",
+        &["act+w SRAM (KB each)", "dynamic energy (µJ)", "latency (ms)"],
+    );
+    let mut rows = Vec::new();
+    for kb in [16u64, 32, 64, 128] {
+        let mut cfg = HwConfig::asic_default();
+        cfg.act_buf_bits = kb * 8 * 1024;
+        cfg.w_buf_bits = kb * 8 * 1024;
+        let g = TemplateId::ShiDianNao.build(&net, &cfg)?;
+        let coarse = predict_coarse(&g, &cfg.tech)?;
+        let fine = simulate(&g, 0.0, false)?;
+        t.row(vec![kb.to_string(), f(coarse.dynamic_pj / 1e6, 3), f(fine.latency_ms, 4)]);
+        rows.push(obj(vec![("kb", kb.into()), ("dynamic_uj", (coarse.dynamic_pj / 1e6).into())]));
+    }
+    text.push_str(&t.render());
+    json_parts.push(("buffer_sizing", Json::Arr(rows)));
+
+    Ok(ExpReport { id: "ablation", text, json: obj(json_parts) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_runs_and_pipeline_monotone() {
+        let r = run().unwrap();
+        let sweep = r.json.get("pipeline_sweep").unwrap().as_arr().unwrap();
+        let first = sweep.first().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
+        let last = sweep.last().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
+        assert!(last <= first, "deeper pipeline should not be slower: {first} → {last}");
+    }
+
+    #[test]
+    fn buffer_energy_monotone_in_capacity() {
+        let r = run().unwrap();
+        let rows = r.json.get("buffer_sizing").unwrap().as_arr().unwrap();
+        let e16 = rows[0].get("dynamic_uj").unwrap().as_f64().unwrap();
+        let e128 = rows.last().unwrap().get("dynamic_uj").unwrap().as_f64().unwrap();
+        assert!(e128 > e16, "bigger SRAM must cost more per access: {e16} vs {e128}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig. 13: AutoDNNchip-generated Ultra96 accelerators vs the Pixel2-XL
+//! mobile CPU (TF-Lite) on the 10 SkyNet variants — latency and energy
+//! efficiency. Paper: average 3.86× latency reduction at similar (<15 %
+//! difference on average) energy efficiency.
+
+use anyhow::Result;
+
+use crate::builder::{build_accelerator_with_grid, Spec, SweepGrid};
+use crate::devices::edge::MobileCpu;
+use crate::devices::Device;
+use crate::dnn::zoo;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{f, Table};
+
+use super::ExpReport;
+
+pub fn run(seed: u64) -> Result<ExpReport> {
+    let spec = Spec::ultra96_object_detection();
+    // "adopt the settings in Table 3 … the same bit precision": <11,9>.
+    let mut grid = SweepGrid::for_backend(&spec.backend);
+    grid.precisions = vec![crate::ip::Precision::new(11, 9)];
+    let cpu = MobileCpu::default();
+    let mut rng = Rng::new(seed);
+
+    let mut t = Table::new(
+        "Fig. 13 — Ultra96 (AutoDNNchip) vs Pixel2 XL on 10 SkyNet variants",
+        &[
+            "model",
+            "ours lat (ms)",
+            "cpu lat (ms)",
+            "lat ratio",
+            "ours inf/J",
+            "cpu inf/J",
+            "eff diff %",
+        ],
+    );
+    let mut rows_json = Vec::new();
+    let mut ratios = Vec::new();
+    let mut eff_diffs = Vec::new();
+    for m in zoo::skynet_variants() {
+        let out = build_accelerator_with_grid(&m, &spec, &grid, 3, 1)?;
+        let Some(best) = out.survivors.first() else {
+            continue;
+        };
+        let ours_lat = best.fine_latency_ms;
+        // Design energy over the fine-simulated run.
+        let ours_e_uj =
+            (best.coarse.dynamic_pj + best.cfg.tech.costs.leakage_mw * ours_lat * 1e6) / 1e6;
+        let cpu_meas = cpu.measure(&m, &mut rng);
+        let ratio = cpu_meas.latency_ms / ours_lat;
+        let ours_eff = 1.0e6 / ours_e_uj;
+        let cpu_eff = cpu_meas.inf_per_joule();
+        let eff_diff = (ours_eff - cpu_eff) / cpu_eff * 100.0;
+        ratios.push(ratio);
+        eff_diffs.push(eff_diff);
+        t.row(vec![
+            m.name.clone(),
+            f(ours_lat, 2),
+            f(cpu_meas.latency_ms, 2),
+            f(ratio, 2),
+            f(ours_eff, 1),
+            f(cpu_eff, 1),
+            f(eff_diff, 1),
+        ]);
+        rows_json.push(obj(vec![
+            ("model", m.name.as_str().into()),
+            ("ours_latency_ms", ours_lat.into()),
+            ("cpu_latency_ms", cpu_meas.latency_ms.into()),
+            ("latency_ratio", ratio.into()),
+            ("ours_inf_per_j", ours_eff.into()),
+            ("cpu_inf_per_j", cpu_eff.into()),
+            ("eff_diff_pct", eff_diff.into()),
+        ]));
+    }
+    let avg_ratio = stats::geomean(&ratios);
+    let avg_eff = stats::mean(&eff_diffs);
+    let mut text = t.render();
+    text.push_str(&format!(
+        "avg latency reduction {avg_ratio:.2}× (paper: 3.86×); avg energy-eff diff {avg_eff:+.1}% (paper: <15%)\n"
+    ));
+    let json = obj(vec![
+        ("rows", Json::Arr(rows_json)),
+        ("avg_latency_ratio", avg_ratio.into()),
+        ("avg_eff_diff_pct", avg_eff.into()),
+    ]);
+    Ok(ExpReport { id: "fig13", text, json })
+}

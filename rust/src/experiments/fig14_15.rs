@@ -1,0 +1,144 @@
+//! Fig. 14 (ASIC design-space scatter by template) and Fig. 15 (normalized
+//! energy vs the ShiDianNao baseline on the 5 shallow networks, same
+//! 1 GHz / 65 nm / 64-MAC / 128-KB-SRAM constraints — paper Table 9).
+//! Paper: improvements range 7.9 % … 58.3 %.
+
+use anyhow::Result;
+
+use crate::builder::{build_accelerator, stage1, Spec, SweepGrid};
+use crate::dnn::zoo;
+use crate::predictor::simulate;
+use crate::templates::{HwConfig, TemplateId};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::ExpReport;
+
+/// Fig. 14: evaluate the full ASIC grid for one representative vision
+/// workload and dump the (latency, energy) cloud tagged by template.
+pub fn fig14() -> Result<ExpReport> {
+    let m = zoo::fig15_networks().remove(0); // face-detection workload
+    let spec = Spec::asic_vision();
+    let grid = SweepGrid::for_backend(&spec.backend);
+    let s1 = stage1(&m, &spec, &grid, 6)?;
+
+    let mut per_template: std::collections::BTreeMap<&str, (usize, f64, f64)> =
+        std::collections::BTreeMap::new();
+    let mut points = Vec::new();
+    for p in &s1.trace {
+        let e = per_template.entry(p.template.name()).or_insert((0, f64::INFINITY, f64::INFINITY));
+        e.0 += 1;
+        if p.feasible && p.energy_uj * p.latency_ms < e.1 * e.2 {
+            e.1 = p.energy_uj;
+            e.2 = p.latency_ms;
+        }
+        points.push(obj(vec![
+            ("template", p.template.name().into()),
+            ("energy_uj", p.energy_uj.into()),
+            ("latency_ms", p.latency_ms.into()),
+            ("feasible", p.feasible.into()),
+        ]));
+    }
+    let mut t = Table::new(
+        "Fig. 14 — ASIC design-space pool by template (best-EDP feasible point)",
+        &["template", "points", "best energy (µJ)", "best latency (ms)"],
+    );
+    for (name, (n, e, l)) in &per_template {
+        t.row(vec![
+            name.to_string(),
+            n.to_string(),
+            if e.is_finite() { f(*e, 2) } else { "-".into() },
+            if l.is_finite() { f(*l, 3) } else { "-".into() },
+        ]);
+    }
+    let mut text = t.render();
+    text.push_str(&format!(
+        "evaluated {} points, {} feasible under the Table-9 ASIC budget\n",
+        s1.evaluated, s1.feasible
+    ));
+    // ASCII rendition of the Fig.-14 scatter: s=systolic, d=shidiannao,
+    // e=eyeriss (feasible points only).
+    let pts: Vec<crate::util::plot::Pt> = s1
+        .trace
+        .iter()
+        .filter(|p| p.feasible)
+        .map(|p| crate::util::plot::Pt {
+            x: p.latency_ms,
+            y: p.energy_uj,
+            glyph: match p.template.name() {
+                "systolic" => 's',
+                "shidiannao" => 'd',
+                _ => 'e',
+            },
+        })
+        .collect();
+    text.push_str(&crate::util::plot::scatter(
+        "Fig. 14 ASIC design pool",
+        "latency (ms)",
+        "energy/image (µJ)",
+        &pts,
+        64,
+        16,
+    ));
+    let json = obj(vec![
+        ("workload", m.name.as_str().into()),
+        ("evaluated", s1.evaluated.into()),
+        ("feasible", s1.feasible.into()),
+        ("points", Json::Arr(points)),
+    ]);
+    Ok(ExpReport { id: "fig14", text, json })
+}
+
+/// ShiDianNao expert baseline: the fixed 64-PE / fully-on-chip design,
+/// un-pipelined, fine-simulated (RTL-simulation stand-in).
+pub fn shidiannao_baseline_energy_uj(m: &crate::dnn::Model) -> Result<f64> {
+    let mut cfg = HwConfig::asic_default();
+    cfg.pipeline = 1;
+    let g = TemplateId::ShiDianNao.build(m, &cfg)?;
+    let r = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+    Ok(r.energy_pj / 1e6)
+}
+
+/// Fig. 15: AutoDNNchip-generated ASIC accelerators vs ShiDianNao.
+pub fn fig15() -> Result<ExpReport> {
+    let spec = Spec::asic_vision();
+    let mut t = Table::new(
+        "Fig. 15 — normalized energy vs ShiDianNao (5 shallow networks)",
+        &["network", "baseline (µJ)", "ours (µJ)", "normalized", "improvement %"],
+    );
+    let mut rows_json = Vec::new();
+    let mut improvements = Vec::new();
+    for m in zoo::fig15_networks() {
+        let base = shidiannao_baseline_energy_uj(&m)?;
+        let out = build_accelerator(&m, &spec, 4, 1)?;
+        let Some(best) = out.survivors.first() else {
+            continue;
+        };
+        let ours =
+            (best.coarse.dynamic_pj + best.cfg.tech.costs.leakage_mw * best.fine_latency_ms * 1e6)
+                / 1e6;
+        let norm = ours / base;
+        let impr = (1.0 - norm) * 100.0;
+        improvements.push(impr);
+        t.row(vec![m.name.clone(), f(base, 2), f(ours, 2), f(norm, 3), f(impr, 1)]);
+        rows_json.push(obj(vec![
+            ("network", m.name.as_str().into()),
+            ("baseline_uj", base.into()),
+            ("ours_uj", ours.into()),
+            ("normalized", norm.into()),
+            ("improvement_pct", impr.into()),
+        ]));
+    }
+    let lo = improvements.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = improvements.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut text = t.render();
+    text.push_str(&format!(
+        "improvement range {lo:.1}% … {hi:.1}% (paper: 7.9% … 58.3%)\n"
+    ));
+    let json = obj(vec![
+        ("rows", Json::Arr(rows_json)),
+        ("min_improvement_pct", lo.into()),
+        ("max_improvement_pct", hi.into()),
+    ]);
+    Ok(ExpReport { id: "fig15", text, json })
+}

@@ -1,0 +1,150 @@
+//! Fig. 8 (energy) and Fig. 10 (latency): Chip-Predictor prediction error
+//! for the 15 compact DNN models (Tables 4–5) across the 3 edge devices
+//! (Ultra96 FPGA, Edge TPU, Jetson TX2).
+//!
+//! Paper targets: max energy error 9.17 % (averages 5.20/6.05/5.40 % for
+//! FPGA/TPU/GPU); max latency error 9.75 % (averages 3.73/6.57/4.85 %).
+
+use anyhow::Result;
+
+use crate::devices::edge_devices;
+use crate::dnn::zoo;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{f, pct, Table};
+
+use super::ExpReport;
+
+struct Row {
+    model: String,
+    device: &'static str,
+    predicted: f64,
+    measured: f64,
+    err_pct: f64,
+}
+
+fn collect(seed: u64, energy: bool) -> Vec<Row> {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for dev in edge_devices() {
+        let mut drng = rng.fork(dev.name());
+        for m in zoo::compact15() {
+            let p = dev.predict(&m);
+            let g = dev.measure(&m, &mut drng);
+            let (pv, gv) =
+                if energy { (p.energy_uj, g.energy_uj) } else { (p.latency_ms, g.latency_ms) };
+            rows.push(Row {
+                model: m.name.clone(),
+                device: dev.name(),
+                predicted: pv,
+                measured: gv,
+                err_pct: stats::rel_err_pct(pv, gv),
+            });
+        }
+    }
+    rows
+}
+
+fn report(id: &'static str, what: &str, unit: &str, paper_max: f64, rows: Vec<Row>) -> ExpReport {
+    let mut t = Table::new(
+        &format!("{id} — {what} prediction error, 15 models × 3 edge devices"),
+        &["model", "device", &format!("predicted ({unit})"), &format!("measured ({unit})"), "error"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            r.device.to_string(),
+            f(r.predicted, 3),
+            f(r.measured, 3),
+            pct(r.err_pct),
+        ]);
+    }
+    let mut text = t.render();
+    let mut summary = Table::new("per-device summary", &["device", "avg |err|", "max |err|", "paper max"]);
+    let mut dev_json = Vec::new();
+    for dev in ["ultra96", "edge_tpu", "jetson_tx2"] {
+        let errs: Vec<f64> = rows.iter().filter(|r| r.device == dev).map(|r| r.err_pct.abs()).collect();
+        let avg = stats::mean(&errs);
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        summary.row(vec![dev.into(), f(avg, 2), f(max, 2), f(paper_max, 2)]);
+        dev_json.push(obj(vec![
+            ("device", dev.into()),
+            ("avg_abs_err_pct", avg.into()),
+            ("max_abs_err_pct", max.into()),
+        ]));
+    }
+    text.push_str(&summary.render());
+    let all_max = rows.iter().map(|r| r.err_pct.abs()).fold(0.0, f64::max);
+    text.push_str(&format!("\noverall max |err| = {all_max:.2}% (paper: {paper_max}%)\n"));
+    let json = obj(vec![
+        ("metric", what.into()),
+        ("overall_max_abs_err_pct", all_max.into()),
+        ("paper_max_abs_err_pct", paper_max.into()),
+        ("per_device", Json::Arr(dev_json)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("model", r.model.as_str().into()),
+                            ("device", r.device.into()),
+                            ("predicted", r.predicted.into()),
+                            ("measured", r.measured.into()),
+                            ("err_pct", r.err_pct.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    ExpReport { id, text, json }
+}
+
+/// Fig. 8: energy prediction error.
+pub fn run_energy(seed: u64) -> Result<ExpReport> {
+    Ok(report("fig8", "energy", "µJ", 9.17, collect(seed, true)))
+}
+
+/// Fig. 10: latency prediction error.
+pub fn run_latency(seed: u64) -> Result<ExpReport> {
+    Ok(report("fig10", "latency", "ms", 9.75, collect(seed, false)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_figures_under_10pct() {
+        for energy in [true, false] {
+            let rows = collect(0xF1, energy);
+            assert_eq!(rows.len(), 45);
+            for r in &rows {
+                assert!(
+                    r.err_pct.abs() < 10.0,
+                    "{} on {}: {:.2}% ({} mode)",
+                    r.model,
+                    r.device,
+                    r.err_pct,
+                    if energy { "energy" } else { "latency" }
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn skynet_bypass_models_cost_more_on_tpu() {
+        // Paper observation: SK..SK4 energy is relatively large on the
+        // Edge TPU because of the CPU fallback.
+        let rows = collect(7, true);
+        let e = |name: &str| {
+            rows.iter().find(|r| r.device == "edge_tpu" && r.model == name).unwrap().measured
+        };
+        // Per-MAC-normalized comparison SK (bypass) vs SK5 (no bypass).
+        let sk = e("SK") / zoo::by_name("SK").unwrap().stats().unwrap().total_macs as f64;
+        let sk5 = e("SK5") / zoo::by_name("SK5").unwrap().stats().unwrap().total_macs as f64;
+        assert!(sk > sk5, "bypass model should cost more per MAC on TPU");
+    }
+}

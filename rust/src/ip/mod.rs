@@ -1,0 +1,15 @@
+//! Hardware IP library: IP classes (computation / memory / data-path), their
+//! attributes (paper Table 2) and technology-based unit energy/latency/area
+//! costs.
+//!
+//! The paper obtains unit parameters from real-device measurement or
+//! synthesized RTL (§7.1 "Unit Parameters"); here they come from calibrated
+//! technology tables ([`tech`]) whose ASIC numbers follow the published
+//! Eyeriss/ShiDianNao energy hierarchy (RF ≪ NoC < SRAM ≪ DRAM) and whose
+//! FPGA numbers follow DSP48E/BRAM18K datasheet-scale costs.
+
+pub mod spec;
+pub mod tech;
+
+pub use spec::{ComputeKind, DataPathKind, IpClass, MemKind, Precision};
+pub use tech::{Technology, UnitCosts};

@@ -1,0 +1,140 @@
+//! IP specifications: the node-level attributes of the one-for-all graph
+//! (paper Table 2 — Impl., Freq., Vol., Prec., Dt., Bw., plus the state
+//! machine which lives in [`crate::graph`]).
+
+/// Bit precision pair `<weights, activations>` (paper Table 1: B_W, B_A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Precision {
+    pub w_bits: usize,
+    pub a_bits: usize,
+}
+
+impl Precision {
+    pub fn new(w_bits: usize, a_bits: usize) -> Self {
+        Precision { w_bits, a_bits }
+    }
+
+    /// Accumulator width: product width plus log2 head-room, rounded to the
+    /// next byte boundary (common accelerator practice).
+    pub fn acc_bits(&self) -> usize {
+        let raw = self.w_bits + self.a_bits + 8;
+        raw.div_ceil(8) * 8
+    }
+}
+
+/// Memory implementation class (Table 2 "Impl." for memory IPs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// Off-chip DRAM (DDR/LPDDR).
+    Dram,
+    /// On-chip SRAM macro (ASIC global buffer).
+    Sram,
+    /// FPGA block RAM (BRAM18K).
+    Bram,
+    /// Register file inside a PE.
+    RegFile,
+}
+
+/// Computation-IP flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeKind {
+    /// Adder-tree MAC bundle (Fig. 4(a) — common FPGA style).
+    AdderTree,
+    /// Systolic-array PE group (Fig. 4(c) — TPU style).
+    Systolic,
+    /// Row-stationary PE (Fig. 4(d) — Eyeriss style).
+    RowStationary,
+    /// Vector/elementwise unit (pooling, activation, shortcut adds).
+    Vector,
+}
+
+/// Data-path-IP flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataPathKind {
+    /// Shared bus (AXI-like).
+    Bus,
+    /// On-chip network link between PEs.
+    Noc,
+    /// Synchronous FIFO between pipeline stages.
+    Fifo,
+}
+
+/// One node's hardware class and sizing attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IpClass {
+    Compute {
+        kind: ComputeKind,
+        /// Unrolling factor U — MACs operating in parallel (paper Eq. 1).
+        unroll: usize,
+        prec: Precision,
+    },
+    Memory {
+        kind: MemKind,
+        /// Capacity in bits (Table 2 "Vol.").
+        volume_bits: u64,
+        /// Port width in bits per cycle.
+        port_bits: usize,
+    },
+    DataPath {
+        kind: DataPathKind,
+        /// Bus/port width in bits per cycle (Table 2 "Bw.").
+        width_bits: usize,
+    },
+}
+
+impl IpClass {
+    pub fn is_compute(&self) -> bool {
+        matches!(self, IpClass::Compute { .. })
+    }
+    pub fn is_memory(&self) -> bool {
+        matches!(self, IpClass::Memory { .. })
+    }
+    pub fn is_datapath(&self) -> bool {
+        matches!(self, IpClass::DataPath { .. })
+    }
+
+    /// Short class tag for reports and RTL module names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            IpClass::Compute { kind, .. } => match kind {
+                ComputeKind::AdderTree => "comp_at",
+                ComputeKind::Systolic => "comp_sys",
+                ComputeKind::RowStationary => "comp_rs",
+                ComputeKind::Vector => "comp_vec",
+            },
+            IpClass::Memory { kind, .. } => match kind {
+                MemKind::Dram => "mem_dram",
+                MemKind::Sram => "mem_sram",
+                MemKind::Bram => "mem_bram",
+                MemKind::RegFile => "mem_rf",
+            },
+            IpClass::DataPath { kind, .. } => match kind {
+                DataPathKind::Bus => "dp_bus",
+                DataPathKind::Noc => "dp_noc",
+                DataPathKind::Fifo => "dp_fifo",
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_bits_rounds_up() {
+        assert_eq!(Precision::new(8, 8).acc_bits(), 24);
+        assert_eq!(Precision::new(11, 9).acc_bits(), 32);
+        assert_eq!(Precision::new(16, 16).acc_bits(), 40);
+    }
+
+    #[test]
+    fn class_predicates() {
+        let c = IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 16, prec: Precision::new(8, 8) };
+        assert!(c.is_compute() && !c.is_memory());
+        assert_eq!(c.tag(), "comp_at");
+        let m = IpClass::Memory { kind: MemKind::Bram, volume_bits: 18 << 10, port_bits: 36 };
+        assert!(m.is_memory());
+        assert_eq!(m.tag(), "mem_bram");
+    }
+}

@@ -1,0 +1,307 @@
+//! Technology-based unit costs (paper §5: "the unit energy/latency costs are
+//! obtained from single-IP RTL implementation or simulations").
+//!
+//! ASIC numbers follow the published Eyeriss energy hierarchy — normalized
+//! to one 16-bit MAC: RF ≈ 1×, inter-PE NoC ≈ 2×, global-buffer SRAM ≈ 6×,
+//! DRAM ≈ 200× — anchored at a 65 nm 16-bit MAC of 2.0 pJ. FPGA numbers are
+//! DSP48E2/BRAM18K-scale costs for the Ultra96's 16 nm ZU3EG. Absolute
+//! joules matter less than the *ratios*, which drive every comparison the
+//! paper makes.
+
+use super::spec::{DataPathKind, MemKind, Precision};
+
+/// Unit energy/latency/area cost table for one technology node.
+#[derive(Debug, Clone)]
+pub struct UnitCosts {
+    /// Energy of one 16×16-bit MAC in pJ; scaled by precision elsewhere.
+    pub mac16_pj: f64,
+    /// Cycles for one MAC stage (pipelined PEs: 1).
+    pub mac_cycles: u64,
+    /// Read energy per bit (pJ) by memory class.
+    pub rf_bit_pj: f64,
+    pub sram_bit_pj: f64,
+    pub bram_bit_pj: f64,
+    pub dram_bit_pj: f64,
+    /// Write energy multiplier vs read.
+    pub write_factor: f64,
+    /// Transfer energy per bit (pJ) by data-path class.
+    pub noc_bit_pj: f64,
+    pub bus_bit_pj: f64,
+    pub fifo_bit_pj: f64,
+    /// Warm-up costs: configure data path, pre-load data (paper e1/l1,
+    /// e3/l2).
+    pub warmup_pj: f64,
+    pub warmup_cycles: u64,
+    /// Run-time control overhead per state (paper e2/e4, l3).
+    pub ctrl_pj_per_state: f64,
+    pub ctrl_cycles_per_state: u64,
+    /// Extra first-word latency for DRAM bursts (row activation etc.).
+    pub dram_setup_cycles: u64,
+    /// Static/leakage power in mW charged against wall-clock latency.
+    pub leakage_mw: f64,
+}
+
+impl UnitCosts {
+    /// MAC energy at a given precision. Multiplier energy scales roughly
+    /// with the product of operand widths; the accumulate part linearly.
+    pub fn e_mac_pj(&self, p: Precision) -> f64 {
+        let mul = 0.75 * self.mac16_pj * (p.w_bits * p.a_bits) as f64 / 256.0;
+        let add = 0.25 * self.mac16_pj * p.acc_bits() as f64 / 40.0;
+        mul + add
+    }
+
+    /// Read energy per bit for a memory class.
+    pub fn e_bit_read_pj(&self, kind: MemKind) -> f64 {
+        match kind {
+            MemKind::RegFile => self.rf_bit_pj,
+            MemKind::Sram => self.sram_bit_pj,
+            MemKind::Bram => self.bram_bit_pj,
+            MemKind::Dram => self.dram_bit_pj,
+        }
+    }
+
+    /// Write energy per bit for a memory class.
+    pub fn e_bit_write_pj(&self, kind: MemKind) -> f64 {
+        self.e_bit_read_pj(kind) * self.write_factor
+    }
+
+    /// Transfer energy per bit for a data-path class.
+    pub fn e_bit_dp_pj(&self, kind: DataPathKind) -> f64 {
+        match kind {
+            DataPathKind::Noc => self.noc_bit_pj,
+            DataPathKind::Bus => self.bus_bit_pj,
+            DataPathKind::Fifo => self.fifo_bit_pj,
+        }
+    }
+}
+
+/// A complete technology target: unit costs + resource/area accounting +
+/// default clock.
+#[derive(Debug, Clone)]
+pub struct Technology {
+    pub name: &'static str,
+    pub default_freq_mhz: f64,
+    pub costs: UnitCosts,
+    /// FPGA resource accounting (None for ASIC technologies).
+    pub fpga: Option<FpgaResources>,
+    /// ASIC area accounting (None for FPGA technologies).
+    pub asic: Option<AsicArea>,
+}
+
+/// FPGA device resource model.
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaResources {
+    pub dsp_total: usize,
+    pub bram18k_total: usize,
+    pub lut_total: usize,
+    pub ff_total: usize,
+}
+
+/// ASIC area model.
+#[derive(Debug, Clone, Copy)]
+pub struct AsicArea {
+    /// Area of one 16×16 MAC + its pipeline registers, in µm².
+    pub mac16_um2: f64,
+    /// SRAM macro density, µm² per bit.
+    pub sram_um2_per_bit: f64,
+}
+
+impl Technology {
+    /// DSP48-class blocks needed per parallel MAC at a precision.
+    /// ≤8×8 MACs pack two per DSP48E2 (the INT8 double-pump trick);
+    /// ≤18×27 fits one; wider needs two.
+    pub fn dsp_per_mac(&self, p: Precision) -> f64 {
+        if p.w_bits <= 8 && p.a_bits <= 8 {
+            0.5
+        } else if p.w_bits <= 18 && p.a_bits <= 27 {
+            1.0
+        } else {
+            2.0
+        }
+    }
+
+    /// BRAM18K blocks for a buffer of `volume_bits` with a `port_bits`-wide
+    /// port: banks are constrained by both capacity (18 Kib each) and port
+    /// width (36 bits per block).
+    pub fn bram18k_blocks(&self, volume_bits: u64, port_bits: usize) -> usize {
+        let cap_banks = volume_bits.div_ceil(18 * 1024) as usize;
+        let width_banks = port_bits.div_ceil(36);
+        cap_banks.max(width_banks)
+    }
+
+    /// ASIC area of a compute IP with `unroll` MACs.
+    pub fn mac_array_area_um2(&self, unroll: usize, p: Precision) -> f64 {
+        let a = self.asic.expect("asic area model");
+        a.mac16_um2 * (p.w_bits * p.a_bits) as f64 / 256.0 * unroll as f64
+    }
+}
+
+/// 65 nm ASIC (Eyeriss / ShiDianNao era). 2.0 pJ 16-bit MAC; Eyeriss
+/// hierarchy ratios; 250 MHz default (Eyeriss core clock).
+pub fn asic_65nm() -> Technology {
+    Technology {
+        name: "asic65",
+        default_freq_mhz: 250.0,
+        costs: UnitCosts {
+            mac16_pj: 2.0,
+            mac_cycles: 1,
+            rf_bit_pj: 0.125,  // 1× MAC per 16-bit word
+            sram_bit_pj: 0.75, // 6× MAC per 16-bit word
+            bram_bit_pj: 0.75,
+            dram_bit_pj: 25.0, // 200× MAC per 16-bit word
+            write_factor: 1.2,
+            noc_bit_pj: 0.25, // 2× MAC per 16-bit word
+            bus_bit_pj: 0.35,
+            fifo_bit_pj: 0.15,
+            warmup_pj: 60.0,
+            warmup_cycles: 12,
+            ctrl_pj_per_state: 1.5,
+            ctrl_cycles_per_state: 0,
+            dram_setup_cycles: 30,
+            leakage_mw: 35.0,
+        },
+        fpga: None,
+        asic: Some(AsicArea { mac16_um2: 1800.0, sram_um2_per_bit: 0.9 }),
+    }
+}
+
+/// 65 nm ASIC clocked at 1 GHz (the ShiDianNao / Fig. 14–15 setting;
+/// higher clock ⇒ slightly higher dynamic unit energy from added pipeline
+/// registers).
+pub fn asic_65nm_1ghz() -> Technology {
+    let mut t = asic_65nm();
+    t.name = "asic65_1ghz";
+    t.default_freq_mhz = 1000.0;
+    t.costs.mac16_pj *= 1.15;
+    t.costs.leakage_mw = 55.0;
+    t
+}
+
+/// Ultra96 (Zynq UltraScale+ ZU3EG, 16 nm). 360 DSP48E2, 432 BRAM18K.
+/// 220 MHz is the paper's Table 3 clock.
+pub fn fpga_ultra96() -> Technology {
+    Technology {
+        name: "ultra96",
+        default_freq_mhz: 220.0,
+        costs: UnitCosts {
+            // FPGA MACs burn more energy than ASIC ones (routing fabric).
+            mac16_pj: 6.5,
+            mac_cycles: 1,
+            rf_bit_pj: 0.30, // LUTRAM / FF pipeline registers
+            sram_bit_pj: 1.4,
+            bram_bit_pj: 1.4, // BRAM18K access
+            dram_bit_pj: 32.0, // PS DDR4 via AXI
+            write_factor: 1.15,
+            noc_bit_pj: 0.6,
+            bus_bit_pj: 0.9, // AXI interconnect
+            fifo_bit_pj: 0.35,
+            warmup_pj: 220.0,
+            warmup_cycles: 40,
+            ctrl_pj_per_state: 6.0,
+            ctrl_cycles_per_state: 1,
+            dram_setup_cycles: 60,
+            leakage_mw: 2600.0, // PS + PL static + idle DDR at the Ultra96 operating point
+        },
+        fpga: Some(FpgaResources {
+            dsp_total: 360,
+            bram18k_total: 432,
+            lut_total: 70_560,
+            ff_total: 141_120,
+        }),
+        asic: None,
+    }
+}
+
+/// 28 nm ASIC (for the Chip Builder's technology sweep / ablations).
+pub fn asic_28nm() -> Technology {
+    let mut t = asic_65nm();
+    t.name = "asic28";
+    t.default_freq_mhz = 500.0;
+    // Rough Dennard-ish scaling 65→28 nm: ~0.35× dynamic energy.
+    let c = &mut t.costs;
+    c.mac16_pj *= 0.35;
+    c.rf_bit_pj *= 0.35;
+    c.sram_bit_pj *= 0.4;
+    c.bram_bit_pj *= 0.4;
+    c.dram_bit_pj *= 0.8; // off-chip barely scales
+    c.noc_bit_pj *= 0.4;
+    c.bus_bit_pj *= 0.4;
+    c.fifo_bit_pj *= 0.4;
+    c.warmup_pj *= 0.35;
+    c.ctrl_pj_per_state *= 0.35;
+    c.leakage_mw = 20.0;
+    t.asic = Some(AsicArea { mac16_um2: 420.0, sram_um2_per_bit: 0.25 });
+    t
+}
+
+/// Look a technology up by name (CLI).
+pub fn by_name(name: &str) -> Option<Technology> {
+    match name {
+        "asic65" => Some(asic_65nm()),
+        "asic65_1ghz" => Some(asic_65nm_1ghz()),
+        "asic28" => Some(asic_28nm()),
+        "ultra96" => Some(fpga_ultra96()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_hierarchy_ratios_hold() {
+        let t = asic_65nm();
+        let mac = t.costs.e_mac_pj(Precision::new(16, 16));
+        let word = 16.0;
+        let rf = t.costs.e_bit_read_pj(MemKind::RegFile) * word;
+        let noc = t.costs.e_bit_dp_pj(DataPathKind::Noc) * word;
+        let sram = t.costs.e_bit_read_pj(MemKind::Sram) * word;
+        let dram = t.costs.e_bit_read_pj(MemKind::Dram) * word;
+        // RF ≈ 1×, NoC ≈ 2×, SRAM ≈ 6×, DRAM ≈ 200× of a MAC.
+        assert!((rf / mac - 1.0).abs() < 0.2, "rf/mac={}", rf / mac);
+        assert!((noc / mac - 2.0).abs() < 0.4);
+        assert!((sram / mac - 6.0).abs() < 1.0);
+        assert!((dram / mac - 200.0).abs() < 30.0);
+    }
+
+    #[test]
+    fn precision_scales_mac_energy() {
+        let t = asic_65nm();
+        let e8 = t.costs.e_mac_pj(Precision::new(8, 8));
+        let e16 = t.costs.e_mac_pj(Precision::new(16, 16));
+        assert!(e8 < e16 * 0.5, "e8={e8} e16={e16}");
+    }
+
+    #[test]
+    fn dsp_packing() {
+        let t = fpga_ultra96();
+        assert_eq!(t.dsp_per_mac(Precision::new(8, 8)), 0.5);
+        assert_eq!(t.dsp_per_mac(Precision::new(11, 9)), 1.0);
+        assert_eq!(t.dsp_per_mac(Precision::new(32, 32)), 2.0);
+    }
+
+    #[test]
+    fn bram_blocks_capacity_and_width() {
+        let t = fpga_ultra96();
+        assert_eq!(t.bram18k_blocks(18 * 1024, 36), 1);
+        assert_eq!(t.bram18k_blocks(18 * 1024 + 1, 36), 2);
+        // Wide port forces banking even when capacity fits one block.
+        assert_eq!(t.bram18k_blocks(1024, 144), 4);
+    }
+
+    #[test]
+    fn tech_lookup() {
+        assert!(by_name("ultra96").is_some());
+        assert!(by_name("asic65").is_some());
+        assert!(by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn scaling_28nm_cheaper() {
+        let a = asic_65nm();
+        let b = asic_28nm();
+        assert!(b.costs.mac16_pj < a.costs.mac16_pj);
+        assert!(b.costs.dram_bit_pj > b.costs.sram_bit_pj * 10.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # AutoDNNchip — automated DNN chip predictor and builder (FPGA'20 reproduction)
+//!
+//! This crate reproduces the system described in
+//! *AutoDNNchip: An Automated DNN Chip Predictor and Builder for Both FPGAs
+//! and ASICs* (Xu, Zhang, Hao, et al., FPGA 2020).
+//!
+//! The library is organised around the paper's three enablers:
+//!
+//! 1. **One-for-all design-space description** ([`graph`]) — an
+//!    object-oriented directed graph whose nodes are hardware IPs
+//!    (computation / memory / data-path) and whose edges are data
+//!    dependencies; state machines on nodes capture pipeline schedules.
+//! 2. **Chip Predictor** ([`predictor`]) — a coarse-grained analytical mode
+//!    (paper Eqs. 1–8) and a fine-grained cycle-level run-time simulation
+//!    (paper Algorithm 1) over the same graph.
+//! 3. **Chip Builder** ([`builder`]) — two-stage design-space exploration:
+//!    stage 1 enumerates template/IP configurations and filters with the
+//!    coarse mode; stage 2 co-optimizes inter-IP pipelines with the fine
+//!    mode (paper Algorithm 2); survivors go through a PnR feasibility model
+//!    and RTL generation ([`rtlgen`]).
+//!
+//! Supporting substrates: the DNN intermediate representation and model zoo
+//! ([`dnn`]), the IP cost-model library ([`ip`]), virtual measured devices
+//! ([`devices`]), a functional accelerator simulator ([`funcsim`]), the
+//! PJRT runtime for golden-reference execution of AOT-compiled JAX models
+//! ([`runtime`]), and the experiment harness that regenerates every table
+//! and figure of the paper's evaluation ([`experiments`]).
+
+pub mod builder;
+pub mod coordinator;
+pub mod devices;
+pub mod dnn;
+pub mod experiments;
+pub mod funcsim;
+pub mod graph;
+pub mod ip;
+pub mod predictor;
+pub mod rtlgen;
+pub mod runtime;
+pub mod templates;
+pub mod util;
+
+pub mod testkit;

@@ -1,0 +1,154 @@
+//! AutoDNNchip CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! autodnnchip list-models
+//! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
+//! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
+//! autodnnchip build    --config cfg.json
+//! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
+//!                       fig11|fig12|fig13|fig14|fig15|all> [--seed N]
+//! autodnnchip validate [--artifacts DIR]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+use autodnnchip::builder::Spec;
+use autodnnchip::coordinator::{self, RunConfig};
+use autodnnchip::dnn::zoo;
+use autodnnchip::predictor::{predict_coarse, simulate};
+use autodnnchip::templates::{HwConfig, TemplateId};
+use autodnnchip::util::cli::Args;
+use autodnnchip::util::table::{f, Table};
+use autodnnchip::{experiments, runtime};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.first().map(|s| s.as_str()) {
+        Some("list-models") => {
+            let mut t = Table::new("model zoo", &["name", "layers", "params (M)", "MACs (M)"]);
+            for name in zoo::all_names() {
+                let m = zoo::by_name(&name).unwrap();
+                let s = m.stats()?;
+                t.row(vec![
+                    name,
+                    m.layers.len().to_string(),
+                    f(s.total_params as f64 / 1e6, 3),
+                    f(s.total_macs as f64 / 1e6, 1),
+                ]);
+            }
+            print!("{}", t.render());
+            Ok(())
+        }
+        Some("predict") => cmd_predict(args),
+        Some("build") => cmd_build(args),
+        Some("exp") => cmd_exp(args),
+        Some("validate") => cmd_validate(args),
+        Some(other) => bail!("unknown command '{other}'"),
+        None => {
+            eprintln!(
+                "usage: autodnnchip <list-models|predict|build|exp|validate> [flags]\n\
+                 see `rust/src/main.rs` docs for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_name = args.flag_or("model", "SK");
+    let m = zoo::by_name(&model_name).ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
+    let tmpl = TemplateId::by_name(&args.flag_or("template", "hetero_dw_pw"))
+        .ok_or_else(|| anyhow!("unknown template"))?;
+    let tech_name = args.flag_or("tech", "ultra96");
+    let tech = autodnnchip::ip::tech::by_name(&tech_name).ok_or_else(|| anyhow!("unknown tech"))?;
+    let mut cfg = if tech.fpga.is_some() { HwConfig::ultra96_default() } else { HwConfig::asic_default() };
+    cfg.tech = tech;
+    cfg.unroll = args.flag_usize("unroll", cfg.unroll);
+    cfg.pipeline = args.flag_usize("pipeline", cfg.pipeline as usize) as u64;
+    let g = tmpl.build(&m, &cfg)?;
+    let coarse = predict_coarse(&g, &cfg.tech)?;
+    let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+    let mut t = Table::new(
+        &format!("Chip Predictor — {model_name} on {}", tmpl.name()),
+        &["metric", "coarse", "fine"],
+    );
+    t.row(vec!["latency (ms)".into(), f(coarse.latency_ms, 3), f(fine.latency_ms, 3)]);
+    t.row(vec!["energy (µJ)".into(), f(coarse.energy_uj(), 1), f(fine.energy_pj / 1e6, 1)]);
+    t.row(vec!["fps".into(), f(coarse.fps(), 1), f(1000.0 / fine.latency_ms, 1)]);
+    t.row(vec!["DSP".into(), coarse.resources.dsp.to_string(), "-".into()]);
+    t.row(vec!["BRAM18K".into(), coarse.resources.bram18k.to_string(), "-".into()]);
+    t.row(vec!["SRAM (KB)".into(), f(coarse.resources.sram_kb, 1), "-".into()]);
+    t.row(vec!["multipliers".into(), coarse.resources.multipliers.to_string(), "-".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let cfg = if let Some(path) = args.flag("config") {
+        RunConfig::from_file(path)?
+    } else {
+        let backend = args.flag_or("backend", "fpga");
+        let spec = match backend.as_str() {
+            "fpga" => Spec::ultra96_object_detection(),
+            "asic" => Spec::asic_vision(),
+            other => bail!("unknown backend '{other}'"),
+        };
+        RunConfig {
+            model: args.flag_or("model", "SK"),
+            spec,
+            n2: args.flag_usize("n2", 4),
+            n_opt: args.flag_usize("n-opt", 2),
+            out_dir: args.flag("out").map(|s| s.to_string()),
+            rtl_out: args.flag("rtl-out").map(|s| s.to_string()),
+        }
+    };
+    let summary = coordinator::run(&cfg)?;
+    println!("{}", summary.result_json.pretty());
+    if summary.build.survivors.is_empty() {
+        bail!("no design survived DSE + PnR");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .subcommand
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("usage: exp <id|all>"))?;
+    let seed = args.flag_usize("seed", 0xA070) as u64;
+    let results = PathBuf::from(args.flag_or("results", "results"));
+    let ids: Vec<&str> = if id == "all" { experiments::all_ids() } else { vec![id] };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let rep = experiments::run(id, seed).with_context(|| format!("experiment {id}"))?;
+        rep.save(&results)?;
+        println!("{}", rep.text);
+        println!("[{} done in {:.1}s; results/{}.json written]\n", id, t0.elapsed().as_secs_f64(), id);
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let rt = runtime::Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in rt.artifact_names() {
+        let loaded = rt.load(&name)?;
+        println!("  {name}: inputs {:?} → {} outputs", loaded.meta.input_shapes, loaded.meta.num_outputs);
+    }
+    println!("all artifacts compile under PJRT");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Coarse-grained analytical prediction (paper §5.2, Eqs. 1–8).
+//!
+//! Per-IP energy and latency come from the node's closed-form summaries
+//! (`Node::energy_pj`, `Node::latency_cycles` — Eqs. 1–4); system energy is
+//! the sum over all IPs plus leakage (Eq. 7), system latency is the
+//! critical path with inter-IP pipelining *excluded* (Eq. 8), and resources
+//! accumulate per class (Eqs. 5–6).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::graph::{Graph, NodeId};
+use crate::ip::{IpClass, MemKind, Technology};
+
+/// Resource consumption summary (paper Eqs. 5–6 plus the FPGA/ASIC
+/// accounting used in Tables 8–9).
+#[derive(Debug, Clone, Default)]
+pub struct Resources {
+    /// Total memory volume per memory class, in bits (Eq. 5, per type).
+    pub mem_bits: BTreeMap<&'static str, u64>,
+    /// Total multipliers: Σ unroll + address-decode multipliers (Eq. 6).
+    pub multipliers: usize,
+    /// Address-decode multiplier share of `multipliers`.
+    pub decode_multipliers: usize,
+    /// FPGA accounting.
+    pub dsp: usize,
+    pub bram18k: usize,
+    pub lut: usize,
+    pub ff: usize,
+    /// ASIC accounting.
+    pub sram_kb: f64,
+    pub area_mm2: f64,
+}
+
+/// Coarse-mode prediction output.
+#[derive(Debug, Clone)]
+pub struct CoarseReport {
+    pub energy_pj: f64,
+    /// Dynamic-only energy (excludes leakage), for breakdown tables.
+    pub dynamic_pj: f64,
+    pub leakage_pj: f64,
+    pub latency_cycles: u64,
+    pub latency_ms: f64,
+    pub critical_path: Vec<NodeId>,
+    pub per_node_energy_pj: Vec<f64>,
+    pub per_node_latency_cycles: Vec<u64>,
+    pub resources: Resources,
+}
+
+impl CoarseReport {
+    /// Energy in µJ (figures report µJ- to mJ-scale values).
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_pj / 1e6
+    }
+
+    /// Average power in mW over the predicted run.
+    pub fn avg_power_mw(&self) -> f64 {
+        if self.latency_ms <= 0.0 {
+            return 0.0;
+        }
+        // pJ / ms = nW; convert to mW.
+        self.energy_pj / self.latency_ms * 1e-6
+    }
+
+    /// Throughput in frames/s assuming back-to-back inferences.
+    pub fn fps(&self) -> f64 {
+        if self.latency_ms <= 0.0 {
+            return 0.0;
+        }
+        1000.0 / self.latency_ms
+    }
+}
+
+/// Accumulate resource consumption over the graph's IPs.
+pub fn resources(g: &Graph, tech: &Technology) -> Resources {
+    let mut r = Resources::default();
+    let mut dsp = 0.0f64;
+    for node in &g.nodes {
+        match &node.class {
+            IpClass::Compute { unroll, prec, .. } => {
+                r.multipliers += unroll;
+                dsp += tech.dsp_per_mac(*prec) * *unroll as f64;
+                r.lut += 90 * unroll + 600;
+                r.ff += 140 * unroll + 800;
+                if tech.asic.is_some() {
+                    r.area_mm2 += tech.mac_array_area_um2(*unroll, *prec) / 1e6;
+                }
+            }
+            IpClass::Memory { kind, volume_bits, port_bits } => {
+                let key = match kind {
+                    MemKind::Dram => "dram",
+                    MemKind::Sram => "sram",
+                    MemKind::Bram => "bram",
+                    MemKind::RegFile => "regfile",
+                };
+                *r.mem_bits.entry(key).or_insert(0) += volume_bits;
+                // Address decoding costs one multiplier per on-chip memory
+                // port (Eq. 6's R_mul_dec term).
+                if !matches!(kind, MemKind::Dram) {
+                    r.decode_multipliers += 1;
+                    r.multipliers += 1;
+                    dsp += 1.0;
+                }
+                match kind {
+                    MemKind::Bram => {
+                        r.bram18k += tech.bram18k_blocks(*volume_bits, *port_bits);
+                        r.lut += 200;
+                        r.ff += 250;
+                    }
+                    MemKind::Sram | MemKind::RegFile => {
+                        r.sram_kb += *volume_bits as f64 / 8.0 / 1024.0;
+                        if let Some(a) = tech.asic {
+                            r.area_mm2 += *volume_bits as f64 * a.sram_um2_per_bit / 1e6;
+                        }
+                    }
+                    MemKind::Dram => {}
+                }
+            }
+            IpClass::DataPath { width_bits, .. } => {
+                r.lut += width_bits * 2 + 150;
+                r.ff += width_bits * 3 + 200;
+            }
+        }
+    }
+    r.dsp = dsp.ceil() as usize;
+    r
+}
+
+/// Run the coarse-grained Chip Predictor over one design graph.
+pub fn predict_coarse(g: &Graph, tech: &Technology) -> Result<CoarseReport> {
+    let per_node_energy_pj: Vec<f64> = g.nodes.iter().map(|n| n.energy_pj()).collect();
+    let per_node_latency_cycles: Vec<u64> = g.nodes.iter().map(|n| n.latency_cycles()).collect();
+    let (latency_cycles, critical_path) = g.critical_path()?;
+    let latency_ms = latency_cycles as f64 / (g.freq_mhz * 1e3);
+    let dynamic_pj: f64 = per_node_energy_pj.iter().sum();
+    // Leakage: mW × ms = µJ = 1e6 pJ.
+    let leakage_pj = tech.costs.leakage_mw * latency_ms * 1e6;
+    Ok(CoarseReport {
+        energy_pj: dynamic_pj + leakage_pj,
+        dynamic_pj,
+        leakage_pj,
+        latency_cycles,
+        latency_ms,
+        critical_path,
+        per_node_energy_pj,
+        per_node_latency_cycles,
+        resources: resources(g, tech),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bare_node, Graph, State};
+    use crate::ip::{tech, ComputeKind, DataPathKind, IpClass, MemKind, Precision};
+
+    fn small_graph() -> Graph {
+        let mut g = Graph::new("t", 200.0);
+        let m = g.add_node(bare_node(
+            "buf",
+            IpClass::Memory { kind: MemKind::Bram, volume_bits: 64 * 1024, port_bits: 72 },
+        ));
+        let d = g.add_node(bare_node("bus", IpClass::DataPath { kind: DataPathKind::Bus, width_bits: 64 }));
+        let c = g.add_node(bare_node(
+            "pe",
+            IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 32, prec: Precision::new(8, 8) },
+        ));
+        let e0 = g.connect(m, d);
+        let e1 = g.connect(d, c);
+        g.nodes[m].sm.repeat(10, State::new(4).emitting(e0, 256).with_bits(256));
+        g.nodes[d].sm.repeat(10, State::new(4).needing(e0, 256).emitting(e1, 256).with_bits(256));
+        g.nodes[c].sm.repeat(10, State::new(8).needing(e1, 256).with_macs(32 * 8));
+        g.nodes[c].e_mac_pj = 1.0;
+        g.nodes[m].e_bit_pj = 0.5;
+        g.nodes[d].e_bit_pj = 0.25;
+        g
+    }
+
+    #[test]
+    fn energy_is_sum_latency_is_critical_path() {
+        let g = small_graph();
+        g.validate().unwrap();
+        let t = tech::fpga_ultra96();
+        let r = predict_coarse(&g, &t).unwrap();
+        // E = Σ per-node dynamic energies.
+        let expect: f64 = 10.0 * 256.0 * 0.5 + 10.0 * 256.0 * 0.25 + 10.0 * 32.0 * 8.0;
+        assert!((r.dynamic_pj - expect).abs() < 1e-6, "{} vs {expect}", r.dynamic_pj);
+        // L = 40 + 40 + 80 on the single path.
+        assert_eq!(r.latency_cycles, 160);
+        assert_eq!(r.critical_path.len(), 3);
+        assert!(r.leakage_pj > 0.0);
+    }
+
+    #[test]
+    fn resources_accumulate() {
+        let g = small_graph();
+        let t = tech::fpga_ultra96();
+        let r = resources(&g, &t);
+        // 32 8-bit MACs pack 2/DSP → 16, plus 1 decode mul for the BRAM.
+        assert_eq!(r.dsp, 17);
+        assert_eq!(r.multipliers, 33);
+        assert_eq!(r.decode_multipliers, 1);
+        assert_eq!(r.bram18k, 4); // 64Kib/18Kib = 4 banks
+        assert_eq!(r.mem_bits["bram"], 64 * 1024);
+    }
+
+    #[test]
+    fn fps_and_power_consistent() {
+        let g = small_graph();
+        let t = tech::fpga_ultra96();
+        let r = predict_coarse(&g, &t).unwrap();
+        assert!((r.fps() - 1000.0 / r.latency_ms).abs() < 1e-9);
+        assert!(r.avg_power_mw() > 0.0);
+        assert!((r.energy_uj() - r.energy_pj / 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asic_area_counted() {
+        let mut g = Graph::new("a", 250.0);
+        g.add_node(bare_node(
+            "pe",
+            IpClass::Compute { kind: ComputeKind::RowStationary, unroll: 64, prec: Precision::new(16, 16) },
+        ));
+        g.add_node(bare_node(
+            "gb",
+            IpClass::Memory { kind: MemKind::Sram, volume_bits: 8 * 1024 * 1024, port_bits: 64 },
+        ));
+        let t = tech::asic_65nm();
+        let r = resources(&g, &t);
+        assert!(r.area_mm2 > 0.5, "{}", r.area_mm2);
+        assert!((r.sram_kb - 1024.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,18 @@
+//! The Chip Predictor (paper §5): mixed-granularity performance estimation
+//! over the one-for-all graph.
+//!
+//! * [`coarse`] — analytical mode (Eqs. 1–8): per-IP energy/latency from
+//!   closed forms, whole-accelerator energy by summation, latency by
+//!   critical path, resources by accumulation. Used by the Chip Builder's
+//!   stage-1 exploration; its speed (sub-µs per design point, see the
+//!   `predictor` bench) is what makes million-point sweeps feasible.
+//! * [`fine`] — run-time simulation (Algorithm 1): event-driven execution
+//!   of every IP's state machine honouring inter-IP data dependencies,
+//!   yielding exact pipelined latency, per-IP busy/idle cycles and the
+//!   bottleneck IP. Used by stage-2 IP-pipeline co-optimization.
+
+pub mod coarse;
+pub mod fine;
+
+pub use coarse::{predict_coarse, CoarseReport, Resources};
+pub use fine::{simulate, simulate_prevalidated, FineReport, NodeSim};

@@ -1,0 +1,178 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from rust — python is never
+//! on this path.
+//!
+//! Interchange format is HLO **text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! The runtime provides the *golden functional reference* for design
+//! validation: the generated accelerator's fixed-point funcsim output is
+//! checked against the JAX model executed here.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact metadata (one entry of `artifacts/manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub hlo_file: String,
+    /// Input tensor shapes, in call order.
+    pub input_shapes: Vec<Vec<i64>>,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+}
+
+/// Parse `manifest.json` written by aot.py.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json — run `make artifacts` first", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let arr = j.get("artifacts").and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("bad manifest"))?;
+    let mut out = Vec::new();
+    for a in arr {
+        let name = a.get("name").and_then(|v| v.as_str()).ok_or_else(|| anyhow!("no name"))?;
+        let hlo_file = a.get("hlo").and_then(|v| v.as_str()).ok_or_else(|| anyhow!("no hlo"))?;
+        let shapes = a
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("no inputs"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .map(|dims| dims.iter().filter_map(|d| d.as_f64()).map(|d| d as i64).collect())
+                    .ok_or_else(|| anyhow!("bad shape"))
+            })
+            .collect::<Result<Vec<Vec<i64>>>>()?;
+        let num_outputs = a.get("num_outputs").and_then(|v| v.as_usize()).unwrap_or(1);
+        out.push(ArtifactMeta {
+            name: name.to_string(),
+            hlo_file: hlo_file.to_string(),
+            input_shapes: shapes,
+            num_outputs,
+        });
+    }
+    Ok(out)
+}
+
+/// PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+}
+
+/// One compiled model.
+pub struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = load_manifest(artifacts_dir)?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Load and compile one artifact by name.
+    pub fn load(&self, name: &str) -> Result<Loaded> {
+        let meta = self
+            .manifest
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({:?})", self.artifact_names()))?
+            .clone();
+        let path = self.dir.join(&meta.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        Ok(Loaded { exe, meta })
+    }
+}
+
+impl Loaded {
+    /// Execute with f32 inputs; returns the flattened f32 outputs.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.input_shapes.len() {
+            bail!(
+                "'{}' expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.meta.input_shapes) {
+            let expect: i64 = shape.iter().product();
+            if expect != data.len() as i64 {
+                bail!("input numel {} != shape {:?}", data.len(), shape);
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            outs.push(t.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_missing_is_helpful_error() {
+        let err = match Runtime::new(Path::new("/nonexistent")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // The remaining runtime tests live in rust/tests/runtime_e2e.rs and
+    // require `make artifacts` to have produced the HLO files; they are
+    // skipped gracefully when artifacts are absent.
+    #[test]
+    fn manifest_parses_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(&dir).unwrap();
+        assert!(!m.is_empty());
+    }
+}

@@ -1,0 +1,179 @@
+//! Fig. 4(a) template: spatial architecture with a single adder-tree-based
+//! computation IP — the common folded FPGA accelerator. One compute engine
+//! processes the DNN layer by layer; activations round-trip DRAM between
+//! layers; input/weight/output BRAMs are double-buffered.
+//!
+//! Graph:
+//! ```text
+//! dram_in → bus_in → {ibuf, wbuf} → pe(adder-tree) → obuf → bus_out → dram_out
+//! ```
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::graph::{Graph, State, StateMachine};
+use crate::ip::{ComputeKind, DataPathKind, MemKind};
+
+use super::common::{self, compute_cycles, xfer_cycles};
+use super::HwConfig;
+
+/// Vector-unit lanes alongside the adder tree (pool/activation ops).
+const VEC_WIDTH: usize = 16;
+
+/// Push `tiles` states built from per-tile field values onto `sm`,
+/// splitting each total exactly: `tiles-1` base states plus one closing
+/// state that absorbs all remainders.
+pub(super) fn push_tiled<F: Fn(u64, u64, u64, u64, u64) -> State>(
+    sm: &mut StateMachine,
+    tiles: u64,
+    totals: (u64, u64, u64, u64, u64), // (in, w, out, macs, vec)
+    mk: F,
+) {
+    let (i, w, o, m, v) = totals;
+    if tiles <= 1 {
+        sm.push(mk(i, w, o, m, v));
+        return;
+    }
+    let base = (i / tiles, w / tiles, o / tiles, m / tiles, v / tiles);
+    let last = (
+        i - base.0 * (tiles - 1),
+        w - base.1 * (tiles - 1),
+        o - base.2 * (tiles - 1),
+        m - base.3 * (tiles - 1),
+        v - base.4 * (tiles - 1),
+    );
+    sm.repeat(tiles - 1, mk(base.0, base.1, base.2, base.3, base.4));
+    sm.push(mk(last.0, last.1, last.2, last.3, last.4));
+}
+
+/// Build the adder-tree graph for `model` under `cfg`.
+pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
+    let stats = model.stats()?;
+    let tech = &cfg.tech;
+    let mut g = Graph::new(&format!("adder_tree/{}", model.name), cfg.freq_mhz);
+
+    let dram_in = g.add_node(common::mem_node(tech, "dram_in", MemKind::Dram, 0, cfg.bus_bits));
+    let bus_in = g.add_node(common::dp_node(tech, "bus_in", DataPathKind::Bus, cfg.bus_bits));
+    let ibuf = g.add_node(common::mem_node(tech, "ibuf", MemKind::Bram, cfg.act_buf_bits, cfg.bus_bits));
+    let wbuf = g.add_node(common::mem_node(tech, "wbuf", MemKind::Bram, cfg.w_buf_bits, cfg.bus_bits));
+    let pe = g.add_node(common::comp_node(tech, "pe", ComputeKind::AdderTree, cfg.unroll, cfg.prec));
+    let obuf = g.add_node(common::mem_node(tech, "obuf", MemKind::Bram, cfg.act_buf_bits, cfg.bus_bits));
+    let bus_out = g.add_node(common::dp_node(tech, "bus_out", DataPathKind::Bus, cfg.bus_bits));
+    let dram_out = g.add_node(common::mem_node(tech, "dram_out", MemKind::Dram, 0, cfg.bus_bits));
+
+    let e_d_b = g.connect(dram_in, bus_in);
+    let e_b_i = g.connect(bus_in, ibuf);
+    let e_b_w = g.connect(bus_in, wbuf);
+    let e_i_p = g.connect(ibuf, pe);
+    let e_w_p = g.connect(wbuf, pe);
+    let e_p_o = g.connect(pe, obuf);
+    let e_o_b = g.connect(obuf, bus_out);
+    let e_b_d = g.connect(bus_out, dram_out);
+    // Layer-serial sequencing: layer l+1's input DMA cannot start before
+    // layer l's outputs are stored back (fine-sim-only token edge).
+    let e_sync = g.connect_sync(dram_out, dram_in);
+    common::reserve_phases(&mut g, stats.per_layer.len() * 2 + 2);
+
+    for (li, s) in stats.per_layer.iter().enumerate() {
+        let t = common::tile_layer(s, model, cfg.act_buf_bits, cfg.w_buf_bits, cfg.pipeline);
+        let totals = (t.in_bits, t.w_bits, t.out_bits, t.macs, t.vector_ops);
+        let bus = cfg.bus_bits;
+
+        if li > 0 {
+            // Wait for the previous layer's store-back token.
+            g.nodes[dram_in].sm.push(State::new(1).needing(e_sync, 1));
+        }
+        push_tiled(&mut g.nodes[dram_in].sm, t.tiles, totals, |i, w, _, _, _| {
+            State::new(xfer_cycles(tech, i + w, bus)).emitting(e_d_b, i + w).with_bits(i + w)
+        });
+        push_tiled(&mut g.nodes[bus_in].sm, t.tiles, totals, |i, w, _, _, _| {
+            State::new(xfer_cycles(tech, i + w, bus))
+                .needing(e_d_b, i + w)
+                .emitting(e_b_i, i)
+                .emitting(e_b_w, w)
+                .with_bits(i + w)
+        });
+        push_tiled(&mut g.nodes[ibuf].sm, t.tiles, totals, |i, _, _, _, _| {
+            // store incoming tile + read it out to the PE
+            State::new(xfer_cycles(tech, i, bus)).needing(e_b_i, i).emitting(e_i_p, i).with_bits(2 * i)
+        });
+        push_tiled(&mut g.nodes[wbuf].sm, t.tiles, totals, |_, w, _, _, _| {
+            State::new(xfer_cycles(tech, w, bus)).needing(e_b_w, w).emitting(e_w_p, w).with_bits(2 * w)
+        });
+        push_tiled(&mut g.nodes[pe].sm, t.tiles, totals, |i, w, o, m, v| {
+            State::new(compute_cycles(tech, m, v, cfg.unroll, VEC_WIDTH))
+                .needing(e_i_p, i)
+                .needing(e_w_p, w)
+                .emitting(e_p_o, o)
+                .with_macs(m)
+        });
+        push_tiled(&mut g.nodes[obuf].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_p_o, o).emitting(e_o_b, o).with_bits(2 * o)
+        });
+        push_tiled(&mut g.nodes[bus_out].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_o_b, o).emitting(e_b_d, o).with_bits(o)
+        });
+        push_tiled(&mut g.nodes[dram_out].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_b_d, o).with_bits(o)
+        });
+        if li + 1 < stats.per_layer.len() {
+            g.nodes[dram_out].sm.push(State::new(1).emitting(e_sync, 1));
+        }
+    }
+
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::{predict_coarse, simulate};
+
+    #[test]
+    fn builds_and_simulates() {
+        let m = zoo::shidiannao_benchmarks().remove(2); // LeNet-ish
+        let cfg = HwConfig::ultra96_default();
+        let g = build(&m, &cfg).unwrap();
+        g.validate().unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false).unwrap();
+        // Pipelined execution can only be as slow as the critical path.
+        assert!(fine.cycles <= coarse.latency_cycles, "{} vs {}", fine.cycles, coarse.latency_cycles);
+        assert!(fine.cycles > 0);
+    }
+
+    #[test]
+    fn macs_conserved_exactly() {
+        let m = zoo::alexnet();
+        let cfg = HwConfig::ultra96_default();
+        let g = build(&m, &cfg).unwrap();
+        let scheduled: u64 = g.nodes.iter().map(|n| n.sm.total_macs()).sum();
+        assert_eq!(scheduled, m.stats().unwrap().total_macs);
+    }
+
+    #[test]
+    fn deeper_pipeline_reduces_or_keeps_latency() {
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 1;
+        let g1 = build(&m, &cfg).unwrap();
+        cfg.pipeline = 4;
+        let g4 = build(&m, &cfg).unwrap();
+        let f1 = simulate(&g1, 0.0, false).unwrap();
+        let f4 = simulate(&g4, 0.0, false).unwrap();
+        assert!(f4.cycles <= f1.cycles, "pipeline should not hurt: {} vs {}", f4.cycles, f1.cycles);
+    }
+
+    #[test]
+    fn bigger_unroll_fewer_compute_cycles() {
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.unroll = 64;
+        let a = build(&m, &cfg).unwrap();
+        cfg.unroll = 512;
+        let b = build(&m, &cfg).unwrap();
+        let pa = a.node_by_name("pe").unwrap();
+        assert!(b.nodes[pa].sm.total_cycles() < a.nodes[pa].sm.total_cycles());
+    }
+}

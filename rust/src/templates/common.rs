@@ -1,0 +1,200 @@
+//! Shared template machinery: cost-resolved node constructors and the
+//! layer-tiling calculator every template uses to size its state machines.
+
+use crate::dnn::{LayerStats, Model};
+use crate::graph::{Graph, Node, NodeId, StateMachine};
+use crate::ip::{ComputeKind, DataPathKind, IpClass, MemKind, Technology};
+
+/// Create a compute node with unit costs resolved from the technology.
+pub fn comp_node(tech: &Technology, name: &str, kind: ComputeKind, unroll: usize, prec: crate::ip::Precision) -> Node {
+    let c = &tech.costs;
+    Node {
+        name: name.to_string(),
+        class: IpClass::Compute { kind, unroll, prec },
+        sm: StateMachine::new(),
+        warmup_pj: c.warmup_pj,
+        warmup_cycles: c.warmup_cycles,
+        ctrl_pj_per_state: c.ctrl_pj_per_state,
+        e_mac_pj: c.e_mac_pj(prec),
+        e_bit_pj: 0.0,
+    }
+}
+
+/// Create a memory node; `e_bit` is the read/write-blended access energy.
+/// ASIC SRAM access energy scales with macro size (bitline/wordline
+/// capacitance grows ~√capacity; the unit table is anchored at 64 KB) —
+/// this is the physical lever that lets the Chip Builder trade buffer
+/// size against dynamic energy (Fig. 15). FPGA BRAM is fixed-size blocks,
+/// so no scaling there.
+pub fn mem_node(tech: &Technology, name: &str, kind: MemKind, volume_bits: u64, port_bits: usize) -> Node {
+    let c = &tech.costs;
+    // Accesses are roughly half reads / half writes over a full inference;
+    // blend the two unit costs.
+    let mut e_bit = 0.5 * c.e_bit_read_pj(kind) + 0.5 * c.e_bit_write_pj(kind);
+    if matches!(kind, MemKind::Sram) && volume_bits > 0 {
+        let anchor = 64.0 * 8.0 * 1024.0; // 64 KB in bits
+        e_bit *= (volume_bits as f64 / anchor).sqrt().clamp(0.6, 1.6);
+    }
+    Node {
+        name: name.to_string(),
+        class: IpClass::Memory { kind, volume_bits, port_bits },
+        sm: StateMachine::new(),
+        warmup_pj: c.warmup_pj * 0.5,
+        warmup_cycles: if matches!(kind, MemKind::Dram) { c.dram_setup_cycles } else { 2 },
+        ctrl_pj_per_state: c.ctrl_pj_per_state,
+        e_mac_pj: 0.0,
+        e_bit_pj: e_bit,
+    }
+}
+
+/// Create a data-path node.
+pub fn dp_node(tech: &Technology, name: &str, kind: DataPathKind, width_bits: usize) -> Node {
+    let c = &tech.costs;
+    Node {
+        name: name.to_string(),
+        class: IpClass::DataPath { kind, width_bits },
+        sm: StateMachine::new(),
+        warmup_pj: c.warmup_pj * 0.25,
+        warmup_cycles: 2,
+        ctrl_pj_per_state: c.ctrl_pj_per_state * 0.5,
+        e_mac_pj: 0.0,
+        e_bit_pj: c.e_bit_dp_pj(kind),
+    }
+}
+
+/// Pre-size every node's phase vector (profiling showed repeated `Vec`
+/// growth + memmove dominating graph construction for deep models).
+pub fn reserve_phases(g: &mut Graph, phases_per_node: usize) {
+    for n in &mut g.nodes {
+        n.sm.phases.reserve(phases_per_node);
+    }
+}
+
+/// Even split of `total` into `parts`, remainder spread over the first
+/// shares (Σ shares == total exactly).
+pub fn share(total: u64, parts: u64, i: u64) -> u64 {
+    let base = total / parts;
+    if i < total % parts {
+        base + 1
+    } else {
+        base
+    }
+}
+
+/// Per-layer tiling decision: how many tiles the layer is split into so
+/// each tile's working set fits the on-chip buffers (double-buffered), and
+/// the per-tile traffic/work.
+#[derive(Debug, Clone, Copy)]
+pub struct Tiling {
+    pub tiles: u64,
+    /// Average bits per tile (exact split via [`share`] at emission time).
+    pub in_bits: u64,
+    pub w_bits: u64,
+    pub out_bits: u64,
+    pub macs: u64,
+    /// Non-MAC work (pooling/activation/reorg elements) for the layer.
+    pub vector_ops: u64,
+}
+
+/// Decide tiling for one layer against buffer budgets. Double-buffering
+/// reserves half of each buffer for the in-flight tile. `min_tiles` is the
+/// inter-IP pipelining depth (paper Fig. 5): 1 ⇒ monolithic per-layer
+/// states (transfer and compute of one layer never overlap), larger values
+/// split each layer into that many sub-states so downstream IPs start on
+/// the first chunk.
+pub fn tile_layer(s: &LayerStats, m: &Model, act_buf_bits: u64, w_buf_bits: u64, min_tiles: u64) -> Tiling {
+    let half_act = (act_buf_bits / 2).max(1);
+    let half_w = (w_buf_bits / 2).max(1);
+    let in_bits = s.in_act_bits;
+    let out_bits = s.out_act_bits;
+    let w_bits = s.params * m.w_bits as u64;
+    let t_in = in_bits.div_ceil(half_act);
+    let t_out = out_bits.div_ceil(half_act);
+    let t_w = w_bits.div_ceil(half_w);
+    let tiles = t_in.max(t_out).max(t_w).max(1).max(min_tiles);
+    Tiling {
+        tiles,
+        in_bits,
+        w_bits,
+        out_bits,
+        macs: s.macs,
+        vector_ops: s.vector_ops,
+    }
+}
+
+/// Cycles for a compute tile: MAC-limited cycles at unroll U plus
+/// vector-unit cycles (vector ops retire `vec_width` per cycle), plus the
+/// per-state control overhead of the technology.
+pub fn compute_cycles(tech: &Technology, macs: u64, vector_ops: u64, unroll: usize, vec_width: usize) -> u64 {
+    let mac_cy = macs.div_ceil(unroll as u64) * tech.costs.mac_cycles;
+    let vec_cy = vector_ops.div_ceil(vec_width.max(1) as u64);
+    (mac_cy + vec_cy + tech.costs.ctrl_cycles_per_state).max(1)
+}
+
+/// Cycles to move `bits` through a `width`-bit port plus control overhead.
+pub fn xfer_cycles(tech: &Technology, bits: u64, width: usize) -> u64 {
+    (bits.div_ceil(width.max(1) as u64) + tech.costs.ctrl_cycles_per_state).max(1)
+}
+
+/// Tag → summed dynamic energy per IP-class tag, for breakdown tables
+/// (Fig. 9(a), Table 6).
+pub fn energy_by_tag(g: &Graph) -> std::collections::BTreeMap<&'static str, f64> {
+    let mut m = std::collections::BTreeMap::new();
+    for n in &g.nodes {
+        *m.entry(n.class.tag()).or_insert(0.0) += n.energy_pj();
+    }
+    m
+}
+
+/// Named-node energy lookup helper for breakdowns keyed by node-name
+/// prefix (e.g. all nodes starting with "gb_").
+pub fn energy_by_prefix(g: &Graph, prefix: &str) -> f64 {
+    g.nodes.iter().filter(|n| n.name.starts_with(prefix)).map(|n| n.energy_pj()).sum()
+}
+
+/// Which graph node id executes DNN layer `li`'s MACs — recorded by
+/// templates for RTL generation and block-level reports.
+#[derive(Debug, Clone, Default)]
+pub struct LayerMap {
+    pub compute_node_of_layer: Vec<NodeId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::ip::tech;
+
+    #[test]
+    fn share_sums_to_total() {
+        for total in [0u64, 1, 7, 100, 1001] {
+            for parts in [1u64, 2, 3, 7] {
+                let s: u64 = (0..parts).map(|i| share(total, parts, i)).sum();
+                assert_eq!(s, total);
+            }
+        }
+    }
+
+    #[test]
+    fn tiling_respects_buffers() {
+        let m = zoo::alexnet();
+        let st = m.stats().unwrap();
+        let act = 1 << 20;
+        let w = 1 << 20;
+        for s in &st.per_layer {
+            let t = tile_layer(s, &m, act, w, 1);
+            assert!(t.tiles >= 1);
+            // Per-tile shares fit the half-buffers.
+            assert!(t.in_bits.div_ceil(t.tiles) <= act / 2 + 1);
+            assert!(t.w_bits.div_ceil(t.tiles) <= w / 2 + 1);
+        }
+    }
+
+    #[test]
+    fn cycles_helpers() {
+        let t = tech::asic_65nm();
+        assert_eq!(compute_cycles(&t, 100, 0, 10, 1), 10);
+        assert_eq!(xfer_cycles(&t, 128, 64), 2);
+        assert_eq!(xfer_cycles(&t, 0, 64), 1);
+    }
+}

@@ -1,0 +1,297 @@
+//! Fig. 4(b) template: heterogeneous architecture with two computation IPs —
+//! a DW-CONV engine and a (1×1/dense) CONV engine — each with dedicated
+//! weight BRAMs, chained through an on-chip FIFO so a DW+PW bundle is
+//! processed as a two-stage pipeline without a DRAM round-trip in between
+//! (the SkyNet / compact-model accelerator style).
+//!
+//! Graph:
+//! ```text
+//! dram_in → bus_in → {ibuf, wbuf_dw, wbuf_pw}
+//! ibuf → dw_engine → fifo → pw_engine → obuf → bus_out → dram_out
+//! wbuf_dw → dw_engine ; wbuf_pw → pw_engine
+//! ```
+//!
+//! Layers are grouped into *bundles*: a depthwise layer fuses with every
+//! following non-DW layer until the next depthwise one. Non-DW work (1×1
+//! conv, pooling, shortcut adds, the detection head) runs on the PW
+//! engine; the DW engine forwards data unchanged for bundles that lack a
+//! DW layer.
+
+use anyhow::Result;
+
+use crate::dnn::{LayerKind, Model};
+use crate::graph::{Graph, State};
+use crate::ip::{ComputeKind, DataPathKind, MemKind};
+
+use super::adder_tree::push_tiled;
+use super::common::{self, compute_cycles, xfer_cycles};
+use super::HwConfig;
+
+const VEC_WIDTH: usize = 16;
+
+/// One fused DW(+tail) bundle's aggregated workload.
+#[derive(Debug, Clone, Copy, Default)]
+struct Bundle {
+    in_bits: u64,
+    mid_bits: u64, // DW-engine output crossing the FIFO
+    out_bits: u64,
+    w_dw_bits: u64,
+    w_pw_bits: u64,
+    macs_dw: u64,
+    macs_pw: u64,
+    vec_pw: u64,
+}
+
+fn is_dw(kind: &LayerKind) -> bool {
+    matches!(kind, LayerKind::Conv { groups, .. } if *groups > 1)
+}
+
+/// Split the model into DW-led bundles.
+fn bundles(model: &Model) -> Result<Vec<Bundle>> {
+    let stats = model.stats()?;
+    let mut out: Vec<Bundle> = Vec::new();
+    let mut cur: Option<Bundle> = None;
+    for (i, l) in model.layers.iter().enumerate() {
+        let s = &stats.per_layer[i];
+        let start_new = is_dw(&l.kind) || cur.is_none();
+        if start_new {
+            if let Some(b) = cur.take() {
+                out.push(b);
+            }
+            let mut b = Bundle { in_bits: s.in_act_bits, ..Default::default() };
+            if is_dw(&l.kind) {
+                b.macs_dw = s.macs;
+                b.w_dw_bits = s.weight_bits;
+                b.mid_bits = s.out_act_bits;
+            } else {
+                // Bundle without a DW head: DW engine just forwards.
+                b.mid_bits = s.in_act_bits;
+                b.macs_pw = s.macs;
+                b.vec_pw = s.vector_ops;
+                b.w_pw_bits = s.weight_bits;
+            }
+            b.out_bits = s.out_act_bits;
+            cur = Some(b);
+        } else {
+            let b = cur.as_mut().unwrap();
+            b.macs_pw += s.macs;
+            b.vec_pw += s.vector_ops;
+            b.w_pw_bits += s.weight_bits;
+            b.out_bits = s.out_act_bits;
+        }
+    }
+    if let Some(b) = cur {
+        out.push(b);
+    }
+    Ok(out)
+}
+
+/// Build the heterogeneous DW/PW graph.
+pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
+    let tech = &cfg.tech;
+    let mut g = Graph::new(&format!("hetero_dw_pw/{}", model.name), cfg.freq_mhz);
+
+    // The unroll budget is split: DW work is much lighter than PW work in
+    // compact models, so give the DW engine a quarter of the MACs.
+    let u_dw = (cfg.unroll / 4).max(1);
+    let u_pw = (cfg.unroll - u_dw).max(1);
+
+    let dram_in = g.add_node(common::mem_node(tech, "dram_in", MemKind::Dram, 0, cfg.bus_bits));
+    let bus_in = g.add_node(common::dp_node(tech, "bus_in", DataPathKind::Bus, cfg.bus_bits));
+    let ibuf = g.add_node(common::mem_node(tech, "ibuf", MemKind::Bram, cfg.act_buf_bits, cfg.bus_bits));
+    let wbuf_dw =
+        g.add_node(common::mem_node(tech, "wbuf_dw", MemKind::Bram, cfg.w_buf_bits / 4, cfg.bus_bits));
+    let wbuf_pw = g.add_node(common::mem_node(
+        tech,
+        "wbuf_pw",
+        MemKind::Bram,
+        cfg.w_buf_bits - cfg.w_buf_bits / 4,
+        cfg.bus_bits,
+    ));
+    let dw = g.add_node(common::comp_node(tech, "dw_engine", ComputeKind::AdderTree, u_dw, cfg.prec));
+    let fifo = g.add_node(common::dp_node(tech, "fifo", DataPathKind::Fifo, cfg.bus_bits));
+    let pw = g.add_node(common::comp_node(tech, "pw_engine", ComputeKind::AdderTree, u_pw, cfg.prec));
+    let obuf = g.add_node(common::mem_node(tech, "obuf", MemKind::Bram, cfg.act_buf_bits, cfg.bus_bits));
+    let bus_out = g.add_node(common::dp_node(tech, "bus_out", DataPathKind::Bus, cfg.bus_bits));
+    let dram_out = g.add_node(common::mem_node(tech, "dram_out", MemKind::Dram, 0, cfg.bus_bits));
+
+    let e_d_b = g.connect(dram_in, bus_in);
+    let e_b_i = g.connect(bus_in, ibuf);
+    let e_b_wd = g.connect(bus_in, wbuf_dw);
+    let e_b_wp = g.connect(bus_in, wbuf_pw);
+    let e_i_dw = g.connect(ibuf, dw);
+    let e_wd_dw = g.connect(wbuf_dw, dw);
+    let e_dw_f = g.connect(dw, fifo);
+    let e_f_pw = g.connect(fifo, pw);
+    let e_wp_pw = g.connect(wbuf_pw, pw);
+    let e_pw_o = g.connect(pw, obuf);
+    let e_o_b = g.connect(obuf, bus_out);
+    let e_b_d = g.connect(bus_out, dram_out);
+    // Bundle-serial sequencing token (see adder_tree): the next bundle's
+    // input DMA waits for this bundle's store-back.
+    let e_sync = g.connect_sync(dram_out, dram_in);
+
+    let bundle_list = bundles(model)?;
+    let n_bundles = bundle_list.len();
+    common::reserve_phases(&mut g, n_bundles * 2 + 2);
+    for (bi, b) in bundle_list.into_iter().enumerate() {
+        // Tile so in/mid/out and the bundle weights fit the double buffers.
+        let half_act = (cfg.act_buf_bits / 2).max(1);
+        let half_w = (cfg.w_buf_bits / 2).max(1);
+        let tiles = b
+            .in_bits
+            .div_ceil(half_act)
+            .max(b.mid_bits.div_ceil(half_act))
+            .max(b.out_bits.div_ceil(half_act))
+            .max((b.w_dw_bits + b.w_pw_bits).div_ceil(half_w))
+            .max(cfg.pipeline);
+        let bus = cfg.bus_bits;
+        // totals tuple: reuse push_tiled's 5 fields; map as
+        // (in, w_dw + w_pw, out, macs_dw, macs_pw) and carry mid/vec via
+        // closures over exact per-tile shares of their own.
+        let w_all = b.w_dw_bits + b.w_pw_bits;
+
+        if bi > 0 {
+            g.nodes[dram_in].sm.push(State::new(1).needing(e_sync, 1));
+        }
+        push_tiled(&mut g.nodes[dram_in].sm, tiles, (b.in_bits, w_all, 0, 0, 0), |i, w, _, _, _| {
+            State::new(xfer_cycles(tech, i + w, bus)).emitting(e_d_b, i + w).with_bits(i + w)
+        });
+        // bus splits into ibuf / wbuf_dw / wbuf_pw — needs its own shares.
+        {
+            let sm = &mut g.nodes[bus_in].sm;
+            let t = tiles;
+            for phase in 0..2u64 {
+                let (count, idx) = if t == 1 {
+                    if phase == 1 { continue } else { (1, 0) }
+                } else if phase == 0 {
+                    (t - 1, 0)
+                } else {
+                    (1, t - 1)
+                };
+                let pick = |total: u64| -> u64 {
+                    if t == 1 {
+                        total
+                    } else if idx == 0 {
+                        total / t
+                    } else {
+                        total - (total / t) * (t - 1)
+                    }
+                };
+                let (i, wd, wp) = (pick(b.in_bits), pick(b.w_dw_bits), pick(b.w_pw_bits));
+                sm.repeat(
+                    count,
+                    State::new(xfer_cycles(tech, i + wd + wp, bus))
+                        .needing(e_d_b, i + wd + wp)
+                        .emitting(e_b_i, i)
+                        .emitting(e_b_wd, wd)
+                        .emitting(e_b_wp, wp)
+                        .with_bits(i + wd + wp),
+                );
+            }
+        }
+        push_tiled(&mut g.nodes[ibuf].sm, tiles, (b.in_bits, 0, 0, 0, 0), |i, _, _, _, _| {
+            State::new(xfer_cycles(tech, i, bus)).needing(e_b_i, i).emitting(e_i_dw, i).with_bits(2 * i)
+        });
+        push_tiled(&mut g.nodes[wbuf_dw].sm, tiles, (b.w_dw_bits, 0, 0, 0, 0), |w, _, _, _, _| {
+            State::new(xfer_cycles(tech, w, bus)).needing(e_b_wd, w).emitting(e_wd_dw, w).with_bits(2 * w)
+        });
+        push_tiled(&mut g.nodes[wbuf_pw].sm, tiles, (b.w_pw_bits, 0, 0, 0, 0), |w, _, _, _, _| {
+            State::new(xfer_cycles(tech, w, bus)).needing(e_b_wp, w).emitting(e_wp_pw, w).with_bits(2 * w)
+        });
+        push_tiled(
+            &mut g.nodes[dw].sm,
+            tiles,
+            (b.in_bits, b.w_dw_bits, b.mid_bits, b.macs_dw, 0),
+            |i, w, mid, m, _| {
+                // Bundles without a DW layer just forward through the
+                // engine: cost one pass of the tile over the vector lanes.
+                let fwd_ops = if m == 0 { mid / 8 } else { 0 };
+                State::new(compute_cycles(tech, m, fwd_ops, u_dw, VEC_WIDTH))
+                    .needing(e_i_dw, i)
+                    .needing(e_wd_dw, w)
+                    .emitting(e_dw_f, mid)
+                    .with_macs(m)
+            },
+        );
+        push_tiled(&mut g.nodes[fifo].sm, tiles, (b.mid_bits, 0, 0, 0, 0), |mid, _, _, _, _| {
+            State::new(xfer_cycles(tech, mid, bus)).needing(e_dw_f, mid).emitting(e_f_pw, mid).with_bits(mid)
+        });
+        push_tiled(
+            &mut g.nodes[pw].sm,
+            tiles,
+            (b.mid_bits, b.w_pw_bits, b.out_bits, b.macs_pw, b.vec_pw),
+            |mid, w, o, m, v| {
+                State::new(compute_cycles(tech, m, v, u_pw, VEC_WIDTH))
+                    .needing(e_f_pw, mid)
+                    .needing(e_wp_pw, w)
+                    .emitting(e_pw_o, o)
+                    .with_macs(m)
+            },
+        );
+        push_tiled(&mut g.nodes[obuf].sm, tiles, (b.out_bits, 0, 0, 0, 0), |o, _, _, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_pw_o, o).emitting(e_o_b, o).with_bits(2 * o)
+        });
+        push_tiled(&mut g.nodes[bus_out].sm, tiles, (b.out_bits, 0, 0, 0, 0), |o, _, _, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_o_b, o).emitting(e_b_d, o).with_bits(o)
+        });
+        push_tiled(&mut g.nodes[dram_out].sm, tiles, (b.out_bits, 0, 0, 0, 0), |o, _, _, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_b_d, o).with_bits(o)
+        });
+        if bi + 1 < n_bundles {
+            g.nodes[dram_out].sm.push(State::new(1).emitting(e_sync, 1));
+        }
+    }
+
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::{predict_coarse, simulate};
+
+    #[test]
+    fn bundle_split_covers_all_macs() {
+        let m = zoo::skynet_variants().remove(0);
+        let bs = bundles(&m).unwrap();
+        let macs: u64 = bs.iter().map(|b| b.macs_dw + b.macs_pw).sum();
+        assert_eq!(macs, m.stats().unwrap().total_macs);
+        // SkyNet has 6 DW layers → at least 6 bundles.
+        assert!(bs.len() >= 6, "{}", bs.len());
+    }
+
+    #[test]
+    fn skynet_runs_faster_on_hetero_than_adder_tree() {
+        // The DW+PW pipeline is the point of this template for compact
+        // models: same total unroll should yield lower latency than the
+        // folded single-engine design... at minimum it must simulate.
+        let m = zoo::skynet_variants().remove(0);
+        let cfg = HwConfig::ultra96_default();
+        let g = build(&m, &cfg).unwrap();
+        g.validate().unwrap();
+        let fine = simulate(&g, 0.0, false).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        assert!(fine.cycles <= coarse.latency_cycles);
+    }
+
+    #[test]
+    fn dw_engine_gets_dw_macs_only() {
+        let m = zoo::mobilenet_v2("m", 1.0, 128);
+        let cfg = HwConfig::ultra96_default();
+        let g = build(&m, &cfg).unwrap();
+        let dwn = g.node_by_name("dw_engine").unwrap();
+        let pwn = g.node_by_name("pw_engine").unwrap();
+        let stats = m.stats().unwrap();
+        let dw_macs: u64 = m
+            .layers
+            .iter()
+            .zip(&stats.per_layer)
+            .filter(|(l, _)| is_dw(&l.kind))
+            .map(|(_, s)| s.macs)
+            .sum();
+        assert_eq!(g.nodes[dwn].sm.total_macs(), dw_macs);
+        assert_eq!(g.nodes[pwn].sm.total_macs(), stats.total_macs - dw_macs);
+    }
+}

@@ -1,0 +1,200 @@
+//! Graph-based accelerator templates (paper Fig. 4 + the Hardware IP Pool).
+//!
+//! Each template turns a DNN model + a hardware configuration into a
+//! one-for-all graph with fully populated state machines:
+//!
+//! * [`adder_tree`] — Fig. 4(a): folded, single adder-tree compute IP with
+//!   DRAM round-trips per layer (the common FPGA baseline style).
+//! * [`hetero`] — Fig. 4(b): heterogeneous DW-CONV + 1×1-CONV engines with
+//!   dedicated BRAMs, layer-pair pipelining (the SkyNet/compact-model
+//!   style).
+//! * [`systolic`] — Fig. 4(c): TPU-like weight-stationary systolic array
+//!   with a unified buffer.
+//! * [`eyeriss`] — Fig. 4(d): row-stationary PE array with NoC and
+//!   per-PE register files (ASIC).
+//! * [`shidiannao`] — ShiDianNao-style 2D PE array with neighbour
+//!   forwarding and fully on-chip weights/activations (ASIC).
+//!
+//! Templates 3–5 are the "template 1/2/3" of the paper's Fig. 14 ASIC DSE.
+
+pub mod adder_tree;
+pub mod common;
+pub mod eyeriss;
+pub mod hetero;
+pub mod shidiannao;
+pub mod systolic;
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::graph::Graph;
+use crate::ip::{Precision, Technology};
+
+/// PE micro-architecture style (an IP-selection axis of the DSE):
+/// * `Forwarding` — ShiDianNao-style PEs with neighbour-shift registers:
+///   high ifmap reuse (few SRAM reads) but heavier PEs.
+/// * `Direct` — plain weight-stationary PEs with no inter-PE forwarding:
+///   lighter PEs, every window element re-read from SRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeStyle {
+    Forwarding,
+    Direct,
+}
+
+/// Hardware configuration knobs shared by every template — the Table-1
+/// design factors the Chip Builder sweeps.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    pub tech: Technology,
+    pub freq_mhz: f64,
+    pub prec: Precision,
+    /// Unrolling factor U: parallel MACs in the (main) compute IP.
+    pub unroll: usize,
+    /// On-chip activation-buffer budget in bits (per buffer instance).
+    pub act_buf_bits: u64,
+    /// On-chip weight-buffer budget in bits.
+    pub w_buf_bits: u64,
+    /// Bus / DRAM port width in bits per cycle.
+    pub bus_bits: usize,
+    /// Inter-IP pipelining depth: every per-tile state machine is split
+    /// into this many sub-states (1 = no inter-IP pipeline, Fig. 5(b)).
+    pub pipeline: u64,
+    /// PE micro-architecture (honoured by the ShiDianNao-style template).
+    pub pe_style: PeStyle,
+}
+
+impl HwConfig {
+    /// A sane Ultra96 starting point.
+    pub fn ultra96_default() -> Self {
+        let tech = crate::ip::tech::fpga_ultra96();
+        HwConfig {
+            freq_mhz: tech.default_freq_mhz,
+            tech,
+            prec: Precision::new(11, 9),
+            unroll: 288,
+            act_buf_bits: 2 * 1024 * 1024,
+            w_buf_bits: 2 * 1024 * 1024,
+            bus_bits: 128,
+            pipeline: 2,
+            pe_style: PeStyle::Forwarding,
+        }
+    }
+
+    /// A sane 65 nm ASIC starting point (ShiDianNao-budget: 64 MACs,
+    /// 128 KB SRAM, 1 GHz — paper Table 9).
+    pub fn asic_default() -> Self {
+        let tech = crate::ip::tech::asic_65nm_1ghz();
+        HwConfig {
+            freq_mhz: tech.default_freq_mhz,
+            tech,
+            prec: Precision::new(16, 16),
+            unroll: 64,
+            act_buf_bits: 64 * 8 * 1024, // 64 KB acts
+            w_buf_bits: 64 * 8 * 1024,   // 64 KB weights
+            bus_bits: 64,
+            pipeline: 2,
+            pe_style: PeStyle::Forwarding,
+        }
+    }
+}
+
+/// Identifier of a template in the Hardware IP Pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TemplateId {
+    AdderTree,
+    Hetero,
+    Systolic,
+    Eyeriss,
+    ShiDianNao,
+}
+
+impl TemplateId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TemplateId::AdderTree => "adder_tree",
+            TemplateId::Hetero => "hetero_dw_pw",
+            TemplateId::Systolic => "systolic",
+            TemplateId::Eyeriss => "eyeriss_rs",
+            TemplateId::ShiDianNao => "shidiannao",
+        }
+    }
+
+    /// All templates in the pool.
+    pub fn pool() -> Vec<TemplateId> {
+        vec![
+            TemplateId::AdderTree,
+            TemplateId::Hetero,
+            TemplateId::Systolic,
+            TemplateId::Eyeriss,
+            TemplateId::ShiDianNao,
+        ]
+    }
+
+    /// The FPGA-back-end subset.
+    pub fn fpga_pool() -> Vec<TemplateId> {
+        vec![TemplateId::AdderTree, TemplateId::Hetero, TemplateId::Systolic]
+    }
+
+    /// The ASIC subset used in the paper's Fig. 14 (templates 1/2/3 =
+    /// TPU-like, ShiDianNao-like, Eyeriss-like).
+    pub fn asic_pool() -> Vec<TemplateId> {
+        vec![TemplateId::Systolic, TemplateId::ShiDianNao, TemplateId::Eyeriss]
+    }
+
+    /// Instantiate this template for a model + config.
+    pub fn build(&self, model: &Model, cfg: &HwConfig) -> Result<Graph> {
+        match self {
+            TemplateId::AdderTree => adder_tree::build(model, cfg),
+            TemplateId::Hetero => hetero::build(model, cfg),
+            TemplateId::Systolic => systolic::build(model, cfg),
+            TemplateId::Eyeriss => eyeriss::build(model, cfg),
+            TemplateId::ShiDianNao => shidiannao::build(model, cfg),
+        }
+    }
+
+    /// Parse from a CLI name.
+    pub fn by_name(name: &str) -> Option<TemplateId> {
+        TemplateId::pool().into_iter().find(|t| t.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    #[test]
+    fn every_template_builds_and_validates_for_every_zoo_model() {
+        let fpga = HwConfig::ultra96_default();
+        let asic = HwConfig::asic_default();
+        for m in zoo::compact15().into_iter().chain([zoo::alexnet()]).chain(zoo::shidiannao_benchmarks())
+        {
+            for t in TemplateId::pool() {
+                let cfg = match t {
+                    TemplateId::Eyeriss | TemplateId::ShiDianNao => &asic,
+                    _ => &fpga,
+                };
+                let g = t.build(&m, cfg).unwrap_or_else(|e| panic!("{} on {}: {e}", t.name(), m.name));
+                g.validate().unwrap_or_else(|e| panic!("{} on {}: {e}", t.name(), m.name));
+            }
+        }
+    }
+
+    #[test]
+    fn templates_conserve_macs() {
+        // Every template must schedule exactly the model's MAC count.
+        let m = zoo::skynet_variants().remove(0);
+        let macs = m.stats().unwrap().total_macs;
+        let fpga = HwConfig::ultra96_default();
+        let asic = HwConfig::asic_default();
+        for t in TemplateId::pool() {
+            let cfg = match t {
+                TemplateId::Eyeriss | TemplateId::ShiDianNao => &asic,
+                _ => &fpga,
+            };
+            let g = t.build(&m, cfg).unwrap();
+            let scheduled: u64 = g.nodes.iter().map(|n| n.sm.total_macs()).sum();
+            assert_eq!(scheduled, macs, "{}", t.name());
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! ShiDianNao-style template: a 2D PE array with inter-PE neighbour
+//! forwarding and *fully on-chip* storage — the sensor-side accelerator
+//! style (weights and activations resident in three dedicated SRAMs: NBin,
+//! NBout, SB in the original paper; here `isram`, `osram`, `wsram`).
+//!
+//! The energy signature that Table 6 validates: computation dominates
+//! (~89%) because inter-PE forwarding gives each SRAM value massive reuse —
+//! input SRAM ≈ 8%, output ≈ 1.6%, weight ≈ 1.5%. The access-count model
+//! below reproduces that: ifmap values are read once per kernel-row sweep
+//! (vertical shifts are forwarded between PEs), weights are broadcast once
+//! per output pass, outputs are written once and re-read once (bank swap).
+
+use anyhow::Result;
+
+use crate::dnn::{LayerKind, LayerStats, Model};
+use crate::graph::{Graph, State};
+use crate::ip::{ComputeKind, DataPathKind, MemKind, Precision};
+
+use super::adder_tree::push_tiled;
+use super::common::{self, xfer_cycles};
+use super::{HwConfig, PeStyle};
+
+/// PE-internal forwarding/register overhead folded into "computation"
+/// energy, as the original paper's breakdown does (their "computation" IP
+/// includes the PE-array registers, inter-PE forwarding latches and
+/// control). Calibrated once against Table 6's reported shares.
+pub const PE_OVERHEAD_FACTOR: f64 = 2.47;
+
+/// ShiDianNao's SRAMs are small (≤64 KB) single-port macros whose per-bit
+/// access energy is well below the 100 KB-class global-buffer figure the
+/// generic unit-cost table represents; scale accordingly.
+pub const SDN_SRAM_SCALE: f64 = 0.35;
+
+/// ifmap SRAM read amplification: one read per kernel-row sweep that cannot
+/// be served by neighbour forwarding (row re-entry at tile edges; k≈3-5
+/// row sweeps with 2D forwarding covering the rest).
+const IFMAP_READS: f64 = 4.1;
+
+/// weight SRAM traffic: one broadcast per layer; wide-word sequential
+/// reads amortize slightly below one blended access per bit.
+const WEIGHT_FACTOR: f64 = 0.95;
+
+/// output SRAM traffic: one sequential wide-word write per value.
+const OSRAM_FACTOR: f64 = 1.29;
+
+/// Per-layer access counts for the ShiDianNao dataflow.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SdnLayerCost {
+    pub isram_bits: u64,
+    pub wsram_bits: u64,
+    pub osram_bits: u64,
+    pub macs: u64,
+    pub pe_cycles: u64,
+}
+
+/// Direct-PE overhead: plain weight-stationary MAC + pipeline register.
+pub const PE_DIRECT_FACTOR: f64 = 1.55;
+
+/// Compute the ShiDianNao cost for one layer on a `unroll`-PE array.
+pub fn sdn_layer_cost(
+    kind: &LayerKind,
+    s: &LayerStats,
+    prec: Precision,
+    unroll: usize,
+    style: PeStyle,
+) -> SdnLayerCost {
+    let w_bits = s.params * prec.w_bits as u64;
+    // Direct PEs lose the neighbour-forwarding reuse: every k×k window
+    // element is re-read from SRAM (a row buffer salvages ~20 %).
+    let if_reads = match style {
+        PeStyle::Forwarding => IFMAP_READS,
+        PeStyle::Direct => match kind {
+            LayerKind::Conv { k, .. } => (k * k) as f64 * 0.8,
+            _ => 1.0,
+        },
+    };
+    let isram_bits = (s.in_act_bits as f64 * if_reads) as u64;
+    let wsram_bits = (w_bits as f64 * WEIGHT_FACTOR) as u64;
+    let osram_bits = (s.out_act_bits as f64 * OSRAM_FACTOR) as u64;
+    // The 2D array computes one output neuron per PE; utilization is the
+    // fraction of the P×P grid covered by the output tile.
+    let util = match kind {
+        LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
+            let outs = (s.out_shape.h * s.out_shape.w) as u64;
+            let grid = unroll as u64;
+            let passes = outs.div_ceil(grid).max(1);
+            (outs as f64 / (passes * grid) as f64).clamp(0.05, 1.0)
+        }
+        _ => 1.0,
+    };
+    let ideal = s.macs.div_ceil(unroll as u64);
+    let pe_cycles = if s.macs > 0 {
+        ((ideal as f64 / util).ceil() as u64).max(1)
+    } else {
+        s.vector_ops.div_ceil(unroll as u64).max(1)
+    };
+    SdnLayerCost { isram_bits, wsram_bits, osram_bits, macs: s.macs, pe_cycles }
+}
+
+/// Build the ShiDianNao graph.
+///
+/// ```text
+/// dram_in → bus → {isram, wsram} → pe_array → osram → dram_out
+/// ```
+/// DRAM appears only at the boundary: initial image + weight load, final
+/// result store (everything else stays on chip).
+pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
+    let stats = model.stats()?;
+    let tech = &cfg.tech;
+    let mut g = Graph::new(&format!("shidiannao/{}", model.name), cfg.freq_mhz);
+
+    let dram_in = g.add_node(common::mem_node(tech, "dram_in", MemKind::Dram, 0, cfg.bus_bits));
+    let bus_in = g.add_node(common::dp_node(tech, "bus_in", DataPathKind::Bus, cfg.bus_bits));
+    let isram =
+        g.add_node(common::mem_node(tech, "isram", MemKind::Sram, cfg.act_buf_bits, cfg.bus_bits));
+    let wsram = g.add_node(common::mem_node(tech, "wsram", MemKind::Sram, cfg.w_buf_bits, cfg.bus_bits));
+    let mut pe_node = common::comp_node(tech, "pe_array", ComputeKind::RowStationary, cfg.unroll, cfg.prec);
+    // Fold PE-array register/forwarding overhead into the MAC energy.
+    pe_node.e_mac_pj *= match cfg.pe_style {
+        PeStyle::Forwarding => PE_OVERHEAD_FACTOR,
+        PeStyle::Direct => PE_DIRECT_FACTOR,
+    };
+    let pe = g.add_node(pe_node);
+    let osram = g.add_node(common::mem_node(
+        tech,
+        "osram",
+        MemKind::Sram,
+        cfg.act_buf_bits / 2,
+        cfg.bus_bits,
+    ));
+    for &n in &[isram, wsram, osram] {
+        g.nodes[n].e_bit_pj *= SDN_SRAM_SCALE;
+    }
+    let dram_out = g.add_node(common::mem_node(tech, "dram_out", MemKind::Dram, 0, cfg.bus_bits));
+
+    let e_d_b = g.connect(dram_in, bus_in);
+    let e_b_i = g.connect(bus_in, isram);
+    let e_b_w = g.connect(bus_in, wsram);
+    let e_i_p = g.connect(isram, pe);
+    let e_w_p = g.connect(wsram, pe);
+    let e_p_o = g.connect(pe, osram);
+    let e_o_d = g.connect(osram, dram_out);
+    common::reserve_phases(&mut g, model.layers.len() * 2 + 2);
+
+    let total_in = stats.per_layer.first().map(|s| s.in_act_bits).unwrap_or(0);
+    let total_w: u64 = stats.total_params * model.w_bits as u64;
+    let final_out = stats.per_layer.last().map(|s| s.out_act_bits).unwrap_or(0);
+    let on_chip_port = cfg.bus_bits * 4;
+
+    // Boundary load: image + all weights, once.
+    g.nodes[dram_in].sm.push(
+        State::new(xfer_cycles(tech, total_in + total_w, cfg.bus_bits))
+            .emitting(e_d_b, total_in + total_w)
+            .with_bits(total_in + total_w),
+    );
+    g.nodes[bus_in].sm.push(
+        State::new(xfer_cycles(tech, total_in + total_w, cfg.bus_bits))
+            .needing(e_d_b, total_in + total_w)
+            .emitting(e_b_i, total_in)
+            .emitting(e_b_w, total_w)
+            .with_bits(total_in + total_w),
+    );
+
+    // Per layer: isram/wsram feed the array; osram collects.
+    for (li, l) in model.layers.iter().enumerate() {
+        let s = &stats.per_layer[li];
+        let c = sdn_layer_cost(&l.kind, s, cfg.prec, cfg.unroll, cfg.pe_style);
+        // A handful of sub-tiles per layer keeps pipelining meaningful.
+        let tiles = c.macs.div_ceil(cfg.unroll as u64 * 65536).clamp(1, 16).max(cfg.pipeline);
+        // Only the first layer's input comes over the bus edge.
+        let need_bus_in = if li == 0 { total_in } else { 0 };
+        let need_bus_w = if li == 0 { total_w } else { 0 };
+
+        push_tiled(&mut g.nodes[isram].sm, tiles, (c.isram_bits, need_bus_in, s.in_act_bits, 0, 0), |ib, nb, feed, _, _| {
+            State::new(xfer_cycles(tech, feed, on_chip_port))
+                .needing(e_b_i, nb)
+                .emitting(e_i_p, feed)
+                .with_bits(ib)
+        });
+        push_tiled(&mut g.nodes[wsram].sm, tiles, (c.wsram_bits, need_bus_w, s.weight_bits, 0, 0), |wb, nb, feed, _, _| {
+            State::new(xfer_cycles(tech, feed, on_chip_port))
+                .needing(e_b_w, nb)
+                .emitting(e_w_p, feed)
+                .with_bits(wb)
+        });
+        {
+            let pe_cycles = c.pe_cycles;
+            let tiles_u = tiles;
+            push_tiled(
+                &mut g.nodes[pe].sm,
+                tiles,
+                (s.in_act_bits, s.weight_bits, s.out_act_bits, c.macs, 0),
+                |i, w, o, m, _| {
+                    State::new((pe_cycles / tiles_u).max(1))
+                        .needing(e_i_p, i)
+                        .needing(e_w_p, w)
+                        .emitting(e_p_o, o)
+                        .with_macs(m)
+                },
+            );
+        }
+        let is_last = li == model.layers.len() - 1;
+        push_tiled(&mut g.nodes[osram].sm, tiles, (c.osram_bits, s.out_act_bits, if is_last { final_out } else { 0 }, 0, 0), |ob, feed, out, _, _| {
+            State::new(xfer_cycles(tech, feed, on_chip_port))
+                .needing(e_p_o, feed)
+                .emitting(e_o_d, out)
+                .with_bits(ob)
+        });
+    }
+    g.nodes[dram_out].sm.push(
+        State::new(xfer_cycles(tech, final_out, cfg.bus_bits)).needing(e_o_d, final_out).with_bits(final_out),
+    );
+
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::simulate;
+    use crate::templates::common::energy_by_prefix;
+
+    #[test]
+    fn table6_style_breakdown_shape() {
+        // Averaged over the 10 small benchmarks, computation must dominate
+        // (paper Table 6: 89% comp / 8% input / 1.6% output / 1.5% weight).
+        let cfg = HwConfig::asic_default();
+        let mut shares = [0.0f64; 4];
+        let nets = zoo::shidiannao_benchmarks();
+        for m in &nets {
+            let g = build(m, &cfg).unwrap();
+            g.validate().unwrap();
+            let comp = energy_by_prefix(&g, "pe_array");
+            let i = energy_by_prefix(&g, "isram");
+            let o = energy_by_prefix(&g, "osram");
+            let w = energy_by_prefix(&g, "wsram");
+            let tot = comp + i + o + w;
+            shares[0] += comp / tot;
+            shares[1] += i / tot;
+            shares[2] += o / tot;
+            shares[3] += w / tot;
+        }
+        let n = nets.len() as f64;
+        let comp = 100.0 * shares[0] / n;
+        let inp = 100.0 * shares[1] / n;
+        assert!(comp > 75.0, "computation share {comp:.1}% too low");
+        assert!(inp < 20.0, "input share {inp:.1}% too high");
+    }
+
+    #[test]
+    fn simulates_small_nets() {
+        let cfg = HwConfig::asic_default();
+        for m in zoo::fig15_networks() {
+            let g = build(&m, &cfg).unwrap();
+            let r = simulate(&g, cfg.tech.costs.leakage_mw, false).unwrap();
+            assert!(r.cycles > 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn macs_conserved() {
+        let cfg = HwConfig::asic_default();
+        let m = zoo::shidiannao_benchmarks().remove(5);
+        let g = build(&m, &cfg).unwrap();
+        let scheduled: u64 = g.nodes.iter().map(|n| n.sm.total_macs()).sum();
+        assert_eq!(scheduled, m.stats().unwrap().total_macs);
+    }
+}

@@ -1,0 +1,166 @@
+//! Fig. 4(c) template: TPU-style weight-stationary systolic array.
+//!
+//! The array is modeled at array granularity (one compute IP of
+//! `unroll = rows × cols` MACs) with explicit fill/drain skew per tile —
+//! the wavefront effect the paper's Fig. 7 toy example illustrates at
+//! per-PE granularity (reproduced per-PE in `experiments::fig7`).
+//!
+//! Graph:
+//! ```text
+//! dram_in → bus_in → {ubuf, wbuf} ; wbuf → wfifo → array
+//! ubuf → array → accbuf → bus_out → dram_out
+//! ```
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::graph::{Graph, State};
+use crate::ip::{ComputeKind, DataPathKind, MemKind};
+
+use super::adder_tree::push_tiled;
+use super::common::{self, xfer_cycles};
+use super::HwConfig;
+
+/// Array geometry from the unroll budget: nearest square, column-major.
+pub fn array_dims(unroll: usize) -> (usize, usize) {
+    let r = (unroll as f64).sqrt().floor().max(1.0) as usize;
+    let c = unroll.div_ceil(r);
+    (r, c)
+}
+
+/// Build the systolic graph.
+pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
+    let stats = model.stats()?;
+    let tech = &cfg.tech;
+    let (rows, cols) = array_dims(cfg.unroll);
+    let unroll = rows * cols;
+    let mut g = Graph::new(&format!("systolic/{}", model.name), cfg.freq_mhz);
+
+    // On FPGA targets the on-chip buffers are BRAM; on ASIC they are SRAM.
+    let on_chip = if cfg.tech.fpga.is_some() { MemKind::Bram } else { MemKind::Sram };
+
+    let dram_in = g.add_node(common::mem_node(tech, "dram_in", MemKind::Dram, 0, cfg.bus_bits));
+    let bus_in = g.add_node(common::dp_node(tech, "bus_in", DataPathKind::Bus, cfg.bus_bits));
+    let ubuf = g.add_node(common::mem_node(tech, "ubuf", on_chip, cfg.act_buf_bits, cfg.bus_bits));
+    let wbuf = g.add_node(common::mem_node(tech, "wbuf", on_chip, cfg.w_buf_bits, cfg.bus_bits));
+    let wfifo = g.add_node(common::dp_node(tech, "wfifo", DataPathKind::Fifo, cfg.bus_bits));
+    let array =
+        g.add_node(common::comp_node(tech, "array", ComputeKind::Systolic, unroll, cfg.prec));
+    let accbuf = g.add_node(common::mem_node(tech, "accbuf", on_chip, cfg.act_buf_bits / 2, cfg.bus_bits));
+    let bus_out = g.add_node(common::dp_node(tech, "bus_out", DataPathKind::Bus, cfg.bus_bits));
+    let dram_out = g.add_node(common::mem_node(tech, "dram_out", MemKind::Dram, 0, cfg.bus_bits));
+
+    let e_d_b = g.connect(dram_in, bus_in);
+    let e_b_u = g.connect(bus_in, ubuf);
+    let e_b_w = g.connect(bus_in, wbuf);
+    let e_w_f = g.connect(wbuf, wfifo);
+    let e_f_a = g.connect(wfifo, array);
+    let e_u_a = g.connect(ubuf, array);
+    let e_a_acc = g.connect(array, accbuf);
+    let e_acc_b = g.connect(accbuf, bus_out);
+    let e_b_d = g.connect(bus_out, dram_out);
+    // Layer-serial sequencing token (see adder_tree).
+    let e_sync = g.connect_sync(dram_out, dram_in);
+    common::reserve_phases(&mut g, stats.per_layer.len() * 2 + 2);
+
+    let fill_drain = (rows + cols) as u64;
+    for (li, s) in stats.per_layer.iter().enumerate() {
+        let t = common::tile_layer(s, model, cfg.act_buf_bits, cfg.w_buf_bits, cfg.pipeline);
+        let totals = (t.in_bits, t.w_bits, t.out_bits, t.macs, t.vector_ops);
+        let bus = cfg.bus_bits;
+
+        if li > 0 {
+            g.nodes[dram_in].sm.push(State::new(1).needing(e_sync, 1));
+        }
+        push_tiled(&mut g.nodes[dram_in].sm, t.tiles, totals, |i, w, _, _, _| {
+            State::new(xfer_cycles(tech, i + w, bus)).emitting(e_d_b, i + w).with_bits(i + w)
+        });
+        push_tiled(&mut g.nodes[bus_in].sm, t.tiles, totals, |i, w, _, _, _| {
+            State::new(xfer_cycles(tech, i + w, bus))
+                .needing(e_d_b, i + w)
+                .emitting(e_b_u, i)
+                .emitting(e_b_w, w)
+                .with_bits(i + w)
+        });
+        push_tiled(&mut g.nodes[ubuf].sm, t.tiles, totals, |i, _, _, _, _| {
+            State::new(xfer_cycles(tech, i, bus)).needing(e_b_u, i).emitting(e_u_a, i).with_bits(2 * i)
+        });
+        push_tiled(&mut g.nodes[wbuf].sm, t.tiles, totals, |_, w, _, _, _| {
+            State::new(xfer_cycles(tech, w, bus)).needing(e_b_w, w).emitting(e_w_f, w).with_bits(2 * w)
+        });
+        push_tiled(&mut g.nodes[wfifo].sm, t.tiles, totals, |_, w, _, _, _| {
+            State::new(xfer_cycles(tech, w, bus)).needing(e_w_f, w).emitting(e_f_a, w).with_bits(w)
+        });
+        push_tiled(&mut g.nodes[array].sm, t.tiles, totals, |i, w, o, m, v| {
+            // Weight-stationary pass: fill the array (skew), stream the
+            // tile, then drain. Vector ops ride the activation pipeline
+            // after the accumulators.
+            let stream = m.div_ceil(unroll as u64) * tech.costs.mac_cycles;
+            let vec = v.div_ceil(cols as u64);
+            State::new((fill_drain + stream + vec).max(1))
+                .needing(e_u_a, i)
+                .needing(e_f_a, w)
+                .emitting(e_a_acc, o)
+                .with_macs(m)
+        });
+        push_tiled(&mut g.nodes[accbuf].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_a_acc, o).emitting(e_acc_b, o).with_bits(2 * o)
+        });
+        push_tiled(&mut g.nodes[bus_out].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_acc_b, o).emitting(e_b_d, o).with_bits(o)
+        });
+        push_tiled(&mut g.nodes[dram_out].sm, t.tiles, totals, |_, _, o, _, _| {
+            State::new(xfer_cycles(tech, o, bus)).needing(e_b_d, o).with_bits(o)
+        });
+        if li + 1 < stats.per_layer.len() {
+            g.nodes[dram_out].sm.push(State::new(1).emitting(e_sync, 1));
+        }
+    }
+
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::simulate;
+
+    #[test]
+    fn array_dims_near_square() {
+        assert_eq!(array_dims(64), (8, 8));
+        assert_eq!(array_dims(256), (16, 16));
+        let (r, c) = array_dims(100);
+        assert!(r * c >= 100);
+        assert_eq!(array_dims(1), (1, 1));
+    }
+
+    #[test]
+    fn fill_drain_overhead_present() {
+        // One tiny layer: with a huge array the latency is dominated by
+        // fill/drain skew, not streaming.
+        let m = zoo::shidiannao_benchmarks().remove(6); // sdn_smile, tiny
+        let mut cfg = HwConfig::asic_default();
+        cfg.unroll = 4096;
+        cfg.pipeline = 1;
+        let g = build(&m, &cfg).unwrap();
+        g.validate().unwrap();
+        let arr = g.node_by_name("array").unwrap();
+        let (rows, cols) = array_dims(4096);
+        let min_per_state = (rows + cols) as u64;
+        for p in &g.nodes[arr].sm.phases {
+            assert!(p.proto.cycles >= min_per_state);
+        }
+    }
+
+    #[test]
+    fn simulates_mobilenet() {
+        let m = zoo::mobilenet_v2("m", 0.5, 128);
+        let cfg = HwConfig::ultra96_default();
+        let g = build(&m, &cfg).unwrap();
+        let r = simulate(&g, 0.0, false).unwrap();
+        assert!(r.cycles > 0);
+        let scheduled: u64 = g.nodes.iter().map(|n| n.sm.total_macs()).sum();
+        assert_eq!(scheduled, m.stats().unwrap().total_macs);
+    }
+}

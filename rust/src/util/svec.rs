@@ -1,0 +1,91 @@
+//! Inline edge-list: `(edge, bits)` pairs stored without heap allocation
+//! for the common arities (≤ 2 per state — one data input plus one weight
+//! input, or one/two outputs), spilling to a `Vec` beyond that.
+//!
+//! Motivated by profiling the stage-1 sweep: ~40 % of its time was
+//! malloc/free churn from the two `Vec`s every [`crate::graph::State`]
+//! carried. `Vec::new()` never allocates, so the spill vector costs
+//! nothing until a state genuinely fans out to 3+ edges.
+
+/// Compact list of `(edge_id, bits)` pairs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EdgeList {
+    inline: [(u32, u64); 2],
+    len: u8,
+    spill: Vec<(u32, u64)>,
+}
+
+impl EdgeList {
+    pub const fn new() -> Self {
+        EdgeList { inline: [(0, 0); 2], len: 0, spill: Vec::new() }
+    }
+
+    pub fn push(&mut self, edge: usize, bits: u64) {
+        debug_assert!(edge <= u32::MAX as usize, "edge id overflows u32");
+        if (self.len as usize) < self.inline.len() {
+            self.inline[self.len as usize] = (edge as u32, bits);
+            self.len += 1;
+        } else {
+            self.spill.push((edge as u32, bits));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0 && self.spill.is_empty()
+    }
+
+    /// Iterate as `(edge_id, bits)` by value.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.inline[..self.len as usize]
+            .iter()
+            .chain(self.spill.iter())
+            .map(|&(e, b)| (e as usize, b))
+    }
+}
+
+impl FromIterator<(usize, u64)> for EdgeList {
+    fn from_iter<I: IntoIterator<Item = (usize, u64)>>(it: I) -> Self {
+        let mut l = EdgeList::new();
+        for (e, b) in it {
+            l.push(e, b);
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_then_spill() {
+        let mut l = EdgeList::new();
+        assert!(l.is_empty());
+        for i in 0..5usize {
+            l.push(i, i as u64 * 10);
+        }
+        assert_eq!(l.len(), 5);
+        let v: Vec<_> = l.iter().collect();
+        assert_eq!(v, vec![(0, 0), (1, 10), (2, 20), (3, 30), (4, 40)]);
+    }
+
+    #[test]
+    fn equality_and_clone() {
+        let a: EdgeList = [(3usize, 7u64), (9, 1)].into_iter().collect();
+        let b = a.clone();
+        assert_eq!(a, b);
+        let c: EdgeList = [(3usize, 7u64)].into_iter().collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn from_iterator_large() {
+        let l: EdgeList = (0..10usize).map(|i| (i, 1u64)).collect();
+        assert_eq!(l.len(), 10);
+        assert_eq!(l.iter().map(|(_, b)| b).sum::<u64>(), 10);
+    }
+}

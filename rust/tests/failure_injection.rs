@@ -1,0 +1,115 @@
+//! Failure-injection tests: the system must fail loudly and helpfully,
+//! never hang or silently mis-answer.
+
+use std::path::PathBuf;
+
+use autodnnchip::dnn::parser;
+use autodnnchip::graph::{bare_node, Graph, State};
+use autodnnchip::ip::{ComputeKind, IpClass, Precision};
+use autodnnchip::predictor::simulate;
+use autodnnchip::runtime::Runtime;
+
+fn comp(name: &str) -> autodnnchip::graph::Node {
+    bare_node(
+        name,
+        IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 1, prec: Precision::new(8, 8) },
+    )
+}
+
+#[test]
+fn corrupt_hlo_artifact_reports_parse_error() {
+    let dir = std::env::temp_dir().join(format!("adc_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts":[{"name":"bad","hlo":"bad.hlo.txt","inputs":[[2,2]],"num_outputs":1}]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO text at all {{{").unwrap();
+    let rt = Runtime::new(&dir).expect("client + manifest ok");
+    let err = match rt.load("bad") {
+        Ok(_) => panic!("corrupt HLO must not compile"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("bad.hlo.txt"), "error should name the file: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_manifest_is_an_error_not_a_panic() {
+    let dir = std::env::temp_dir().join(format!("adc_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts":[{"name":"x""#).unwrap();
+    assert!(Runtime::new(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_input_arity_and_shape_are_errors() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let mm = rt.load("matmul_tile").unwrap();
+    // Arity.
+    assert!(mm.run_f32(&[vec![0.0; 64 * 96]]).is_err());
+    // Shape.
+    assert!(mm.run_f32(&[vec![0.0; 10], vec![0.0; 96 * 80]]).is_err());
+}
+
+#[test]
+fn starved_consumer_deadlock_is_diagnosed_with_node_name() {
+    // Producer emits enough bits in total but a sync-token edge is never
+    // fed → the fine sim must end with a named deadlock, not hang.
+    let mut g = Graph::new("dl", 100.0);
+    let a = g.add_node(comp("producer"));
+    let b = g.add_node(comp("starved_consumer"));
+    let c = g.add_node(comp("token_source"));
+    let e_ab = g.connect(a, b);
+    let e_cb = g.connect(c, b);
+    g.nodes[a].sm.push(State::new(1).emitting(e_ab, 8));
+    // Token source has states but never emits on the edge b waits on…
+    g.nodes[c].sm.push(State::new(1));
+    // …yet validate() passes only if flow conservation holds, so b's need
+    // must not exceed c's emit: use a zero-bit wait loophole? No — make c
+    // emit on a LATER state that can never be reached because c itself
+    // waits on b (cycle through a sync edge, legal structurally).
+    let e_bc = g.connect_sync(b, c);
+    g.nodes[c].sm.push(State::new(1).needing(e_bc, 1).emitting(e_cb, 8));
+    g.nodes[b].sm.push(State::new(1).needing(e_ab, 8).needing(e_cb, 8).emitting(e_bc, 1));
+    g.validate().expect("structurally fine");
+    let err = match simulate(&g, 0.0, false) {
+        Ok(_) => panic!("circular wait must deadlock"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("deadlock"), "{err}");
+    assert!(err.contains("starved_consumer") || err.contains("token_source"), "{err}");
+}
+
+#[test]
+fn parser_rejects_oversized_references_gracefully() {
+    // Concat referencing a layer far out of range.
+    let bad = r#"{"name":"x","input":[1,8,8],"layers":[
+        {"type":"conv","out_c":2,"k":1},
+        {"type":"concat","with":[999]}
+    ]}"#;
+    let err = parser::parse_str(bad).unwrap_err();
+    assert!(format!("{err:#}").contains("producer") || format!("{err:#}").contains("validation"));
+}
+
+#[test]
+fn builder_with_impossible_budget_yields_no_survivors_not_a_panic() {
+    use autodnnchip::builder::{build_accelerator, Backend, Objective, Spec};
+    let m = autodnnchip::dnn::zoo::by_name("SK6").unwrap(); // biggest variant
+    let spec = Spec {
+        backend: Backend::Fpga { dsp: 4, bram18k: 4, lut: 500, ff: 500 },
+        min_fps: 10_000.0,
+        max_power_mw: 1.0,
+        objective: Objective::Latency,
+    };
+    let out = build_accelerator(&m, &spec, 3, 1).expect("flow completes");
+    assert!(out.survivors.is_empty());
+    assert!(out.evaluated > 0);
+}

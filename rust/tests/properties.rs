@@ -1,0 +1,303 @@
+//! Property-based tests over the core invariants, using the in-tree
+//! `testkit` runner (the offline registry carries no proptest): randomized
+//! graphs, models and configurations; every failure reports a reproducing
+//! seed.
+
+use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
+use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
+use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
+use autodnnchip::predictor::{predict_coarse, simulate};
+use autodnnchip::prop_assert;
+use autodnnchip::templates::{HwConfig, TemplateId};
+use autodnnchip::testkit::{check, check_cfg, Config};
+use autodnnchip::util::json::Json;
+use autodnnchip::util::rng::Rng;
+
+fn comp(name: &str) -> autodnnchip::graph::Node {
+    bare_node(
+        name,
+        IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 1, prec: Precision::new(8, 8) },
+    )
+}
+
+/// Random layered DAG whose state machines satisfy flow conservation.
+fn random_graph(rng: &mut Rng, size: usize) -> Graph {
+    let mut g = Graph::new("prop", 100.0);
+    let layers = 2 + size % 3;
+    let mut prev: Vec<usize> = Vec::new();
+    for l in 0..layers {
+        let width = rng.range(1, 3);
+        let mut cur = Vec::new();
+        for w in 0..width {
+            let id = g.add_node(comp(&format!("n{l}_{w}")));
+            g.nodes[id].warmup_cycles = rng.range(0, 4) as u64;
+            cur.push(id);
+        }
+        if l > 0 {
+            for &c in &cur {
+                let p = *rng.choose(&prev);
+                g.connect(p, c);
+            }
+        }
+        prev = cur;
+    }
+    let outs = g.out_edges();
+    let ins = g.in_edges();
+    let states = rng.range(1, 5) as u64;
+    for i in 0..g.nodes.len() {
+        let mut st = State::new(rng.range(1, 6) as u64).with_macs(rng.range(0, 50) as u64);
+        for &e in &outs[i] {
+            st = st.emitting(e, 8);
+        }
+        for &e in &ins[i] {
+            st = st.needing(e, 8);
+        }
+        let mut m = StateMachine::new();
+        m.repeat(states, st);
+        g.nodes[i].sm = m;
+    }
+    g
+}
+
+#[test]
+fn prop_fine_latency_never_exceeds_coarse_critical_path_plus_warmups() {
+    // Coarse ignores pipelining, so fine <= coarse + (pipeline warm-up
+    // skew, bounded by the sum of all warmups off the critical path).
+    check("fine<=coarse", |rng, size| {
+        let g = random_graph(rng, size);
+        if g.validate().is_err() {
+            return Ok(());
+        }
+        let t = tech::asic_65nm();
+        let coarse = predict_coarse(&g, &t).map_err(|e| e.to_string())?;
+        let fine = simulate(&g, 0.0, false).map_err(|e| e.to_string())?;
+        let warmup_slack: u64 = g.nodes.iter().map(|n| n.warmup_cycles).sum();
+        prop_assert!(
+            fine.cycles <= coarse.latency_cycles + warmup_slack,
+            "fine {} > coarse {} + slack {warmup_slack}",
+            fine.cycles,
+            coarse.latency_cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_energy_matches_coarse_dynamic_energy() {
+    // Energy is schedule-independent: sum of node energies in both modes.
+    check("energy equal", |rng, size| {
+        let mut g = random_graph(rng, size);
+        for n in &mut g.nodes {
+            n.e_mac_pj = rng.range_f64(0.1, 3.0);
+        }
+        if g.validate().is_err() {
+            return Ok(());
+        }
+        let t = tech::asic_65nm();
+        let coarse = predict_coarse(&g, &t).map_err(|e| e.to_string())?;
+        let fine = simulate(&g, 0.0, false).map_err(|e| e.to_string())?;
+        prop_assert!(
+            (coarse.dynamic_pj - fine.energy_pj).abs() < 1e-6 * coarse.dynamic_pj.max(1.0),
+            "coarse {} vs fine {}",
+            coarse.dynamic_pj,
+            fine.energy_pj
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_state_machines_preserve_work() {
+    check("pipelined totals", |rng, _| {
+        let mut m = StateMachine::new();
+        for _ in 0..rng.range(1, 4) {
+            m.repeat(
+                rng.range(1, 100) as u64,
+                State::new(rng.range(1, 50) as u64)
+                    .with_macs(rng.range(0, 1000) as u64)
+                    .with_bits(rng.range(0, 10_000) as u64),
+            );
+        }
+        let f = rng.range(1, 9) as u64;
+        let p = m.pipelined(f);
+        prop_assert!(p.total_macs() == m.total_macs());
+        prop_assert!(p.total_bits() == m.total_bits());
+        prop_assert!(p.num_states() == m.num_states() * f);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_parser_roundtrip_random_models() {
+    check_cfg("parser roundtrip", Config { cases: 128, seed: 0xC0DE }, |rng, size| {
+        let c0 = rng.range(1, 8);
+        let hw = rng.range(8, 24);
+        let mut m = Model::new("rand", TensorShape::new(c0, hw, hw), 8, 8);
+        let mut last_conv: Option<usize> = None;
+        for i in 0..(2 + size % 6) {
+            match rng.below(5) {
+                0 | 1 => {
+                    let id = m.push(
+                        &format!("c{i}"),
+                        LayerKind::Conv {
+                            out_c: rng.range(1, 12),
+                            k: *rng.choose(&[1usize, 3]),
+                            stride: 1,
+                            pad: 1,
+                            groups: 1,
+                            bias: rng.bool(0.5),
+                        },
+                    );
+                    last_conv = Some(id);
+                }
+                2 => {
+                    m.push(&format!("r{i}"), LayerKind::ReLU);
+                }
+                3 => {
+                    m.push(&format!("p{i}"), LayerKind::Pool { kind: PoolKind::Max, k: 2, stride: 1 });
+                }
+                _ => {
+                    if let Some(t) = last_conv {
+                        let shapes = m.infer_shapes().map_err(|e| e.to_string())?;
+                        let cur = shapes[m.layers.len() - 1];
+                        if shapes[t].h == cur.h && shapes[t].w == cur.w {
+                            m.push(&format!("cat{i}"), LayerKind::Concat { with: vec![t] });
+                        }
+                    }
+                }
+            }
+        }
+        if m.infer_shapes().is_err() {
+            return Ok(()); // generated an over-reduced pool stack; skip
+        }
+        let j = parser::to_json(&m);
+        let back = parser::from_json(&j).map_err(|e| e.to_string())?;
+        prop_assert!(back.layers == m.layers, "layer mismatch after roundtrip");
+        prop_assert!(
+            back.stats().map_err(|e| e.to_string())?.total_macs
+                == m.stats().map_err(|e| e.to_string())?.total_macs
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_mutations() {
+    check_cfg("json fuzz", Config { cases: 400, seed: 7 }, |rng, _| {
+        let base = r#"{"a":[1,2,{"b":null,"c":"x"}],"d":-1.5e3,"e":true}"#;
+        let mut bytes = base.as_bytes().to_vec();
+        for _ in 0..rng.range(1, 6) {
+            let i = rng.below(bytes.len());
+            bytes[i] = (rng.next_u64() % 128) as u8;
+        }
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must not panic; errors are fine
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_templates_conserve_macs_across_random_configs() {
+    check_cfg("template macs", Config { cases: 48, seed: 0xACC }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.unroll = rng.range(8, 512);
+        cfg.act_buf_bits = rng.range(64, 4096) as u64 * 1024;
+        cfg.w_buf_bits = rng.range(64, 4096) as u64 * 1024;
+        cfg.bus_bits = *rng.choose(&[32usize, 64, 128, 256]);
+        cfg.pipeline = *rng.choose(&[1u64, 2, 4, 8, 32]);
+        let asic_cfg = {
+            let mut c = HwConfig::asic_default();
+            c.unroll = cfg.unroll.min(256);
+            c.pipeline = cfg.pipeline;
+            c
+        };
+        let macs = m.stats().map_err(|e| e.to_string())?.total_macs;
+        for t in TemplateId::pool() {
+            let c = match t {
+                TemplateId::Eyeriss | TemplateId::ShiDianNao => &asic_cfg,
+                _ => &cfg,
+            };
+            let g = t.build(m, c).map_err(|e| e.to_string())?;
+            g.validate().map_err(|e| format!("{} invalid: {e}", t.name()))?;
+            let scheduled: u64 = g.nodes.iter().map(|n| n.sm.total_macs()).sum();
+            prop_assert!(scheduled == macs, "{}: {scheduled} != {macs}", t.name());
+            // And it must actually simulate (no deadlock) for any config.
+            simulate(&g, 0.0, false).map_err(|e| format!("{} deadlock: {e}", t.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deeper_pipeline_never_slows_fine_sim() {
+    check_cfg("pipeline monotone", Config { cases: 24, seed: 0x91 }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 1;
+        let t = *rng.choose(&TemplateId::fpga_pool());
+        let g1 = t.build(m, &cfg).map_err(|e| e.to_string())?;
+        let f1 = simulate(&g1, 0.0, false).map_err(|e| e.to_string())?;
+        cfg.pipeline = *rng.choose(&[2u64, 4, 8]);
+        let g2 = t.build(m, &cfg).map_err(|e| e.to_string())?;
+        let f2 = simulate(&g2, 0.0, false).map_err(|e| e.to_string())?;
+        // Allow a small tolerance for per-state control-cycle overhead.
+        prop_assert!(
+            f2.cycles as f64 <= f1.cycles as f64 * 1.05,
+            "{} pipeline {} slowed {} -> {}",
+            t.name(),
+            cfg.pipeline,
+            f1.cycles,
+            f2.cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resources_monotone_in_unroll() {
+    check_cfg("resource monotone", Config { cases: 32, seed: 0x5e5 }, |rng, _| {
+        let m = zoo::by_name("SK8").unwrap();
+        let mut cfg = HwConfig::ultra96_default();
+        let u1 = rng.range(16, 256);
+        let u2 = u1 + rng.range(8, 256);
+        cfg.unroll = u1;
+        let t = *rng.choose(&TemplateId::fpga_pool());
+        let r1 = predict_coarse(&t.build(&m, &cfg).map_err(|e| e.to_string())?, &cfg.tech)
+            .map_err(|e| e.to_string())?;
+        cfg.unroll = u2;
+        let r2 = predict_coarse(&t.build(&m, &cfg).map_err(|e| e.to_string())?, &cfg.tech)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(r2.resources.dsp >= r1.resources.dsp, "dsp not monotone");
+        prop_assert!(r2.resources.multipliers > r1.resources.multipliers);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_at_16bit() {
+    check_cfg("quant bound", Config { cases: 12, seed: 0x0B17 }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let weights =
+            autodnnchip::funcsim::init_weights(m, rng.next_u64()).map_err(|e| e.to_string())?;
+        let input = autodnnchip::funcsim::Tensor::random(m.input, rng, 1.0);
+        let yf = autodnnchip::funcsim::run(m, &weights, &input, autodnnchip::funcsim::Mode::Float)
+            .map_err(|e| e.to_string())?;
+        let yq = autodnnchip::funcsim::run(
+            m,
+            &weights,
+            &input,
+            autodnnchip::funcsim::Mode::Quantized(Precision::new(16, 16)),
+        )
+        .map_err(|e| e.to_string())?;
+        let gold = yf.last().unwrap();
+        let scale = gold.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
+        let d = autodnnchip::funcsim::max_abs_diff(gold, yq.last().unwrap());
+        prop_assert!(d / scale < 0.02, "{}: rel err {} too large for 16-bit", m.name, d / scale);
+        Ok(())
+    });
+}

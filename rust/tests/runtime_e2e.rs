@@ -1,0 +1,96 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the python
+//! (JAX/Pallas) layer and the rust layer must compute the same functions.
+//!
+//! These tests skip gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use autodnnchip::dnn::zoo;
+use autodnnchip::funcsim::{self, Mode, Tensor};
+use autodnnchip::runtime::Runtime;
+use autodnnchip::util::rng::Rng;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn matmul_artifact_matches_rust() {
+    let Some(rt) = artifacts() else { return };
+    let loaded = rt.load("matmul_tile").expect("load matmul");
+    let (m, k) = (64usize, 96usize);
+    let n = 80usize;
+    let mut rng = Rng::new(123);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.f64() as f32 - 0.5).collect();
+    let y: Vec<f32> = (0..k * n).map(|_| rng.f64() as f32 - 0.5).collect();
+    let out = loaded.run_f32(&[x.clone(), y.clone()]).expect("run");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m * n);
+    // Rust-side reference.
+    let mut expect = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += x[i * k + kk] * y[kk * n + j];
+            }
+            expect[i * n + j] = acc;
+        }
+    }
+    let max_diff = out[0]
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas-kernel artifact diverges: {max_diff}");
+}
+
+#[test]
+fn skynet_tiny_artifact_matches_funcsim_float() {
+    // The end-to-end functional sign-off: the JAX model (with Pallas
+    // kernels, baked weights) executed via PJRT must agree with the rust
+    // funcsim float reference using the shared weight stream.
+    let Some(rt) = artifacts() else { return };
+    let loaded = rt.load("skynet_tiny").expect("load skynet_tiny");
+    let model = zoo::skynet_tiny();
+    let weights = funcsim::init_weights(&model, 0xE2E).expect("weights");
+    let input = Tensor::random(model.input, &mut Rng::new(7), 1.0);
+    let outs = loaded.run_f32(&[input.data.clone()]).expect("run");
+    let rust_out = funcsim::run(&model, &weights, &input, Mode::Float).expect("funcsim");
+    let golden = &rust_out.last().unwrap().data;
+    assert_eq!(outs[0].len(), golden.len(), "output numel mismatch");
+    let max_diff = outs[0]
+        .iter()
+        .zip(golden)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let scale = golden.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
+    assert!(
+        max_diff / scale < 1e-4,
+        "cross-language divergence: max_diff={max_diff}, scale={scale}"
+    );
+}
+
+#[test]
+fn conv_block_artifact_runs() {
+    let Some(rt) = artifacts() else { return };
+    let loaded = rt.load("conv_block").expect("load");
+    let numel = 16 * 16 * 32;
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..numel).map(|_| rng.f64() as f32 - 0.5).collect();
+    let out = loaded.run_f32(&[x]).expect("run");
+    assert_eq!(out[0].len(), 32 * 16 * 32);
+    // ReLU'd output: non-negative.
+    assert!(out[0].iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = artifacts() else { return };
+    assert!(rt.load("nope").is_err());
+}
