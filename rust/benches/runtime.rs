@@ -30,10 +30,14 @@ fn main() {
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("(artifacts not built — skipping PJRT benches; run `make artifacts`)");
+        println!("(artifacts not built — skipping PJRT benches; python -m compile.aot --out rust/artifacts)");
         return;
     }
     let rt = Runtime::new(&dir).unwrap();
+    if !rt.execution_available() {
+        println!("(PJRT execution unavailable under the in-tree xla fallback — skipping PJRT benches)");
+        return;
+    }
     let tiny = rt.load("skynet_tiny").unwrap();
     b.run("pjrt_exec/skynet_tiny", || tiny.run_f32(&[input.data.clone()]).unwrap().len());
     let mm = rt.load("matmul_tile").unwrap();

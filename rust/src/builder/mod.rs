@@ -1,0 +1,136 @@
+//! The Chip Builder (paper §6): two-stage design-space exploration plus a
+//! PnR feasibility gate, producing optimized accelerator designs ready for
+//! RTL generation.
+//!
+//! * [`spec`] — target specification ([`Spec`], [`Backend`], [`Objective`])
+//!   and the stage-1 enumeration grid ([`SweepGrid`]).
+//! * [`stage1`](mod@stage1) — coarse-mode sweep over the grid (parallel,
+//!   deterministic), budget filtering, top-N₂ selection.
+//! * [`stage2`](mod@stage2) — Algorithm-2 inter-IP pipeline co-optimization
+//!   driven by the fine-grained run-time simulation.
+//! * [`pnr`] — deterministic placement-and-route feasibility model
+//!   (utilization-driven derating on FPGA, wire load on ASIC).
+//!
+//! [`build_accelerator`] runs the whole flow; `coordinator::run` drives it
+//! from a config file into RTL emission and result artifacts.
+
+pub mod pnr;
+pub mod spec;
+pub mod stage1;
+pub mod stage2;
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::predictor::CoarseReport;
+use crate::templates::{HwConfig, TemplateId};
+
+pub use pnr::{pnr_check, PnrOutcome};
+pub use spec::{Backend, Objective, Spec, SweepGrid};
+pub use stage1::{stage1, Stage1Output, TracePoint};
+pub use stage2::{stage2, Stage2Report, Stage2Step};
+
+/// One design point carried between the builder's stages: a template
+/// instantiation, its configuration, the coarse prediction, and the best
+/// known fine-simulated latency (coarse estimate until stage 2 refines it).
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub template: TemplateId,
+    pub cfg: HwConfig,
+    pub coarse: CoarseReport,
+    pub fine_latency_ms: f64,
+}
+
+/// End-to-end Chip-Builder result.
+#[derive(Debug, Clone)]
+pub struct BuildOutput {
+    /// Stage-1 design points evaluated.
+    pub evaluated: usize,
+    /// Optimized designs that passed the final feasibility re-check and
+    /// the PnR gate, best first by the spec's objective, at most N_opt.
+    pub survivors: Vec<Candidate>,
+    /// One report per stage-1 selection, in selection order.
+    pub stage2_reports: Vec<Stage2Report>,
+}
+
+/// Run the full flow — stage-1 sweep over the default grid for the spec's
+/// back-end, stage-2 co-optimization of the N₂ survivors, PnR gating —
+/// and keep the best `n_opt` designs.
+pub fn build_accelerator(model: &Model, spec: &Spec, n2: usize, n_opt: usize) -> Result<BuildOutput> {
+    let grid = SweepGrid::for_backend(&spec.backend);
+    build_accelerator_with_grid(model, spec, &grid, n2, n_opt)
+}
+
+/// [`build_accelerator`] with an explicit stage-1 grid (experiments pin
+/// sweep axes, e.g. the precision dictated by an accuracy requirement).
+pub fn build_accelerator_with_grid(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    n_opt: usize,
+) -> Result<BuildOutput> {
+    let s1 = stage1(model, spec, grid, n2)?;
+    let mut stage2_reports = Vec::with_capacity(s1.selected.len());
+    for cand in s1.selected {
+        stage2_reports.push(stage2(model, spec, cand)?);
+    }
+
+    // Rank the refined designs by the objective on their *fine* latency,
+    // then gate each through the feasibility re-check and the PnR model.
+    let mut order: Vec<usize> = (0..stage2_reports.len()).collect();
+    order.sort_by(|&a, &b| {
+        let score = |r: &Stage2Report| {
+            spec.objective_score(r.best.fine_latency_ms, r.best.coarse.energy_uj())
+        };
+        score(&stage2_reports[a])
+            .partial_cmp(&score(&stage2_reports[b]))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut survivors = Vec::new();
+    for i in order {
+        if survivors.len() >= n_opt {
+            break;
+        }
+        let best = &stage2_reports[i].best;
+        if spec.feasible(&best.coarse) && pnr_check(best, spec).passed() {
+            survivors.push(best.clone());
+        }
+    }
+    Ok(BuildOutput { evaluated: s1.evaluated, survivors, stage2_reports })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    #[test]
+    fn full_flow_respects_n_opt_and_orders_survivors() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let out = build_accelerator(&m, &spec, 3, 2).unwrap();
+        assert!(out.evaluated > 100);
+        assert!(out.stage2_reports.len() <= 3);
+        assert!(out.survivors.len() <= 2);
+        assert!(!out.survivors.is_empty(), "skynet_tiny must fit Ultra96");
+        for s in &out.survivors {
+            assert!(spec.feasible(&s.coarse));
+            assert!(pnr_check(s, &spec).passed());
+        }
+        for w in out.survivors.windows(2) {
+            let a = spec.objective_score(w[0].fine_latency_ms, w[0].coarse.energy_uj());
+            let b = spec.objective_score(w[1].fine_latency_ms, w[1].coarse.energy_uj());
+            assert!(a <= b);
+        }
+    }
+
+    #[test]
+    fn n_opt_one_returns_single_best() {
+        let m = zoo::shidiannao_benchmarks().remove(1);
+        let spec = Spec::asic_vision();
+        let out = build_accelerator(&m, &spec, 2, 1).unwrap();
+        assert!(out.survivors.len() <= 1);
+        assert_eq!(out.stage2_reports.len().min(2), out.stage2_reports.len());
+    }
+}

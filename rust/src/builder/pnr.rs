@@ -1,0 +1,192 @@
+//! Placement-and-route feasibility model (paper §6 Step III: survivors of
+//! the DSE are "verified by the Placing & Routing flow").
+//!
+//! No real PnR tool runs here; instead a deterministic analytical model
+//! captures the two dominant failure modes:
+//!
+//! * **FPGA** — congestion: timing closure degrades as fabric utilization
+//!   grows (derating ramps once any resource class passes ~60 %), with a
+//!   small routing penalty for deep inter-IP pipelines (more control nets)
+//!   and very wide buses (long routes). Over-budget designs fail outright.
+//! * **ASIC** — wire load: the achievable clock follows a wire-delay term
+//!   that grows with the die side (√area), on top of the gate-limited
+//!   period. Designs whose achieved clock falls too far below the target
+//!   fail timing.
+//!
+//! The model is a pure function of the candidate and spec, so outcomes are
+//! reproducible run to run (tested in `rust/tests/properties.rs`).
+
+use super::spec::{Backend, Spec};
+use super::Candidate;
+
+/// PnR verdict for one design.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PnrOutcome {
+    Pass {
+        /// Post-route clock the design closes timing at.
+        achieved_freq_mhz: f64,
+    },
+    Fail {
+        reason: String,
+        /// Best clock the model could close (0 when over budget).
+        achieved_freq_mhz: f64,
+    },
+}
+
+impl PnrOutcome {
+    pub fn passed(&self) -> bool {
+        matches!(self, PnrOutcome::Pass { .. })
+    }
+}
+
+/// Minimum fraction of the target clock an FPGA design must close at.
+const FPGA_TIMING_FLOOR: f64 = 0.70;
+/// Minimum fraction of the target clock an ASIC design must close at.
+const ASIC_TIMING_FLOOR: f64 = 0.60;
+/// Wire delay per mm of die side at the modeled 65 nm node (ns).
+const ASIC_WIRE_NS_PER_MM: f64 = 0.2;
+
+/// Run the deterministic PnR feasibility model on a candidate.
+pub fn pnr_check(cand: &Candidate, spec: &Spec) -> PnrOutcome {
+    let r = &cand.coarse.resources;
+    let target = cand.cfg.freq_mhz;
+    match &spec.backend {
+        Backend::Fpga { dsp, bram18k, lut, ff } => {
+            let ratios = [
+                r.dsp as f64 / (*dsp).max(1) as f64,
+                r.bram18k as f64 / (*bram18k).max(1) as f64,
+                r.lut as f64 / (*lut).max(1) as f64,
+                r.ff as f64 / (*ff).max(1) as f64,
+            ];
+            let util = ratios.iter().cloned().fold(0.0_f64, f64::max);
+            if util > 1.0 {
+                return PnrOutcome::Fail {
+                    reason: format!("unroutable: {:.0}% of the most-utilized resource", util * 100.0),
+                    achieved_freq_mhz: 0.0,
+                };
+            }
+            // Congestion derating: full speed below 60 % utilization,
+            // linear down to 80 % of target when the fabric is full.
+            let derate = 1.0 - 0.20 * ((util - 0.6).max(0.0) / 0.4);
+            // Routing pressure from control-net fan-out and long routes.
+            let routing = 1.0
+                + 0.005 * (cand.cfg.pipeline as f64).log2().max(0.0)
+                + 0.010 * (cand.cfg.bus_bits as f64 / 512.0);
+            let achieved_freq_mhz = target * derate / routing;
+            if achieved_freq_mhz < FPGA_TIMING_FLOOR * target {
+                PnrOutcome::Fail {
+                    reason: format!(
+                        "timing: closed at {achieved_freq_mhz:.1} MHz vs {target:.0} MHz target"
+                    ),
+                    achieved_freq_mhz,
+                }
+            } else {
+                PnrOutcome::Pass { achieved_freq_mhz }
+            }
+        }
+        Backend::Asic { sram_kb, macs } => {
+            if r.multipliers > *macs || r.sram_kb > *sram_kb {
+                return PnrOutcome::Fail {
+                    reason: format!(
+                        "over budget: {} multipliers / {:.0} KB SRAM vs {} / {:.0}",
+                        r.multipliers, r.sram_kb, macs, sram_kb
+                    ),
+                    achieved_freq_mhz: 0.0,
+                };
+            }
+            let side_mm = r.area_mm2.max(1.0e-2).sqrt();
+            let period_ns = 1.0e3 / target + ASIC_WIRE_NS_PER_MM * side_mm;
+            let achieved_freq_mhz = 1.0e3 / period_ns;
+            if achieved_freq_mhz < ASIC_TIMING_FLOOR * target {
+                PnrOutcome::Fail {
+                    reason: format!(
+                        "wire load: {side_mm:.2} mm die side closes at {achieved_freq_mhz:.0} MHz"
+                    ),
+                    achieved_freq_mhz,
+                }
+            } else {
+                PnrOutcome::Pass { achieved_freq_mhz }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::Spec;
+    use crate::dnn::zoo;
+    use crate::predictor::predict_coarse;
+    use crate::templates::{HwConfig, TemplateId};
+
+    fn fpga_candidate() -> Candidate {
+        let m = zoo::by_name("SK8").unwrap();
+        let cfg = HwConfig::ultra96_default();
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        Candidate { template: TemplateId::Hetero, fine_latency_ms: coarse.latency_ms, cfg, coarse }
+    }
+
+    fn asic_candidate() -> Candidate {
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        let mut cfg = HwConfig::asic_default();
+        // Fit the Table-9 budget: 48 MACs + 3 address decoders < 64, and
+        // 48 + 48 + 24 KB of SRAM < 128 KB.
+        cfg.unroll = 48;
+        cfg.act_buf_bits = 48 * 8 * 1024;
+        cfg.w_buf_bits = 48 * 8 * 1024;
+        let g = TemplateId::ShiDianNao.build(&m, &cfg).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        Candidate {
+            template: TemplateId::ShiDianNao,
+            fine_latency_ms: coarse.latency_ms,
+            cfg,
+            coarse,
+        }
+    }
+
+    #[test]
+    fn expert_fpga_design_closes_timing() {
+        let cand = fpga_candidate();
+        match pnr_check(&cand, &Spec::ultra96_object_detection()) {
+            PnrOutcome::Pass { achieved_freq_mhz } => {
+                assert!(achieved_freq_mhz > 0.0);
+                assert!(achieved_freq_mhz <= cand.cfg.freq_mhz);
+            }
+            PnrOutcome::Fail { reason, .. } => panic!("expert design failed PnR: {reason}"),
+        }
+    }
+
+    #[test]
+    fn over_budget_fails() {
+        let cand = fpga_candidate();
+        let tiny = Spec {
+            backend: crate::builder::Backend::Fpga { dsp: 8, bram18k: 8, lut: 100, ff: 100 },
+            ..Spec::ultra96_object_detection()
+        };
+        assert!(!pnr_check(&cand, &tiny).passed());
+    }
+
+    #[test]
+    fn asic_wire_load_derates_but_passes_budgeted_design() {
+        let cand = asic_candidate();
+        match pnr_check(&cand, &Spec::asic_vision()) {
+            PnrOutcome::Pass { achieved_freq_mhz } => {
+                // Wire load must bite (below target) but stay above floor.
+                assert!(achieved_freq_mhz < cand.cfg.freq_mhz);
+                assert!(achieved_freq_mhz >= ASIC_TIMING_FLOOR * cand.cfg.freq_mhz);
+            }
+            PnrOutcome::Fail { reason, .. } => panic!("budgeted ASIC failed PnR: {reason}"),
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cand = fpga_candidate();
+        let spec = Spec::ultra96_object_detection();
+        assert_eq!(pnr_check(&cand, &spec), pnr_check(&cand, &spec));
+        let a = asic_candidate();
+        let aspec = Spec::asic_vision();
+        assert_eq!(pnr_check(&a, &aspec), pnr_check(&a, &aspec));
+    }
+}

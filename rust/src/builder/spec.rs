@@ -1,0 +1,279 @@
+//! Target specification (paper Table 9) and the stage-1 sweep grid
+//! (paper Table 1's design factors: IP template, precision, unrolling,
+//! buffer volumes, bus width, inter-IP pipeline depth).
+
+use crate::ip::tech;
+use crate::ip::{Precision, Technology};
+use crate::predictor::{CoarseReport, Resources};
+use crate::templates::{HwConfig, PeStyle, TemplateId};
+
+/// Implementation back-end and its resource budget.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Backend {
+    /// FPGA device budget (Ultra96: 360 DSP48E2, 432 BRAM18K, 70,560 LUTs,
+    /// 141,120 FFs).
+    Fpga { dsp: usize, bram18k: usize, lut: usize, ff: usize },
+    /// ASIC budget (paper Table 9: 128 KB SRAM, 64 MACs at 1 GHz / 65 nm).
+    Asic { sram_kb: f64, macs: usize },
+}
+
+impl Backend {
+    /// The technology node designs for this back-end are costed with.
+    pub fn tech(&self) -> Technology {
+        match self {
+            Backend::Fpga { .. } => tech::fpga_ultra96(),
+            Backend::Asic { .. } => tech::asic_65nm_1ghz(),
+        }
+    }
+
+    /// Does a coarse resource accounting (Eqs. 5–6) fit this budget?
+    pub fn fits(&self, r: &Resources) -> bool {
+        match self {
+            Backend::Fpga { dsp, bram18k, lut, ff } => {
+                r.dsp <= *dsp && r.bram18k <= *bram18k && r.lut <= *lut && r.ff <= *ff
+            }
+            Backend::Asic { sram_kb, macs } => r.multipliers <= *macs && r.sram_kb <= *sram_kb,
+        }
+    }
+}
+
+/// Optimization objective of the DSE (paper §6: "optimizing a designated
+/// metric under constraints").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Latency,
+    Energy,
+    /// Energy-delay product.
+    Edp,
+}
+
+/// One Chip-Builder target: back-end budget, application constraints and
+/// the metric to optimize.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub backend: Backend,
+    /// Throughput requirement in frames/s.
+    pub min_fps: f64,
+    /// Power budget in mW.
+    pub max_power_mw: f64,
+    pub objective: Objective,
+}
+
+impl Spec {
+    /// Paper Table 9 row 1: Ultra96 object detection (DAC-SDC) — 20 FPS,
+    /// 10 W, the full ZU3EG fabric.
+    pub fn ultra96_object_detection() -> Spec {
+        Spec {
+            backend: Backend::Fpga { dsp: 360, bram18k: 432, lut: 70_560, ff: 141_120 },
+            min_fps: 20.0,
+            max_power_mw: 10_000.0,
+            objective: Objective::Latency,
+        }
+    }
+
+    /// Paper Table 9 row 2: sensor-side ASIC vision under the
+    /// ShiDianNao-class budget — 15 FPS, 600 mW, 128 KB SRAM, 64 MACs at
+    /// 1 GHz / 65 nm, optimizing energy-delay product.
+    pub fn asic_vision() -> Spec {
+        Spec {
+            backend: Backend::Asic { sram_kb: 128.0, macs: 64 },
+            min_fps: 15.0,
+            max_power_mw: 600.0,
+            objective: Objective::Edp,
+        }
+    }
+
+    /// Stage-1 feasibility filter: the coarse prediction must fit the
+    /// resource budget and meet the throughput and power constraints.
+    pub fn feasible(&self, c: &CoarseReport) -> bool {
+        self.backend.fits(&c.resources)
+            && c.fps() >= self.min_fps
+            && c.avg_power_mw() <= self.max_power_mw
+    }
+
+    /// Scalar score of a design under this spec's objective — lower is
+    /// better.
+    pub fn objective_score(&self, latency_ms: f64, energy_uj: f64) -> f64 {
+        match self.objective {
+            Objective::Latency => latency_ms,
+            Objective::Energy => energy_uj,
+            Objective::Edp => energy_uj * latency_ms,
+        }
+    }
+}
+
+/// Stage-1 enumeration grid over the Table-1 design factors. All axes are
+/// public so experiments can pin factors (e.g. Fig. 11 fixes the precision
+/// at `<11,9>` because the accuracy requirement dictates it).
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub templates: Vec<TemplateId>,
+    pub precisions: Vec<Precision>,
+    pub unrolls: Vec<usize>,
+    pub act_buf_bits: Vec<u64>,
+    pub w_buf_bits: Vec<u64>,
+    pub bus_bits: Vec<usize>,
+    pub pipelines: Vec<u64>,
+    /// Technology node every point is costed with.
+    pub tech: Technology,
+}
+
+impl SweepGrid {
+    /// The default grid for a back-end: the template pool of paper Fig. 4
+    /// crossed with precision / unroll / buffer / bus / pipeline axes sized
+    /// so the sweep brackets the budget (infeasible points are kept as
+    /// trace entries — they are the grey cloud of Fig. 11/14).
+    pub fn for_backend(backend: &Backend) -> SweepGrid {
+        match backend {
+            Backend::Fpga { .. } => SweepGrid {
+                templates: TemplateId::fpga_pool(),
+                precisions: vec![
+                    Precision::new(8, 8),
+                    Precision::new(11, 9),
+                    Precision::new(16, 16),
+                ],
+                unrolls: vec![64, 128, 256, 320],
+                act_buf_bits: vec![1 << 20, 2 << 20],
+                w_buf_bits: vec![1 << 20, 2 << 20],
+                bus_bits: vec![64, 128],
+                pipelines: vec![1, 2, 4],
+                tech: tech::fpga_ultra96(),
+            },
+            Backend::Asic { .. } => SweepGrid {
+                templates: TemplateId::asic_pool(),
+                precisions: vec![Precision::new(8, 8), Precision::new(16, 16)],
+                // 64-MAC budget minus per-memory address decoders (Eq. 6).
+                unrolls: vec![16, 32, 48, 56],
+                act_buf_bits: vec![16 * 8 * 1024, 32 * 8 * 1024, 48 * 8 * 1024],
+                w_buf_bits: vec![16 * 8 * 1024, 32 * 8 * 1024, 48 * 8 * 1024],
+                bus_bits: vec![32, 64],
+                pipelines: vec![1, 2, 4],
+                tech: tech::asic_65nm_1ghz(),
+            },
+        }
+    }
+
+    /// Number of design points the grid enumerates.
+    pub fn len(&self) -> usize {
+        self.templates.len()
+            * self.precisions.len()
+            * self.unrolls.len()
+            * self.act_buf_bits.len()
+            * self.w_buf_bits.len()
+            * self.bus_bits.len()
+            * self.pipelines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize every grid point as a `(template, configuration)` pair,
+    /// in deterministic axis order.
+    pub fn points(&self) -> Vec<(TemplateId, HwConfig)> {
+        let mut out = Vec::with_capacity(self.len());
+        for &template in &self.templates {
+            for &prec in &self.precisions {
+                for &unroll in &self.unrolls {
+                    for &act in &self.act_buf_bits {
+                        for &w in &self.w_buf_bits {
+                            for &bus in &self.bus_bits {
+                                for &pipeline in &self.pipelines {
+                                    out.push((
+                                        template,
+                                        HwConfig {
+                                            tech: self.tech.clone(),
+                                            freq_mhz: self.tech.default_freq_mhz,
+                                            prec,
+                                            unroll,
+                                            act_buf_bits: act,
+                                            w_buf_bits: w,
+                                            bus_bits: bus,
+                                            pipeline,
+                                            pe_style: PeStyle::Forwarding,
+                                        },
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::predict_coarse;
+
+    #[test]
+    fn table9_constructors() {
+        let f = Spec::ultra96_object_detection();
+        assert!(matches!(
+            f.backend,
+            Backend::Fpga { dsp: 360, bram18k: 432, lut: 70_560, ff: 141_120 }
+        ));
+        assert_eq!(f.min_fps, 20.0);
+        assert_eq!(f.objective, Objective::Latency);
+
+        let a = Spec::asic_vision();
+        assert!(matches!(a.backend, Backend::Asic { macs: 64, .. }));
+        assert_eq!(a.min_fps, 15.0);
+        assert_eq!(a.max_power_mw, 600.0);
+        assert_eq!(a.objective, Objective::Edp);
+    }
+
+    #[test]
+    fn feasibility_matches_budget() {
+        let m = zoo::by_name("SK8").unwrap();
+        let cfg = HwConfig::ultra96_default();
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let c = predict_coarse(&g, &cfg.tech).unwrap();
+        assert!(Spec::ultra96_object_detection().feasible(&c), "expert default must fit Ultra96");
+        // A starved budget rules the same design out.
+        let tight = Spec {
+            backend: Backend::Fpga { dsp: 4, bram18k: 4, lut: 500, ff: 500 },
+            min_fps: 20.0,
+            max_power_mw: 10_000.0,
+            objective: Objective::Latency,
+        };
+        assert!(!tight.feasible(&c));
+        // An impossible throughput floor too.
+        let mut fast = Spec::ultra96_object_detection();
+        fast.min_fps = 1.0e9;
+        assert!(!fast.feasible(&c));
+    }
+
+    #[test]
+    fn objective_scores_order_designs() {
+        let spec = Spec { objective: Objective::Edp, ..Spec::ultra96_object_detection() };
+        // (latency, energy): EDP trades the two.
+        assert!(spec.objective_score(2.0, 3.0) < spec.objective_score(4.0, 2.0));
+        let lat = Spec::ultra96_object_detection();
+        assert!(lat.objective_score(1.0, 99.0) < lat.objective_score(2.0, 1.0));
+    }
+
+    #[test]
+    fn grid_len_matches_points_and_is_substantial() {
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let grid = SweepGrid::for_backend(&spec.backend);
+            assert_eq!(grid.len(), grid.points().len());
+            assert!(grid.len() > 100, "grid too small: {}", grid.len());
+            assert!(!grid.is_empty());
+        }
+    }
+
+    #[test]
+    fn pinning_precision_shrinks_grid() {
+        let spec = Spec::ultra96_object_detection();
+        let full = SweepGrid::for_backend(&spec.backend);
+        let mut pinned = SweepGrid::for_backend(&spec.backend);
+        pinned.precisions = vec![Precision::new(11, 9)];
+        assert_eq!(pinned.len() * full.precisions.len(), full.len());
+        assert!(pinned.points().iter().all(|(_, c)| c.prec == Precision::new(11, 9)));
+    }
+}

@@ -1,0 +1,186 @@
+//! Stage 1 of the Chip Builder (paper §6, Algorithm 2 lines 1–4): enumerate
+//! the template/IP design space, predict every point with the coarse
+//! analytical mode, filter against the resource/throughput/power budget and
+//! keep the best N₂ candidates for stage-2 refinement.
+//!
+//! The sweep is embarrassingly parallel and runs over the coordinator's
+//! worker pool; results are order-preserving, so stage 1 is deterministic
+//! regardless of worker count.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Pool;
+use crate::dnn::Model;
+use crate::predictor::{predict_coarse, CoarseReport};
+use crate::templates::{HwConfig, TemplateId};
+
+use super::spec::{Spec, SweepGrid};
+use super::Candidate;
+
+/// One evaluated grid point, kept for the Fig. 11/14 design-cloud scatter.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub template: TemplateId,
+    pub energy_uj: f64,
+    pub latency_ms: f64,
+    pub feasible: bool,
+}
+
+/// Stage-1 sweep result.
+#[derive(Debug, Clone)]
+pub struct Stage1Output {
+    /// Grid points evaluated (paper's N₁).
+    pub evaluated: usize,
+    /// Points that met every constraint.
+    pub feasible: usize,
+    /// One point per evaluation, in grid order.
+    pub trace: Vec<TracePoint>,
+    /// Top-N₂ feasible candidates by the spec's objective, best first.
+    pub selected: Vec<Candidate>,
+}
+
+/// Per-point evaluation shipped back from the worker pool.
+struct Eval {
+    template: TemplateId,
+    cfg: HwConfig,
+    /// Kept only for feasible points (stage-2 inputs).
+    coarse: Option<CoarseReport>,
+    energy_uj: f64,
+    latency_ms: f64,
+    feasible: bool,
+}
+
+/// Run the stage-1 sweep: build each grid point's graph, predict it with
+/// the coarse mode, filter, and select the top `n2` by objective.
+pub fn stage1(model: &Model, spec: &Spec, grid: &SweepGrid, n2: usize) -> Result<Stage1Output> {
+    // Validate the model once up front so per-point failures can only mean
+    // "this configuration cannot realize the model", not "bad model".
+    model.stats()?;
+
+    let points = grid.points();
+    let evaluated = points.len();
+    let pool = Pool::default_size();
+    let shared_model = Arc::new(model.clone());
+    let shared_spec = spec.clone();
+    let evals: Vec<Eval> = pool.map(points, move |(template, cfg)| {
+        let predicted =
+            template.build(&shared_model, &cfg).and_then(|g| predict_coarse(&g, &cfg.tech));
+        match predicted {
+            Ok(c) => {
+                let feasible = shared_spec.feasible(&c);
+                let energy_uj = c.energy_uj();
+                let latency_ms = c.latency_ms;
+                Eval { template, cfg, coarse: feasible.then_some(c), energy_uj, latency_ms, feasible }
+            }
+            // A config the template cannot realize is an infeasible point,
+            // not a sweep-level error.
+            Err(_) => Eval {
+                template,
+                cfg,
+                coarse: None,
+                energy_uj: f64::INFINITY,
+                latency_ms: f64::INFINITY,
+                feasible: false,
+            },
+        }
+    });
+
+    let feasible = evals.iter().filter(|e| e.feasible).count();
+    let trace: Vec<TracePoint> = evals
+        .iter()
+        .map(|e| TracePoint {
+            template: e.template,
+            energy_uj: e.energy_uj,
+            latency_ms: e.latency_ms,
+            feasible: e.feasible,
+        })
+        .collect();
+
+    let mut selected: Vec<Candidate> = evals
+        .into_iter()
+        .filter_map(|e| {
+            let coarse = e.coarse?;
+            Some(Candidate {
+                template: e.template,
+                cfg: e.cfg,
+                // Refined by stage-2 fine simulation; the coarse value is
+                // the best estimate available after stage 1.
+                fine_latency_ms: coarse.latency_ms,
+                coarse,
+            })
+        })
+        .collect();
+    selected.sort_by(|a, b| {
+        let sa = spec.objective_score(a.coarse.latency_ms, a.coarse.energy_uj());
+        let sb = spec.objective_score(b.coarse.latency_ms, b.coarse.energy_uj());
+        sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    selected.truncate(n2);
+
+    Ok(Stage1Output { evaluated, feasible, trace, selected })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::{Backend, Objective};
+    use crate::dnn::zoo;
+
+    #[test]
+    fn sweep_invariants_hold() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let s1 = stage1(&m, &spec, &grid, 3).unwrap();
+        assert_eq!(s1.evaluated, grid.len());
+        assert_eq!(s1.trace.len(), s1.evaluated);
+        assert!(s1.feasible <= s1.evaluated);
+        assert_eq!(s1.trace.iter().filter(|p| p.feasible).count(), s1.feasible);
+        assert!(s1.selected.len() <= 3);
+        assert!(!s1.selected.is_empty(), "Ultra96 must fit skynet_tiny");
+        for c in &s1.selected {
+            assert!(spec.feasible(&c.coarse));
+        }
+        // Best-first by the objective.
+        for w in s1.selected.windows(2) {
+            let a = spec.objective_score(w[0].coarse.latency_ms, w[0].coarse.energy_uj());
+            let b = spec.objective_score(w[1].coarse.latency_ms, w[1].coarse.energy_uj());
+            assert!(a <= b, "selected not sorted: {a} > {b}");
+        }
+    }
+
+    #[test]
+    fn impossible_budget_selects_nothing() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec {
+            backend: Backend::Fpga { dsp: 1, bram18k: 1, lut: 10, ff: 10 },
+            min_fps: 1.0e9,
+            max_power_mw: 0.001,
+            objective: Objective::Latency,
+        };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let s1 = stage1(&m, &spec, &grid, 4).unwrap();
+        assert_eq!(s1.feasible, 0);
+        assert!(s1.selected.is_empty());
+        assert!(s1.evaluated > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        let spec = Spec::asic_vision();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let a = stage1(&m, &spec, &grid, 4).unwrap();
+        let b = stage1(&m, &spec, &grid, 4).unwrap();
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(a.selected.len(), b.selected.len());
+        for (x, y) in a.selected.iter().zip(&b.selected) {
+            assert_eq!(x.template, y.template);
+            assert_eq!(x.cfg.unroll, y.cfg.unroll);
+            assert_eq!(x.cfg.pipeline, y.cfg.pipeline);
+            assert_eq!(x.coarse.latency_cycles, y.coarse.latency_cycles);
+        }
+    }
+}

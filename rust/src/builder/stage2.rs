@@ -1,0 +1,283 @@
+//! Stage 2 of the Chip Builder (paper §6, Algorithm 2): iterative inter-IP
+//! pipeline co-optimization driven by the fine-grained run-time simulation.
+//!
+//! Each iteration simulates the current design, identifies the bottleneck
+//! IP from the per-IP busy/idle accounting, and tries a small set of
+//! rebalancing moves (deeper inter-IP pipelining, wider bus, bigger
+//! activation/weight buffers). The best feasible improving move is
+//! accepted; the loop stops at a fixed point (no move improves latency by
+//! more than `MIN_REL_GAIN`) or after `MAX_ITERS` iterations.
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::graph::{Graph, NodeId};
+use crate::predictor::{predict_coarse, simulate_prevalidated, CoarseReport, FineReport};
+use crate::templates::{HwConfig, TemplateId};
+
+use super::spec::Spec;
+use super::stage1::TracePoint;
+use super::Candidate;
+
+/// Co-optimization iteration cap (Algorithm 2's outer loop).
+const MAX_ITERS: usize = 10;
+/// Minimum relative latency gain for a move to be accepted; below this the
+/// loop has reached its fixed point.
+const MIN_REL_GAIN: f64 = 1.0e-3;
+
+/// One rebalancing move tried during the co-optimization.
+#[derive(Debug, Clone)]
+pub struct Stage2Step {
+    /// Iteration index the move was tried in.
+    pub iter: usize,
+    /// Name of the bottleneck IP the iteration targeted.
+    pub bottleneck: String,
+    /// Human-readable description of the move.
+    pub action: String,
+    pub latency_ms_before: f64,
+    /// Fine-simulated latency with the move applied (infinite when the
+    /// move was infeasible or failed to build).
+    pub latency_ms_after: f64,
+    /// Whether this move was the accepted one of its iteration.
+    pub accepted: bool,
+}
+
+/// Stage-2 result for one candidate.
+#[derive(Debug, Clone)]
+pub struct Stage2Report {
+    /// Fine-simulated latency of the unoptimized stage-1 candidate.
+    pub initial_latency_ms: f64,
+    /// The co-optimized design (coarse report and `fine_latency_ms`
+    /// refreshed for the final configuration).
+    pub best: Candidate,
+    /// The final design as a trace point (for the Fig. 11 scatter).
+    pub final_point: TracePoint,
+    /// Every move tried, in order.
+    pub steps: Vec<Stage2Step>,
+    /// Busy/idle cycles of the bottleneck IP before and after the
+    /// co-optimization (paper Fig. 12's metric). The node identified on
+    /// the initial simulation is tracked through to the final one.
+    pub bottleneck_busy_before: u64,
+    pub bottleneck_idle_before: u64,
+    pub bottleneck_busy_after: u64,
+    pub bottleneck_idle_after: u64,
+}
+
+/// A fully evaluated design point: graph plus both predictor modes.
+struct EvalPoint {
+    graph: Graph,
+    coarse: CoarseReport,
+    fine: FineReport,
+}
+
+/// Build and predict one design point. Structural validation runs once on
+/// the initial candidate (`validate = true`); move evaluations skip it —
+/// template output validity does not depend on the configuration, and
+/// `simulate_prevalidated` still detects deadlocks rather than hanging.
+fn evaluate(model: &Model, template: TemplateId, cfg: &HwConfig, validate: bool) -> Result<EvalPoint> {
+    let graph = template.build(model, cfg)?;
+    if validate {
+        graph.validate()?;
+    }
+    let coarse = predict_coarse(&graph, &cfg.tech)?;
+    let fine = simulate_prevalidated(&graph, cfg.tech.costs.leakage_mw, false)?;
+    Ok(EvalPoint { graph, coarse, fine })
+}
+
+/// The throughput-limiting IP: the computation IP with the most busy
+/// cycles (its idle cycles are what the co-optimization squeezes out).
+/// Falls back to the fine report's min-idle node for graphs without
+/// computation IPs.
+fn throughput_bottleneck(g: &Graph, fine: &FineReport) -> NodeId {
+    g.nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.class.is_compute())
+        .max_by_key(|&(i, _)| fine.per_node[i].busy_cycles)
+        .map(|(i, _)| i)
+        .unwrap_or(fine.bottleneck)
+}
+
+/// Rebalancing moves applicable to a configuration. Resource effects are
+/// checked by the caller against the spec, so moves only bound themselves
+/// by sanity caps.
+fn candidate_moves(cfg: &HwConfig) -> Vec<(String, HwConfig)> {
+    let mut out = Vec::new();
+    if cfg.pipeline < 64 {
+        let mut c = cfg.clone();
+        c.pipeline = cfg.pipeline * 2;
+        out.push((format!("pipeline {} -> {}", cfg.pipeline, c.pipeline), c));
+    }
+    if cfg.bus_bits < 512 {
+        let mut c = cfg.clone();
+        c.bus_bits = cfg.bus_bits * 2;
+        out.push((format!("bus {}b -> {}b", cfg.bus_bits, c.bus_bits), c));
+    }
+    if cfg.act_buf_bits < (32u64 << 20) {
+        let mut c = cfg.clone();
+        c.act_buf_bits = cfg.act_buf_bits * 2;
+        out.push((format!("act buffer -> {} Kib", c.act_buf_bits / 1024), c));
+    }
+    if cfg.w_buf_bits < (32u64 << 20) {
+        let mut c = cfg.clone();
+        c.w_buf_bits = cfg.w_buf_bits * 2;
+        out.push((format!("weight buffer -> {} Kib", c.w_buf_bits / 1024), c));
+    }
+    out
+}
+
+/// Run Algorithm 2 on one stage-1 candidate.
+pub fn stage2(model: &Model, spec: &Spec, cand: Candidate) -> Result<Stage2Report> {
+    let template = cand.template;
+    let initial = evaluate(model, template, &cand.cfg, true)?;
+    let bn = throughput_bottleneck(&initial.graph, &initial.fine);
+    let bottleneck_busy_before = initial.fine.per_node[bn].busy_cycles;
+    let bottleneck_idle_before = initial.fine.per_node[bn].idle_cycles;
+    let initial_latency_ms = initial.fine.latency_ms;
+
+    let mut best_cfg = cand.cfg.clone();
+    let mut best = initial;
+    let mut steps: Vec<Stage2Step> = Vec::new();
+
+    for iter in 0..MAX_ITERS {
+        let bn_now = throughput_bottleneck(&best.graph, &best.fine);
+        let bn_name = best.graph.nodes[bn_now].name.clone();
+        let before_ms = best.fine.latency_ms;
+
+        // Try every move; remember the best feasible one.
+        let mut chosen: Option<(usize, HwConfig, EvalPoint)> = None;
+        for (action, cfg) in candidate_moves(&best_cfg) {
+            let eval = match evaluate(model, template, &cfg, false) {
+                Ok(e) if spec.feasible(&e.coarse) => Some(e),
+                _ => None,
+            };
+            let after_ms = eval.as_ref().map(|e| e.fine.latency_ms).unwrap_or(f64::INFINITY);
+            steps.push(Stage2Step {
+                iter,
+                bottleneck: bn_name.clone(),
+                action,
+                latency_ms_before: before_ms,
+                latency_ms_after: after_ms,
+                accepted: false,
+            });
+            if let Some(e) = eval {
+                let improves_on_chosen = match &chosen {
+                    Some((_, _, c)) => e.fine.latency_ms < c.fine.latency_ms,
+                    None => true,
+                };
+                if improves_on_chosen {
+                    chosen = Some((steps.len() - 1, cfg, e));
+                }
+            }
+        }
+
+        match chosen {
+            Some((step_idx, cfg, e)) if e.fine.latency_ms < before_ms * (1.0 - MIN_REL_GAIN) => {
+                steps[step_idx].accepted = true;
+                best_cfg = cfg;
+                best = e;
+            }
+            // Fixed point: no move improves the pipeline any further.
+            _ => break,
+        }
+    }
+
+    let bottleneck_busy_after = best.fine.per_node[bn].busy_cycles;
+    let bottleneck_idle_after = best.fine.per_node[bn].idle_cycles;
+    let feasible = spec.feasible(&best.coarse);
+    let best = Candidate {
+        template,
+        cfg: best_cfg,
+        fine_latency_ms: best.fine.latency_ms,
+        coarse: best.coarse,
+    };
+    let final_point = TracePoint {
+        template,
+        energy_uj: best.coarse.energy_uj(),
+        latency_ms: best.fine_latency_ms,
+        feasible,
+    };
+    Ok(Stage2Report {
+        initial_latency_ms,
+        best,
+        final_point,
+        steps,
+        bottleneck_busy_before,
+        bottleneck_idle_before,
+        bottleneck_busy_after,
+        bottleneck_idle_after,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+
+    /// An un-pipelined expert-style starting candidate, as Fig. 12 uses.
+    fn unpipelined_candidate(m: &Model) -> Candidate {
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 1;
+        let g = TemplateId::Hetero.build(m, &cfg).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        Candidate {
+            template: TemplateId::Hetero,
+            fine_latency_ms: coarse.latency_ms,
+            cfg,
+            coarse,
+        }
+    }
+
+    #[test]
+    fn never_worse_than_initial_and_reports_consistent() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let rep = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        assert!(rep.best.fine_latency_ms <= rep.initial_latency_ms);
+        assert!((rep.final_point.latency_ms - rep.best.fine_latency_ms).abs() < 1e-12);
+        assert!(rep.final_point.feasible, "optimized design left the budget");
+        // Every accepted step must improve, and belong to distinct iters.
+        let accepted: Vec<_> = rep.steps.iter().filter(|s| s.accepted).collect();
+        for s in &accepted {
+            assert!(s.latency_ms_after < s.latency_ms_before, "{:?}", s.action);
+        }
+        for w in accepted.windows(2) {
+            assert!(w[0].iter < w[1].iter);
+        }
+    }
+
+    #[test]
+    fn unpipelined_start_gets_optimized() {
+        // From pipeline=1 the co-optimization must find real gains (the
+        // Fig. 12 premise) and cut the bottleneck's idle cycles.
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let rep = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        assert!(rep.steps.iter().any(|s| s.accepted), "no move accepted from pipeline=1");
+        let init = HwConfig::ultra96_default();
+        let moved = rep.best.cfg.pipeline != 1
+            || rep.best.cfg.bus_bits != init.bus_bits
+            || rep.best.cfg.act_buf_bits != init.act_buf_bits
+            || rep.best.cfg.w_buf_bits != init.w_buf_bits;
+        assert!(moved, "accepted a move but configuration unchanged");
+        assert!(
+            rep.bottleneck_idle_after <= rep.bottleneck_idle_before,
+            "idle grew: {} -> {}",
+            rep.bottleneck_idle_before,
+            rep.bottleneck_idle_after
+        );
+    }
+
+    #[test]
+    fn fixed_point_terminates() {
+        // Running stage 2 on its own output must converge immediately
+        // (no accepted moves the second time around, or only marginal
+        // leftovers) and never regress.
+        let m = zoo::shidiannao_benchmarks().remove(2);
+        let spec = Spec::ultra96_object_detection();
+        let first = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        let again = stage2(&m, &spec, first.best.clone()).unwrap();
+        assert!(again.best.fine_latency_ms <= first.best.fine_latency_ms * 1.0 + 1e-12);
+        assert!(again.steps.len() <= first.steps.len() + 4);
+    }
+}

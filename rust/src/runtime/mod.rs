@@ -17,6 +17,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+// PJRT compatibility layer: an in-tree stand-in for the `xla_extension`
+// bindings (not vendored in the offline build environment). HLO-text
+// artifacts are read and validated for real; execution reports itself
+// unavailable. See `xla.rs` for the swap-back-in path.
+mod xla;
+
 /// Artifact metadata (one entry of `artifacts/manifest.json`).
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -83,6 +89,14 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Whether the linked PJRT backend can execute artifacts. `false`
+    /// under the in-tree fallback, which parses and validates artifacts
+    /// but reports execution unavailable — execution-dependent tests and
+    /// benches skip when this is false.
+    pub fn execution_available(&self) -> bool {
+        xla::execution_available()
     }
 
     pub fn artifact_names(&self) -> Vec<String> {

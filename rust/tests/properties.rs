@@ -3,6 +3,9 @@
 //! graphs, models and configurations; every failure reports a reproducing
 //! seed.
 
+use autodnnchip::builder::{
+    build_accelerator, pnr_check, stage1, Candidate, PnrOutcome, Spec, SweepGrid,
+};
 use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
@@ -298,6 +301,82 @@ fn prop_quantization_error_bounded_at_16bit() {
         let scale = gold.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
         let d = autodnnchip::funcsim::max_abs_diff(gold, yq.last().unwrap());
         prop_assert!(d / scale < 0.02, "{}: rel err {} too large for 16-bit", m.name, d / scale);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stage1_feasible_subset_and_selection_bounded() {
+    // Chip-Builder stage-1 invariants: feasible points are a subset of the
+    // evaluated grid, the trace covers every point, and the selection is
+    // bounded by N2 and drawn from the feasible set.
+    check_cfg("stage1 invariants", Config { cases: 6, seed: 0xD5E1 }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec =
+            if rng.bool(0.5) { Spec::ultra96_object_detection() } else { Spec::asic_vision() };
+        let n2 = rng.range(1, 5);
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let s1 = stage1(m, &spec, &grid, n2).map_err(|e| e.to_string())?;
+        prop_assert!(s1.evaluated == grid.len(), "evaluated {} != grid {}", s1.evaluated, grid.len());
+        prop_assert!(s1.feasible <= s1.evaluated);
+        prop_assert!(s1.trace.len() == s1.evaluated);
+        let marked = s1.trace.iter().filter(|p| p.feasible).count();
+        prop_assert!(marked == s1.feasible, "trace marks {marked} vs {}", s1.feasible);
+        prop_assert!(s1.selected.len() <= n2);
+        prop_assert!(s1.selected.len() <= s1.feasible);
+        for c in &s1.selected {
+            prop_assert!(spec.feasible(&c.coarse), "selected candidate violates the budget");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pnr_check_is_deterministic() {
+    // The PnR feasibility model is a pure function: equal inputs yield
+    // byte-equal outcomes, and a passing clock never exceeds the target.
+    check_cfg("pnr deterministic", Config { cases: 16, seed: 0x9A12 }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec = Spec::ultra96_object_detection();
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.unroll = rng.range(16, 400);
+        cfg.pipeline = *rng.choose(&[1u64, 2, 8, 32]);
+        cfg.bus_bits = *rng.choose(&[64usize, 128, 256]);
+        let t = *rng.choose(&TemplateId::fpga_pool());
+        let g = t.build(m, &cfg).map_err(|e| e.to_string())?;
+        let coarse = predict_coarse(&g, &cfg.tech).map_err(|e| e.to_string())?;
+        let cand = Candidate { template: t, fine_latency_ms: coarse.latency_ms, cfg, coarse };
+        let a = pnr_check(&cand, &spec);
+        let b = pnr_check(&cand, &spec);
+        prop_assert!(a == b, "pnr_check not deterministic: {a:?} vs {b:?}");
+        if let PnrOutcome::Pass { achieved_freq_mhz } = a {
+            prop_assert!(achieved_freq_mhz > 0.0);
+            prop_assert!(achieved_freq_mhz <= cand.cfg.freq_mhz + 1e-9);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_build_accelerator_respects_n_opt() {
+    // The end-to-end flow never emits more designs than requested, and
+    // every survivor is feasible and passed the PnR gate.
+    check_cfg("n_opt bound", Config { cases: 3, seed: 0xB11D }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec = Spec::ultra96_object_detection();
+        let n2 = rng.range(1, 3);
+        let n_opt = rng.range(1, 2);
+        let out = build_accelerator(m, &spec, n2, n_opt).map_err(|e| e.to_string())?;
+        prop_assert!(out.survivors.len() <= n_opt);
+        prop_assert!(out.stage2_reports.len() <= n2);
+        for s in &out.survivors {
+            prop_assert!(spec.feasible(&s.coarse));
+            prop_assert!(matches!(pnr_check(s, &spec), PnrOutcome::Pass { .. }));
+            prop_assert!(s.fine_latency_ms.is_finite() && s.fine_latency_ms > 0.0);
+        }
         Ok(())
     });
 }

@@ -13,10 +13,15 @@ use autodnnchip::util::rng::Rng;
 fn artifacts() -> Option<Runtime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
+        eprintln!("skipping: export artifacts first (python -m compile.aot --out rust/artifacts)");
         return None;
     }
-    Some(Runtime::new(&dir).expect("runtime"))
+    let rt = Runtime::new(&dir).expect("runtime");
+    if !rt.execution_available() {
+        eprintln!("skipping: PJRT execution unavailable (in-tree xla fallback)");
+        return None;
+    }
+    Some(rt)
 }
 
 #[test]
