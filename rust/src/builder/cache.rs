@@ -1,0 +1,292 @@
+//! DSE result cache: a thread-safe memo table for stage-1 coarse
+//! predictions, keyed by (model fingerprint, template, configuration
+//! fingerprint).
+//!
+//! A coarse prediction depends only on the graph a template builds for a
+//! (model, configuration) pair — never on the target [`Spec`], which is
+//! applied as a filter *after* prediction — so one cache serves every
+//! budget, objective and N₂. Repeated experiment runs (the fig13
+//! 10-variant loop, ablation sweeps, repeated CLI builds in one process)
+//! re-enumerate the same grid points and hit near-free lookups; the
+//! `dse` bench measures the cold/warm gap and CI gates on it.
+//!
+//! Concurrency: the table is sharded 16 ways so the stage-1 worker pool
+//! does not serialize on one mutex. Lookups and insertions are
+//! lock-per-shard; hit/miss counters are lock-free atomics. A panicked
+//! worker cannot wedge the cache — poisoned shard locks are recovered
+//! (cached values are immutable once inserted, so a poisoned guard holds
+//! no torn state).
+//!
+//! [`Spec`]: super::Spec
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::dnn::Model;
+use crate::predictor::CoarseReport;
+use crate::templates::{HwConfig, TemplateId};
+
+/// Shard count (power of two; bounded lock contention at pool sizes ≤ 8).
+const SHARDS: usize = 16;
+/// Per-shard entry cap. The cache only accelerates — dropping it never
+/// changes results — so on overflow the shard is simply cleared instead of
+/// carrying an eviction policy.
+const SHARD_CAP: usize = 1 << 16;
+
+/// Cache key for one stage-1 design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`Model::fingerprint`] of the workload.
+    pub model_fp: u64,
+    /// Template that instantiates the point.
+    pub template: TemplateId,
+    /// [`HwConfig::fingerprint`] of the configuration (covers the full
+    /// technology cost table).
+    pub cfg_fp: u64,
+}
+
+impl CacheKey {
+    pub fn new(model_fp: u64, template: TemplateId, cfg: &HwConfig) -> CacheKey {
+        CacheKey { model_fp, template, cfg_fp: cfg.fingerprint() }
+    }
+
+    /// Key for a point when the model fingerprint is not already amortized
+    /// over a sweep.
+    pub fn for_point(model: &Model, template: TemplateId, cfg: &HwConfig) -> CacheKey {
+        CacheKey::new(model.fingerprint(), template, cfg)
+    }
+
+    fn shard(&self) -> usize {
+        // The fingerprints are already well-mixed FNV digests; fold both so
+        // model-only or cfg-only variation still spreads across shards.
+        (self.model_fp ^ self.cfg_fp.rotate_left(32)) as usize % SHARDS
+    }
+}
+
+/// A memoized stage-1 evaluation: the coarse prediction, or `None` when the
+/// template cannot realize the model under that configuration (a build or
+/// predict error — an infeasible point, memoized so the failing build is
+/// not retried on every sweep).
+pub type CachedPrediction = Option<CoarseReport>;
+
+/// Cumulative counters snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Thread-safe, sharded memo table for coarse predictions.
+pub struct DseCache {
+    shards: Vec<Mutex<HashMap<CacheKey, CachedPrediction>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for DseCache {
+    fn default() -> Self {
+        DseCache::new()
+    }
+}
+
+impl DseCache {
+    pub fn new() -> DseCache {
+        DseCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache shared by default across every sweep the
+    /// coordinator drives. Experiments and benches that need isolation
+    /// construct their own `Arc<DseCache>` instead.
+    pub fn global() -> &'static Arc<DseCache> {
+        static GLOBAL: OnceLock<Arc<DseCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(DseCache::new()))
+    }
+
+    fn lock_shard(&self, i: usize) -> MutexGuard<'_, HashMap<CacheKey, CachedPrediction>> {
+        // Recover poisoned locks: entries are write-once and cloned out,
+        // so a panic mid-insert cannot leave torn values behind.
+        self.shards[i].lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Look a key up, counting a hit or miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<CachedPrediction> {
+        let guard = self.lock_shard(key.shard());
+        match guard.get(key) {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or overwrite — idempotent for deterministic predictors) a
+    /// prediction.
+    pub fn insert(&self, key: CacheKey, value: CachedPrediction) {
+        let mut guard = self.lock_shard(key.shard());
+        if guard.len() >= SHARD_CAP {
+            guard.clear();
+        }
+        guard.insert(key, value);
+    }
+
+    /// Serve `key` from the cache or compute-and-memoize via `predict`.
+    /// Returns the prediction and whether it was a hit. Two workers racing
+    /// on the same cold key may both compute; both store the same value
+    /// (the predictor is deterministic), which is cheaper than holding a
+    /// shard lock across a graph build.
+    pub fn get_or_predict<F>(&self, key: CacheKey, predict: F) -> (CachedPrediction, bool)
+    where
+        F: FnOnce() -> CachedPrediction,
+    {
+        if let Some(v) = self.lookup(&key) {
+            return (v, true);
+        }
+        let v = predict();
+        self.insert(key, v.clone());
+        (v, false)
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        (0..SHARDS).map(|i| self.lock_shard(i).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry and reset the counters.
+    pub fn clear(&self) {
+        for i in 0..SHARDS {
+            self.lock_shard(i).clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Cumulative hit/miss counters plus current size.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+impl std::fmt::Debug for DseCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("DseCache")
+            .field("entries", &s.entries)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::predictor::predict_coarse;
+
+    fn sample_key(unroll: usize) -> (CacheKey, HwConfig, Model) {
+        let m = zoo::skynet_tiny();
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.unroll = unroll;
+        (CacheKey::for_point(&m, TemplateId::Hetero, &cfg), cfg, m)
+    }
+
+    #[test]
+    fn roundtrip_and_counters() {
+        let cache = DseCache::new();
+        let (key, cfg, m) = sample_key(64);
+        assert!(cache.lookup(&key).is_none());
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let report = predict_coarse(&g, &cfg.tech).unwrap();
+        cache.insert(key, Some(report.clone()));
+        let got = cache.lookup(&key).expect("hit").expect("realizable point");
+        assert_eq!(got.latency_cycles, report.latency_cycles);
+        assert_eq!(got.energy_pj.to_bits(), report.energy_pj.to_bits());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn unrealizable_marker_is_cached() {
+        let cache = DseCache::new();
+        let (key, ..) = sample_key(32);
+        cache.insert(key, None);
+        assert!(cache.lookup(&key).expect("hit").is_none());
+    }
+
+    #[test]
+    fn get_or_predict_computes_once() {
+        let cache = DseCache::new();
+        let (key, ..) = sample_key(128);
+        let mut calls = 0;
+        let (_, hit) = cache.get_or_predict(key, || {
+            calls += 1;
+            None
+        });
+        assert!(!hit);
+        let (_, hit) = cache.get_or_predict(key, || {
+            calls += 1;
+            None
+        });
+        assert!(hit);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn distinct_configs_distinct_keys() {
+        let (a, ..) = sample_key(64);
+        let (b, ..) = sample_key(65);
+        assert_ne!(a, b);
+        // Same config, different template.
+        let m = zoo::skynet_tiny();
+        let cfg = HwConfig::ultra96_default();
+        let t1 = CacheKey::for_point(&m, TemplateId::Hetero, &cfg);
+        let t2 = CacheKey::for_point(&m, TemplateId::Systolic, &cfg);
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let cache = DseCache::new();
+        let (key, ..) = sample_key(48);
+        cache.insert(key, None);
+        cache.lookup(&key);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let cache = Arc::new(DseCache::new());
+        let (key, ..) = sample_key(96);
+        cache.insert(key, None);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&cache);
+                std::thread::spawn(move || c.lookup(&key).is_some())
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap(), "every thread must see the entry");
+        }
+        assert_eq!(cache.stats().hits, 4);
+    }
+}

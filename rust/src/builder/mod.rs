@@ -10,24 +10,35 @@
 //!   driven by the fine-grained run-time simulation.
 //! * [`pnr`] — deterministic placement-and-route feasibility model
 //!   (utilization-driven derating on FPGA, wire load on ASIC).
+//! * [`cache`] — thread-safe memo table for stage-1 coarse predictions,
+//!   shared across sweeps so repeated experiment runs are near-free.
 //!
 //! [`build_accelerator`] runs the whole flow; `coordinator::run` drives it
-//! from a config file into RTL emission and result artifacts.
+//! from a config file into RTL emission and result artifacts. Both stages
+//! run over one `coordinator::Pool`: stage 1 fans the grid out, stage 2
+//! fans the independent per-candidate refinements out, and both are
+//! order-preserving, so results are deterministic regardless of worker
+//! count.
 
+pub mod cache;
 pub mod pnr;
 pub mod spec;
 pub mod stage1;
 pub mod stage2;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::coordinator::Pool;
 use crate::dnn::Model;
 use crate::predictor::CoarseReport;
 use crate::templates::{HwConfig, TemplateId};
 
+pub use cache::{CacheKey, CacheStats, DseCache};
 pub use pnr::{pnr_check, PnrOutcome};
 pub use spec::{Backend, Objective, Spec, SweepGrid};
-pub use stage1::{stage1, Stage1Output, TracePoint};
+pub use stage1::{stage1, stage1_with, Stage1Output, TracePoint};
 pub use stage2::{stage2, Stage2Report, Stage2Step};
 
 /// One design point carried between the builder's stages: a template
@@ -51,6 +62,10 @@ pub struct BuildOutput {
     pub survivors: Vec<Candidate>,
     /// One report per stage-1 selection, in selection order.
     pub stage2_reports: Vec<Stage2Report>,
+    /// Stage-1 points served from the DSE cache during this build.
+    pub cache_hits: u64,
+    /// Stage-1 points predicted from scratch (and memoized) this build.
+    pub cache_misses: u64,
 }
 
 /// Run the full flow — stage-1 sweep over the default grid for the spec's
@@ -63,6 +78,7 @@ pub fn build_accelerator(model: &Model, spec: &Spec, n2: usize, n_opt: usize) ->
 
 /// [`build_accelerator`] with an explicit stage-1 grid (experiments pin
 /// sweep axes, e.g. the precision dictated by an accuracy requirement).
+/// Uses a machine-sized pool and the process-wide [`DseCache`].
 pub fn build_accelerator_with_grid(
     model: &Model,
     spec: &Spec,
@@ -70,10 +86,36 @@ pub fn build_accelerator_with_grid(
     n2: usize,
     n_opt: usize,
 ) -> Result<BuildOutput> {
-    let s1 = stage1(model, spec, grid, n2)?;
-    let mut stage2_reports = Vec::with_capacity(s1.selected.len());
-    for cand in s1.selected {
-        stage2_reports.push(stage2(model, spec, cand)?);
+    let pool = Pool::default_size();
+    build_accelerator_with(model, spec, grid, n2, n_opt, &pool, DseCache::global())
+}
+
+/// The full flow over an explicit worker pool and prediction cache — the
+/// entry point the coordinator and the experiment loops share, so one pool
+/// and one memo table serve a whole batch of builds.
+pub fn build_accelerator_with(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    n_opt: usize,
+    pool: &Pool,
+    cache: &Arc<DseCache>,
+) -> Result<BuildOutput> {
+    let s1 = stage1_with(model, spec, grid, n2, pool, cache)?;
+    let (cache_hits, cache_misses) = (s1.cache_hits, s1.cache_misses);
+
+    // The N₂ stage-2 refinements are independent of each other: fan them
+    // out over the pool. `Pool::map` preserves selection order, so the
+    // reports (and everything ranked from them) are identical to a serial
+    // run with `Pool::new(1)` — a property test enforces byte-equality.
+    let shared_model = Arc::new(model.clone());
+    let shared_spec = spec.clone();
+    let refined =
+        pool.map(s1.selected, move |cand| stage2(&shared_model, &shared_spec, cand))?;
+    let mut stage2_reports = Vec::with_capacity(refined.len());
+    for report in refined {
+        stage2_reports.push(report?);
     }
 
     // Rank the refined designs by the objective on their *fine* latency,
@@ -97,7 +139,7 @@ pub fn build_accelerator_with_grid(
             survivors.push(best.clone());
         }
     }
-    Ok(BuildOutput { evaluated: s1.evaluated, survivors, stage2_reports })
+    Ok(BuildOutput { evaluated: s1.evaluated, survivors, stage2_reports, cache_hits, cache_misses })
 }
 
 #[cfg(test)]
@@ -132,5 +174,21 @@ mod tests {
         let out = build_accelerator(&m, &spec, 2, 1).unwrap();
         assert!(out.survivors.len() <= 1);
         assert_eq!(out.stage2_reports.len().min(2), out.stage2_reports.len());
+    }
+
+    #[test]
+    fn cache_counters_cover_the_sweep_and_warm_rebuild_matches() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(2);
+        let cache = Arc::new(DseCache::new());
+        let cold = build_accelerator_with(&m, &spec, &grid, 2, 1, &pool, &cache).unwrap();
+        assert_eq!(cold.cache_hits + cold.cache_misses, cold.evaluated as u64);
+        assert_eq!(cold.cache_misses, grid.len() as u64);
+        let warm = build_accelerator_with(&m, &spec, &grid, 2, 1, &pool, &cache).unwrap();
+        assert_eq!(warm.cache_hits, grid.len() as u64);
+        assert_eq!(format!("{:?}", warm.survivors), format!("{:?}", cold.survivors));
+        assert_eq!(format!("{:?}", warm.stage2_reports), format!("{:?}", cold.stage2_reports));
     }
 }

@@ -5,17 +5,23 @@
 //!
 //! The sweep is embarrassingly parallel and runs over the coordinator's
 //! worker pool; results are order-preserving, so stage 1 is deterministic
-//! regardless of worker count.
+//! regardless of worker count. Coarse predictions are memoized in a
+//! [`DseCache`] keyed by (model, template, configuration) fingerprints:
+//! the cache bypasses only the build-and-predict step, never the
+//! spec-dependent filtering or selection, so cached and uncached sweeps
+//! select identical candidates (a property test enforces this).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::Pool;
 use crate::dnn::Model;
 use crate::predictor::{predict_coarse, CoarseReport};
 use crate::templates::{HwConfig, TemplateId};
 
+use super::cache::{CacheKey, DseCache};
 use super::spec::{Spec, SweepGrid};
 use super::Candidate;
 
@@ -39,6 +45,10 @@ pub struct Stage1Output {
     pub trace: Vec<TracePoint>,
     /// Top-N₂ feasible candidates by the spec's objective, best first.
     pub selected: Vec<Candidate>,
+    /// Grid points served from the DSE cache during this sweep.
+    pub cache_hits: u64,
+    /// Grid points predicted from scratch (and memoized) this sweep.
+    pub cache_misses: u64,
 }
 
 /// Per-point evaluation shipped back from the worker pool.
@@ -52,40 +62,76 @@ struct Eval {
     feasible: bool,
 }
 
-/// Run the stage-1 sweep: build each grid point's graph, predict it with
-/// the coarse mode, filter, and select the top `n2` by objective.
+/// Run the stage-1 sweep with a machine-sized pool and the process-wide
+/// [`DseCache`], so repeated sweeps in one process (experiment loops,
+/// repeated CLI builds) hit warm lookups automatically.
 pub fn stage1(model: &Model, spec: &Spec, grid: &SweepGrid, n2: usize) -> Result<Stage1Output> {
+    let pool = Pool::default_size();
+    stage1_with(model, spec, grid, n2, &pool, DseCache::global())
+}
+
+/// Run the stage-1 sweep over an explicit worker pool and cache: build each
+/// grid point's graph (or recall its memoized prediction), predict it with
+/// the coarse mode, filter, and select the top `n2` by objective.
+pub fn stage1_with(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    pool: &Pool,
+    cache: &Arc<DseCache>,
+) -> Result<Stage1Output> {
     // Validate the model once up front so per-point failures can only mean
     // "this configuration cannot realize the model", not "bad model".
     model.stats()?;
 
     let points = grid.points();
     let evaluated = points.len();
-    let pool = Pool::default_size();
+    let model_fp = model.fingerprint();
     let shared_model = Arc::new(model.clone());
     let shared_spec = spec.clone();
-    let evals: Vec<Eval> = pool.map(points, move |(template, cfg)| {
-        let predicted =
-            template.build(&shared_model, &cfg).and_then(|g| predict_coarse(&g, &cfg.tech));
-        match predicted {
-            Ok(c) => {
-                let feasible = shared_spec.feasible(&c);
-                let energy_uj = c.energy_uj();
-                let latency_ms = c.latency_ms;
-                Eval { template, cfg, coarse: feasible.then_some(c), energy_uj, latency_ms, feasible }
+    let shared_cache = Arc::clone(cache);
+    let hits = Arc::new(AtomicU64::new(0));
+    let misses = Arc::new(AtomicU64::new(0));
+    let (job_hits, job_misses) = (Arc::clone(&hits), Arc::clone(&misses));
+    let evals: Vec<Eval> = pool
+        .map(points, move |(template, cfg)| {
+            let key = CacheKey::new(model_fp, template, &cfg);
+            let (predicted, hit) = shared_cache.get_or_predict(key, || {
+                // A config the template cannot realize is an infeasible
+                // point, not a sweep-level error; memoize the failure too.
+                template
+                    .build(&shared_model, &cfg)
+                    .and_then(|g| predict_coarse(&g, &cfg.tech))
+                    .ok()
+            });
+            let counter = if hit { &job_hits } else { &job_misses };
+            counter.fetch_add(1, Ordering::Relaxed);
+            match predicted {
+                Some(c) => {
+                    let feasible = shared_spec.feasible(&c);
+                    let energy_uj = c.energy_uj();
+                    let latency_ms = c.latency_ms;
+                    Eval {
+                        template,
+                        cfg,
+                        coarse: feasible.then_some(c),
+                        energy_uj,
+                        latency_ms,
+                        feasible,
+                    }
+                }
+                None => Eval {
+                    template,
+                    cfg,
+                    coarse: None,
+                    energy_uj: f64::INFINITY,
+                    latency_ms: f64::INFINITY,
+                    feasible: false,
+                },
             }
-            // A config the template cannot realize is an infeasible point,
-            // not a sweep-level error.
-            Err(_) => Eval {
-                template,
-                cfg,
-                coarse: None,
-                energy_uj: f64::INFINITY,
-                latency_ms: f64::INFINITY,
-                feasible: false,
-            },
-        }
-    });
+        })
+        .context("stage-1 sweep failed")?;
 
     let feasible = evals.iter().filter(|e| e.feasible).count();
     let trace: Vec<TracePoint> = evals
@@ -119,7 +165,14 @@ pub fn stage1(model: &Model, spec: &Spec, grid: &SweepGrid, n2: usize) -> Result
     });
     selected.truncate(n2);
 
-    Ok(Stage1Output { evaluated, feasible, trace, selected })
+    Ok(Stage1Output {
+        evaluated,
+        feasible,
+        trace,
+        selected,
+        cache_hits: hits.load(Ordering::Relaxed),
+        cache_misses: misses.load(Ordering::Relaxed),
+    })
 }
 
 #[cfg(test)]
@@ -182,5 +235,33 @@ mod tests {
             assert_eq!(x.cfg.pipeline, y.cfg.pipeline);
             assert_eq!(x.coarse.latency_cycles, y.coarse.latency_cycles);
         }
+    }
+
+    #[test]
+    fn warm_cache_hits_every_point_and_selects_identically() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(3);
+        let cache = Arc::new(DseCache::new());
+        let cold = stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap();
+        assert_eq!(cold.cache_hits, 0, "fresh cache cannot hit");
+        assert_eq!(cold.cache_misses, grid.len() as u64);
+        assert_eq!(cache.stats().entries, grid.len(), "every point memoized");
+
+        let warm = stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap();
+        assert_eq!(warm.cache_hits, grid.len() as u64, "warm sweep must be all hits");
+        assert_eq!(warm.cache_misses, 0);
+        assert_eq!(warm.feasible, cold.feasible);
+        assert_eq!(format!("{:?}", warm.selected), format!("{:?}", cold.selected));
+        assert_eq!(format!("{:?}", warm.trace), format!("{:?}", cold.trace));
+
+        // A different spec shares the same cache entries (predictions are
+        // spec-independent; filtering happens per sweep).
+        let mut tight = spec.clone();
+        tight.min_fps = 1.0e9;
+        let filtered = stage1_with(&m, &tight, &grid, 3, &pool, &cache).unwrap();
+        assert_eq!(filtered.cache_hits, grid.len() as u64);
+        assert_eq!(filtered.feasible, 0);
     }
 }

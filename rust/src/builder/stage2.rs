@@ -7,6 +7,15 @@
 //! activation/weight buffers). The best feasible improving move is
 //! accepted; the loop stops at a fixed point (no move improves latency by
 //! more than `MIN_REL_GAIN`) or after `MAX_ITERS` iterations.
+//!
+//! Each candidate's refinement is independent, so `builder` fans [`stage2`]
+//! calls out over the coordinator's worker pool: everything the move loop
+//! owns must stay `Send` (a compile-time guard below enforces it), and the
+//! function itself must stay deterministic — no clocks, no RNG, no global
+//! mutable state — so the parallel fan-out is byte-identical to a serial
+//! run. Do **not** submit nested jobs to the same pool from inside this
+//! function: stage-2 jobs already occupy the workers, and a nested
+//! blocking `Pool::map` could starve itself.
 
 use anyhow::Result;
 
@@ -68,6 +77,20 @@ struct EvalPoint {
     graph: Graph,
     coarse: CoarseReport,
     fine: FineReport,
+}
+
+// The whole working set of the move loop crosses thread boundaries when
+// stage 2 fans out over the pool; keep it `Send` by construction. (Adding
+// an `Rc`/`RefCell` anywhere inside these types breaks this at compile
+// time, here, rather than at the distant `Pool::map` call site.)
+#[allow(dead_code)]
+fn assert_move_loop_state_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<Model>();
+    assert_send::<Spec>();
+    assert_send::<Candidate>();
+    assert_send::<EvalPoint>();
+    assert_send::<Stage2Report>();
 }
 
 /// Build and predict one design point. Structural validation runs once on

@@ -14,7 +14,9 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::builder::{build_accelerator, pnr_check, BuildOutput, PnrOutcome};
+use crate::builder::{
+    build_accelerator_with, pnr_check, BuildOutput, DseCache, PnrOutcome, SweepGrid,
+};
 use crate::dnn::zoo;
 use crate::rtlgen;
 use crate::util::json::{obj, Json};
@@ -28,11 +30,24 @@ pub struct RunSummary {
     pub result_json: Json,
 }
 
-/// Execute a full Chip-Builder run from a configuration.
+/// Execute a full Chip-Builder run from a configuration. The run shares
+/// one worker pool across both DSE stages and the process-wide
+/// [`DseCache`], so back-to-back runs in one process (experiment loops,
+/// repeated builds) serve stage-1 predictions from warm lookups.
 pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
     let model = zoo::by_name(&cfg.model)
         .with_context(|| format!("unknown model '{}' (see `autodnnchip list-models`)", cfg.model))?;
-    let build = build_accelerator(&model, &cfg.spec, cfg.n2, cfg.n_opt)?;
+    let pool = Pool::default_size();
+    let grid = SweepGrid::for_backend(&cfg.spec.backend);
+    let build = build_accelerator_with(
+        &model,
+        &cfg.spec,
+        &grid,
+        cfg.n2,
+        cfg.n_opt,
+        &pool,
+        DseCache::global(),
+    )?;
 
     let mut designs = Vec::new();
     for (rank, cand) in build.survivors.iter().enumerate() {
@@ -64,6 +79,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
     let result_json = obj(vec![
         ("model", cfg.model.as_str().into()),
         ("evaluated", build.evaluated.into()),
+        (
+            "dse_cache",
+            obj(vec![
+                ("hits", build.cache_hits.into()),
+                ("misses", build.cache_misses.into()),
+            ]),
+        ),
         ("survivors", Json::Arr(designs)),
         (
             "stage2_improvement_pct",
@@ -106,6 +128,12 @@ mod tests {
         };
         let s = run(&cfg).unwrap();
         assert!(s.build.evaluated > 0);
+        assert_eq!(
+            s.build.cache_hits + s.build.cache_misses,
+            s.build.evaluated as u64,
+            "every stage-1 point must be either a hit or a miss"
+        );
+        assert!(s.result_json.get("dse_cache").is_some());
         assert!(dir.join("result.json").exists());
         if !s.build.survivors.is_empty() {
             assert!(dir.join("rtl/design_0/top.v").exists());

@@ -1,12 +1,22 @@
 //! A small fixed-size worker pool over `std::sync::mpsc` for the
-//! embarrassingly-parallel parts of the flow (stage-1 sweeps, per-model
-//! experiment loops). Built from scratch — the offline registry has no
-//! rayon/tokio — and kept deliberately simple: submit `FnOnce` jobs,
-//! collect results in completion order.
+//! embarrassingly-parallel parts of the flow (stage-1 sweeps, stage-2
+//! refinement fan-out, per-model experiment loops). Built from scratch —
+//! the offline registry has no rayon/tokio — and kept deliberately simple:
+//! submit `FnOnce` jobs, collect results in completion order.
+//!
+//! Failure discipline: a panicking job must not abort or hang the whole
+//! build. Workers run every job under `catch_unwind`, so they survive
+//! panics; [`Pool::map`] surfaces the first panic as an `anyhow::Error`
+//! (after draining the remaining results) instead of poisoning the
+//! process, and the pool stays usable afterwards.
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread;
+
+use anyhow::{anyhow, Context, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -14,6 +24,23 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct Pool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Lock that shrugs off poisoning: the receiver guard protects only a
+/// channel handle, never in-progress state.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl Pool {
@@ -27,9 +54,15 @@ impl Pool {
                 thread::Builder::new()
                     .name(format!("dse-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().expect("pool lock").recv() };
+                        let job = { lock(&rx).recv() };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker; the
+                            // panic is reported through the result channel
+                            // by `map` (or swallowed for fire-and-forget
+                            // `submit` jobs).
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // sender dropped → shut down
                         }
                     })
@@ -45,36 +78,73 @@ impl Pool {
         Pool::new(n)
     }
 
-    /// Submit a job.
-    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().expect("pool alive").send(Box::new(f)).expect("pool send");
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
     }
 
-    /// Map `items` through `f` in parallel, preserving input order.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    /// Submit a fire-and-forget job. Errors only if the pool has been shut
+    /// down or every worker has exited.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<()> {
+        self.tx
+            .as_ref()
+            .context("worker pool already shut down")?
+            .send(Box::new(f))
+            .map_err(|_| anyhow!("worker pool disconnected (all workers exited)"))
+    }
+
+    /// Map `items` through `f` in parallel, preserving input order, so the
+    /// output is deterministic regardless of worker count. A job that
+    /// panics yields an error naming the panic (after the remaining jobs
+    /// drain) rather than hanging the collection loop or aborting the
+    /// process.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, std::result::Result<R, String>)>();
         let n = items.len();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.submit(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item))).map_err(panic_message);
                 let _ = rtx.send((i, r));
-            });
+            })?;
         }
         drop(rtx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<String> = None;
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("pool result");
-            slots[i] = Some(r);
+            match rrx.recv() {
+                Ok((i, Ok(r))) => slots[i] = Some(r),
+                Ok((i, Err(msg))) => {
+                    if first_err.is_none() {
+                        first_err = Some(format!("pool job {i} panicked: {msg}"));
+                    }
+                }
+                // Every result sender dropped before n results arrived —
+                // cannot happen while workers catch panics, but never hang
+                // on it if it does.
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some("worker pool disconnected before all results arrived".to_string());
+                    }
+                    break;
+                }
+            }
         }
-        slots.into_iter().map(|s| s.expect("all jobs completed")).collect()
+        if let Some(e) = first_err {
+            return Err(anyhow!(e));
+        }
+        slots
+            .into_iter()
+            .map(|s| s.ok_or_else(|| anyhow!("pool job produced no result")))
+            .collect()
     }
 }
 
@@ -95,7 +165,7 @@ mod tests {
     #[test]
     fn map_preserves_order() {
         let p = Pool::new(4);
-        let out = p.map((0..100).collect::<Vec<usize>>(), |x| x * 2);
+        let out = p.map((0..100).collect::<Vec<usize>>(), |x| x * 2).unwrap();
         assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
     }
 
@@ -107,7 +177,8 @@ mod tests {
             for _ in 0..50 {
                 p.submit(|| {
                     COUNT.fetch_add(1, Ordering::SeqCst);
-                });
+                })
+                .unwrap();
             }
             drop(p); // joins workers
         }
@@ -117,6 +188,38 @@ mod tests {
     #[test]
     fn pool_of_one_works() {
         let p = Pool::new(1);
-        assert_eq!(p.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+        assert_eq!(p.map(vec![1, 2, 3], |x| x + 1).unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_job_errors_without_hanging() {
+        // (The panic prints a backtrace-less message to stderr via the
+        // default hook; that noise is expected here.)
+        let p = Pool::new(2);
+        let r = p.map((0..8).collect::<Vec<usize>>(), |x| {
+            if x == 3 {
+                panic!("boom at {x}");
+            }
+            x * 10
+        });
+        let msg = format!("{:#}", r.expect_err("a panicking job must error the map"));
+        assert!(msg.contains("panicked"), "unhelpful error: {msg}");
+        assert!(msg.contains("boom"), "panic payload lost: {msg}");
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let p = Pool::new(2);
+        let _ = p.map(vec![0usize], |_| -> usize { panic!("first batch dies") });
+        // Workers caught the panic; the same pool keeps serving.
+        assert_eq!(p.map(vec![1, 2, 3], |x| x + 1).unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_an_error_not_a_panic() {
+        let mut p = Pool::new(1);
+        drop(p.tx.take()); // simulate shutdown with workers still joined later
+        assert!(p.submit(|| {}).is_err());
+        assert!(p.map(vec![1], |x: usize| x).is_err());
     }
 }

@@ -3,7 +3,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::layer::{self, Layer, LayerKind, TensorShape};
+use super::layer::{self, Layer, LayerKind, PoolKind, TensorShape};
+use crate::util::hash::Fnv64;
 
 /// A DNN model: an input shape plus a topologically-ordered layer list.
 /// Layer `i` may only reference producers `< i`.
@@ -150,6 +151,85 @@ impl Model {
     pub fn compute_layer_count(&self) -> usize {
         self.layers.iter().filter(|l| l.kind.is_compute()).count()
     }
+
+    /// Stable structural fingerprint: a fixed-parameter FNV-1a digest of the
+    /// input shape, precisions and every layer's kind/topology. Names are
+    /// deliberately excluded — they never influence a prediction — so two
+    /// models that compute the same workload share a fingerprint. Used as
+    /// the model half of the DSE cache key (`builder::cache`); stable
+    /// across runs and processes, unlike `std::hash`.
+    pub fn fingerprint(&self) -> u64 {
+        // Exhaustive destructuring (names explicitly ignored): a new
+        // structural field must be hashed here before this compiles.
+        let Model { name: _, input, layers, w_bits, a_bits } = self;
+        let TensorShape { c, h: ih, w: iw } = *input;
+        let mut h = Fnv64::with_seed(0x4d4f_4445_4c46_5031); // "MODELFP1"
+        h.write_usize(c).write_usize(ih).write_usize(iw);
+        h.write_usize(*w_bits).write_usize(*a_bits);
+        h.write_usize(layers.len());
+        for l in layers {
+            let Layer { name: _, kind, input } = l;
+            match input {
+                None => h.write_u64(u64::MAX),
+                Some(p) => h.write_usize(*p),
+            };
+            hash_layer_kind(kind, &mut h);
+        }
+        h.finish()
+    }
+}
+
+/// Tag-prefixed hash of one operator so distinct kinds with coinciding
+/// field values cannot alias.
+fn hash_layer_kind(kind: &LayerKind, h: &mut Fnv64) {
+    match kind {
+        LayerKind::Conv { out_c, k, stride, pad, groups, bias } => {
+            h.write_u64(0)
+                .write_usize(*out_c)
+                .write_usize(*k)
+                .write_usize(*stride)
+                .write_usize(*pad)
+                .write_usize(*groups)
+                .write_bool(*bias);
+        }
+        LayerKind::Fc { out_features, bias } => {
+            h.write_u64(1).write_usize(*out_features).write_bool(*bias);
+        }
+        LayerKind::Pool { kind, k, stride } => {
+            let tag = match kind {
+                PoolKind::Max => 0u64,
+                PoolKind::Avg => 1u64,
+            };
+            h.write_u64(2).write_u64(tag).write_usize(*k).write_usize(*stride);
+        }
+        LayerKind::GlobalAvgPool => {
+            h.write_u64(3);
+        }
+        LayerKind::ReLU => {
+            h.write_u64(4);
+        }
+        LayerKind::ReLU6 => {
+            h.write_u64(5);
+        }
+        LayerKind::BatchNorm => {
+            h.write_u64(6);
+        }
+        LayerKind::Add { with } => {
+            h.write_u64(7).write_usize(*with);
+        }
+        LayerKind::Concat { with } => {
+            h.write_u64(8).write_usize(with.len());
+            for &w in with {
+                h.write_usize(w);
+            }
+        }
+        LayerKind::Reorg { stride } => {
+            h.write_u64(9).write_usize(*stride);
+        }
+        LayerKind::Upsample { factor } => {
+            h.write_u64(10).write_usize(*factor);
+        }
+    }
 }
 
 impl ModelStats {
@@ -207,5 +287,35 @@ mod tests {
         let m = tiny();
         let s = m.stats().unwrap();
         assert_eq!(s.model_size_bytes, s.total_params); // 8-bit weights
+    }
+
+    #[test]
+    fn fingerprint_stable_and_name_independent() {
+        let a = tiny();
+        let mut b = tiny();
+        b.name = "renamed".into();
+        b.layers[0].name = "other".into();
+        assert_eq!(a.fingerprint(), a.fingerprint(), "fingerprint must be deterministic");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "names must not affect the fingerprint");
+    }
+
+    #[test]
+    fn fingerprint_sees_structural_changes() {
+        let base = tiny();
+        let mut deeper = tiny();
+        deeper.push("extra", LayerKind::ReLU);
+        assert_ne!(base.fingerprint(), deeper.fingerprint());
+
+        let mut wider = tiny();
+        wider.w_bits = 16;
+        assert_ne!(base.fingerprint(), wider.fingerprint());
+
+        let mut resized = tiny();
+        resized.input = TensorShape::new(3, 16, 16);
+        assert_ne!(base.fingerprint(), resized.fingerprint());
+
+        let mut retyped = tiny();
+        retyped.layers[2].kind = LayerKind::Pool { kind: PoolKind::Avg, k: 2, stride: 2 };
+        assert_ne!(base.fingerprint(), retyped.fingerprint());
     }
 }

@@ -7,9 +7,17 @@
 //!    on the ShiDianNao template across the Fig. 15 networks.
 //! 3. **Buffer sizing**: SRAM access energy vs capacity (the √-scaling
 //!    lever behind Fig. 15).
+//! 4. **DSE cache**: cold vs warm stage-1 sweep on an isolated memo
+//!    table — the hit/miss accounting behind the `dse` bench's speedup
+//!    gate.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::builder::{stage1_with, DseCache, Spec, SweepGrid};
+use crate::coordinator::Pool;
 use crate::dnn::zoo;
 use crate::predictor::{predict_coarse, simulate};
 use crate::templates::{HwConfig, PeStyle, TemplateId};
@@ -103,6 +111,50 @@ pub fn run() -> Result<ExpReport> {
     text.push_str(&t.render());
     json_parts.push(("buffer_sizing", Json::Arr(rows)));
 
+    // --- 4. DSE cache cold vs warm --------------------------------------
+    // An isolated cache (not the process-global one) so the cold leg is
+    // genuinely cold no matter what ran earlier in this process.
+    let m = zoo::skynet_tiny();
+    let spec = Spec::ultra96_object_detection();
+    let grid = SweepGrid::for_backend(&spec.backend);
+    let pool = Pool::default_size();
+    let cache = Arc::new(DseCache::new());
+    let t0 = Instant::now();
+    let cold = stage1_with(&m, &spec, &grid, 3, &pool, &cache)?;
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let warm = stage1_with(&m, &spec, &grid, 3, &pool, &cache)?;
+    let warm_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let mut t = Table::new(
+        "Ablation 4 — DSE cache, stage-1 sweep (skynet_tiny, Ultra96 grid)",
+        &["sweep", "hits", "misses", "wall (ms)"],
+    );
+    t.row(vec![
+        "cold".into(),
+        cold.cache_hits.to_string(),
+        cold.cache_misses.to_string(),
+        f(cold_ms, 2),
+    ]);
+    t.row(vec![
+        "warm".into(),
+        warm.cache_hits.to_string(),
+        warm.cache_misses.to_string(),
+        f(warm_ms, 2),
+    ]);
+    text.push_str(&t.render());
+    json_parts.push((
+        "dse_cache",
+        obj(vec![
+            ("grid_points", grid.len().into()),
+            ("cold_hits", cold.cache_hits.into()),
+            ("cold_misses", cold.cache_misses.into()),
+            ("warm_hits", warm.cache_hits.into()),
+            ("warm_misses", warm.cache_misses.into()),
+            ("cold_ms", cold_ms.into()),
+            ("warm_ms", warm_ms.into()),
+        ]),
+    ));
+
     Ok(ExpReport { id: "ablation", text, json: obj(json_parts) })
 }
 
@@ -117,6 +169,19 @@ mod tests {
         let first = sweep.first().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
         let last = sweep.last().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
         assert!(last <= first, "deeper pipeline should not be slower: {first} → {last}");
+    }
+
+    #[test]
+    fn cache_ablation_counts_cover_the_grid() {
+        let r = run().unwrap();
+        let c = r.json.get("dse_cache").unwrap();
+        let points = c.get("grid_points").unwrap().as_usize().unwrap() as f64;
+        assert_eq!(c.get("cold_hits").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(c.get("cold_misses").unwrap().as_f64().unwrap(), points);
+        assert_eq!(c.get("warm_hits").unwrap().as_f64().unwrap(), points);
+        assert_eq!(c.get("warm_misses").unwrap().as_f64().unwrap(), 0.0);
+        // No wall-clock assertion here — timing lives in the bench, where
+        // the measurement window makes it robust.
     }
 
     #[test]

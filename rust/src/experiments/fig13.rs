@@ -5,7 +5,8 @@
 
 use anyhow::Result;
 
-use crate::builder::{build_accelerator_with_grid, Spec, SweepGrid};
+use crate::builder::{build_accelerator_with, DseCache, Spec, SweepGrid};
+use crate::coordinator::Pool;
 use crate::devices::edge::MobileCpu;
 use crate::devices::Device;
 use crate::dnn::zoo;
@@ -24,6 +25,13 @@ pub fn run(seed: u64) -> Result<ExpReport> {
     let cpu = MobileCpu::default();
     let mut rng = Rng::new(seed);
 
+    // One pool and the process-wide DSE cache across all 10 builds: the
+    // first run of the loop populates the memo table, repeated runs (and
+    // any other sweep in this process) serve stage 1 from warm lookups.
+    let pool = Pool::default_size();
+    let cache = DseCache::global();
+    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
+
     let mut t = Table::new(
         "Fig. 13 — Ultra96 (AutoDNNchip) vs Pixel2 XL on 10 SkyNet variants",
         &[
@@ -40,7 +48,9 @@ pub fn run(seed: u64) -> Result<ExpReport> {
     let mut ratios = Vec::new();
     let mut eff_diffs = Vec::new();
     for m in zoo::skynet_variants() {
-        let out = build_accelerator_with_grid(&m, &spec, &grid, 3, 1)?;
+        let out = build_accelerator_with(&m, &spec, &grid, 3, 1, &pool, cache)?;
+        cache_hits += out.cache_hits;
+        cache_misses += out.cache_misses;
         let Some(best) = out.survivors.first() else {
             continue;
         };
@@ -80,10 +90,16 @@ pub fn run(seed: u64) -> Result<ExpReport> {
     text.push_str(&format!(
         "avg latency reduction {avg_ratio:.2}× (paper: 3.86×); avg energy-eff diff {avg_eff:+.1}% (paper: <15%)\n"
     ));
+    text.push_str(&format!(
+        "dse cache over the 10-variant loop: {cache_hits} hits / {cache_misses} misses \
+         (repeat runs in-process are all-hit)\n"
+    ));
     let json = obj(vec![
         ("rows", Json::Arr(rows_json)),
         ("avg_latency_ratio", avg_ratio.into()),
         ("avg_eff_diff_pct", avg_eff.into()),
+        ("cache_hits", cache_hits.into()),
+        ("cache_misses", cache_misses.into()),
     ]);
     Ok(ExpReport { id: "fig13", text, json })
 }

@@ -9,6 +9,7 @@
 //! paper makes.
 
 use super::spec::{DataPathKind, MemKind, Precision};
+use crate::util::hash::Fnv64;
 
 /// Unit energy/latency/area cost table for one technology node.
 #[derive(Debug, Clone)]
@@ -73,6 +74,48 @@ impl UnitCosts {
             DataPathKind::Fifo => self.fifo_bit_pj,
         }
     }
+
+    /// Feed every unit cost into a stable fingerprint (DSE cache keys must
+    /// change whenever any cost that shapes a prediction changes).
+    pub fn stable_hash(&self, h: &mut Fnv64) {
+        // Exhaustive destructuring (no `..` rest pattern) on purpose:
+        // adding a cost field without hashing it becomes a compile error
+        // here instead of a silent DSE-cache key collision.
+        let UnitCosts {
+            mac16_pj,
+            mac_cycles,
+            rf_bit_pj,
+            sram_bit_pj,
+            bram_bit_pj,
+            dram_bit_pj,
+            write_factor,
+            noc_bit_pj,
+            bus_bit_pj,
+            fifo_bit_pj,
+            warmup_pj,
+            warmup_cycles,
+            ctrl_pj_per_state,
+            ctrl_cycles_per_state,
+            dram_setup_cycles,
+            leakage_mw,
+        } = self;
+        h.write_f64(*mac16_pj)
+            .write_u64(*mac_cycles)
+            .write_f64(*rf_bit_pj)
+            .write_f64(*sram_bit_pj)
+            .write_f64(*bram_bit_pj)
+            .write_f64(*dram_bit_pj)
+            .write_f64(*write_factor)
+            .write_f64(*noc_bit_pj)
+            .write_f64(*bus_bit_pj)
+            .write_f64(*fifo_bit_pj)
+            .write_f64(*warmup_pj)
+            .write_u64(*warmup_cycles)
+            .write_f64(*ctrl_pj_per_state)
+            .write_u64(*ctrl_cycles_per_state)
+            .write_u64(*dram_setup_cycles)
+            .write_f64(*leakage_mw);
+    }
 }
 
 /// A complete technology target: unit costs + resource/area accounting +
@@ -133,6 +176,40 @@ impl Technology {
     pub fn mac_array_area_um2(&self, unroll: usize, p: Precision) -> f64 {
         let a = self.asic.expect("asic area model");
         a.mac16_um2 * (p.w_bits * p.a_bits) as f64 / 256.0 * unroll as f64
+    }
+
+    /// Feed the whole technology target — name, clock, unit costs and
+    /// resource/area models — into a stable fingerprint. Derived
+    /// technologies (e.g. `asic_65nm_1ghz` vs `asic_65nm`) differ in costs
+    /// as well as name, so hand-tweaked copies cannot alias either.
+    pub fn stable_hash(&self, h: &mut Fnv64) {
+        // Exhaustive destructuring: a new field must be hashed (or
+        // explicitly ignored here) before this compiles.
+        let Technology { name, default_freq_mhz, costs, fpga, asic } = self;
+        h.write_str(name).write_f64(*default_freq_mhz);
+        costs.stable_hash(h);
+        match fpga {
+            None => {
+                h.write_u64(0);
+            }
+            Some(f) => {
+                let FpgaResources { dsp_total, bram18k_total, lut_total, ff_total } = f;
+                h.write_u64(1)
+                    .write_usize(*dsp_total)
+                    .write_usize(*bram18k_total)
+                    .write_usize(*lut_total)
+                    .write_usize(*ff_total);
+            }
+        }
+        match asic {
+            None => {
+                h.write_u64(0);
+            }
+            Some(a) => {
+                let AsicArea { mac16_um2, sram_um2_per_bit } = a;
+                h.write_u64(1).write_f64(*mac16_um2).write_f64(*sram_um2_per_bit);
+            }
+        }
     }
 }
 
@@ -303,5 +380,22 @@ mod tests {
         let b = asic_28nm();
         assert!(b.costs.mac16_pj < a.costs.mac16_pj);
         assert!(b.costs.dram_bit_pj > b.costs.sram_bit_pj * 10.0);
+    }
+
+    #[test]
+    fn stable_hash_separates_technologies() {
+        let digest = |t: &Technology| {
+            let mut h = Fnv64::new();
+            t.stable_hash(&mut h);
+            h.finish()
+        };
+        let base = asic_65nm();
+        assert_eq!(digest(&base), digest(&asic_65nm()), "equal tech must hash equal");
+        assert_ne!(digest(&base), digest(&asic_65nm_1ghz()));
+        assert_ne!(digest(&base), digest(&fpga_ultra96()));
+        // A cost tweak alone must change the digest (cache-safety).
+        let mut tweaked = asic_65nm();
+        tweaked.costs.sram_bit_pj *= 1.01;
+        assert_ne!(digest(&base), digest(&tweaked));
     }
 }

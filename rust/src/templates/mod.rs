@@ -29,6 +29,7 @@ use anyhow::Result;
 use crate::dnn::Model;
 use crate::graph::Graph;
 use crate::ip::{Precision, Technology};
+use crate::util::hash::Fnv64;
 
 /// PE micro-architecture style (an IP-selection axis of the DSE):
 /// * `Forwarding` — ShiDianNao-style PEs with neighbour-shift registers:
@@ -95,6 +96,44 @@ impl HwConfig {
             pipeline: 2,
             pe_style: PeStyle::Forwarding,
         }
+    }
+
+    /// Stable fingerprint over every knob (and the full technology cost
+    /// table) — the configuration half of the DSE cache key
+    /// (`builder::cache`). Two configurations with equal fingerprints
+    /// produce identical graphs for a given model/template, hence
+    /// identical coarse predictions.
+    pub fn fingerprint(&self) -> u64 {
+        // Exhaustive destructuring: a new knob must be hashed (or
+        // explicitly ignored) before this compiles — a silently unhashed
+        // knob would alias distinct configurations in the DSE cache.
+        let HwConfig {
+            tech,
+            freq_mhz,
+            prec,
+            unroll,
+            act_buf_bits,
+            w_buf_bits,
+            bus_bits,
+            pipeline,
+            pe_style,
+        } = self;
+        let Precision { w_bits, a_bits } = *prec;
+        let mut h = Fnv64::with_seed(0x4857_4346_4750_3031); // "HWCFGP01"
+        tech.stable_hash(&mut h);
+        h.write_f64(*freq_mhz)
+            .write_usize(w_bits)
+            .write_usize(a_bits)
+            .write_usize(*unroll)
+            .write_u64(*act_buf_bits)
+            .write_u64(*w_buf_bits)
+            .write_usize(*bus_bits)
+            .write_u64(*pipeline)
+            .write_u64(match pe_style {
+                PeStyle::Forwarding => 0,
+                PeStyle::Direct => 1,
+            });
+        h.finish()
     }
 }
 
@@ -177,6 +216,44 @@ mod tests {
                 let g = t.build(&m, cfg).unwrap_or_else(|e| panic!("{} on {}: {e}", t.name(), m.name));
                 g.validate().unwrap_or_else(|e| panic!("{} on {}: {e}", t.name(), m.name));
             }
+        }
+    }
+
+    #[test]
+    fn hwconfig_fingerprint_distinguishes_every_knob() {
+        let base = HwConfig::ultra96_default();
+        assert_eq!(base.fingerprint(), HwConfig::ultra96_default().fingerprint());
+        assert_ne!(base.fingerprint(), HwConfig::asic_default().fingerprint());
+        let mutations: Vec<HwConfig> = {
+            let mut v = Vec::new();
+            let mut c = base.clone();
+            c.unroll += 1;
+            v.push(c);
+            let mut c = base.clone();
+            c.act_buf_bits *= 2;
+            v.push(c);
+            let mut c = base.clone();
+            c.w_buf_bits *= 2;
+            v.push(c);
+            let mut c = base.clone();
+            c.bus_bits *= 2;
+            v.push(c);
+            let mut c = base.clone();
+            c.pipeline *= 2;
+            v.push(c);
+            let mut c = base.clone();
+            c.prec = Precision::new(8, 8);
+            v.push(c);
+            let mut c = base.clone();
+            c.freq_mhz += 1.0;
+            v.push(c);
+            let mut c = base.clone();
+            c.pe_style = PeStyle::Direct;
+            v.push(c);
+            v
+        };
+        for (i, m) in mutations.iter().enumerate() {
+            assert_ne!(base.fingerprint(), m.fingerprint(), "mutation {i} not distinguished");
         }
     }
 

@@ -3,9 +3,16 @@
 //! Benches are `harness = false` binaries that call [`Bench::run`]; the
 //! harness does warmup, adaptively picks an iteration count targeting a
 //! fixed measurement window, and reports mean / p50 / p95 / stddev.
+//!
+//! Results can be exported as machine-readable JSON ([`Bench::write_json`])
+//! together with derived scalar metrics (speedups, point rates), which is
+//! what the `dse` bench uses to emit `BENCH_dse.json` for the CI
+//! bench-smoke gate and for tracking DSE throughput across commits.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::util::json::{obj, Json};
 use crate::util::stats;
 
 /// One benchmark's collected timing summary (nanoseconds per iteration).
@@ -20,6 +27,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (all timings in ns/iter, as measured).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_ns", self.mean_ns.into()),
+            ("p50_ns", self.p50_ns.into()),
+            ("p95_ns", self.p95_ns.into()),
+            ("stddev_ns", self.stddev_ns.into()),
+        ])
+    }
+
     pub fn report_line(&self) -> String {
         format!(
             "{:<48} {:>12} {:>12} {:>12} {:>8} iters={}",
@@ -116,6 +135,44 @@ impl Bench {
             "name", "mean", "p50", "p95", "noise"
         );
     }
+
+    /// Look a completed result up by name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Mean ns/iter of a completed benchmark, by name.
+    pub fn mean_ns(&self, name: &str) -> Option<f64> {
+        self.result(name).map(|r| r.mean_ns)
+    }
+
+    /// The whole suite as JSON: every result plus caller-derived scalar
+    /// metrics (speedups, rates) under `derived`.
+    pub fn to_json(&self, suite: &str, derived: &[(&str, f64)]) -> Json {
+        obj(vec![
+            ("suite", suite.into()),
+            ("quick", std::env::var("BENCH_QUICK").is_ok().into()),
+            ("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+            (
+                "derived",
+                obj(derived.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+            ),
+        ])
+    }
+
+    /// Write the suite JSON to `path` (pretty-printed, trailing newline).
+    pub fn write_json(
+        &self,
+        path: &Path,
+        suite: &str,
+        derived: &[(&str, f64)],
+    ) -> std::io::Result<()> {
+        let mut text = self.to_json(suite, derived).pretty();
+        if !text.ends_with('\n') {
+            text.push('\n');
+        }
+        std::fs::write(path, text)
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +196,42 @@ mod tests {
         assert!(human_ns(12_000.0).ends_with("µs"));
         assert!(human_ns(12_000_000.0).ends_with("ms"));
         assert!(human_ns(2_000_000_000.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        // No BENCH_QUICK override: windows are set directly below, and
+        // set_var would race concurrent env reads in parallel tests.
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(1);
+        b.measure = Duration::from_millis(5);
+        b.run("alpha", || 2 + 2);
+        b.run("beta", || 3 * 3);
+        assert!(b.mean_ns("alpha").unwrap() > 0.0);
+        assert!(b.result("gamma").is_none());
+
+        let j = b.to_json("unit", &[("speedup", 2.5)]);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("suite").unwrap().as_str().unwrap(), "unit");
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "alpha");
+        assert!(results[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        let derived = parsed.get("derived").unwrap();
+        assert_eq!(derived.get("speedup").unwrap().as_f64().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let mut b = Bench::new();
+        b.warmup = Duration::from_millis(1);
+        b.measure = Duration::from_millis(5);
+        b.run("only", || 1);
+        let path = std::env::temp_dir().join(format!("bench_{}.json", std::process::id()));
+        b.write_json(&path, "unit", &[]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        assert!(text.ends_with('\n'));
+        std::fs::remove_file(&path).ok();
     }
 }

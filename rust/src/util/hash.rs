@@ -1,0 +1,129 @@
+//! Stable, process-independent 64-bit FNV-1a hashing for fingerprints.
+//!
+//! `std::hash` deliberately randomizes (`RandomState`) and makes no
+//! cross-version stability promise, so cache keys that must mean the same
+//! thing in every run — the DSE memo table's model/configuration
+//! fingerprints — are built on this fixed-parameter hasher instead. All
+//! writers are length- or tag-prefixed so adjacent fields cannot alias
+//! (e.g. `"ab" + "c"` vs `"a" + "bc"`).
+
+/// FNV-1a offset basis (64-bit).
+const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher with fixed parameters.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { h: OFFSET }
+    }
+
+    /// A hasher whose stream starts with `seed` — use distinct seeds for
+    /// distinct fingerprint domains so equal byte streams in different
+    /// domains cannot collide trivially.
+    pub fn with_seed(seed: u64) -> Fnv64 {
+        let mut f = Fnv64::new();
+        f.write_u64(seed);
+        f
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Fnv64 {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(PRIME);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Fnv64 {
+        self.write_bytes(&v.to_le_bytes())
+    }
+
+    pub fn write_usize(&mut self, v: usize) -> &mut Fnv64 {
+        self.write_u64(v as u64)
+    }
+
+    /// Hash a float by its exact bit pattern (NaN payloads included; -0.0
+    /// and 0.0 hash differently — fingerprint inputs are configuration
+    /// values, never computed results, so that is the right semantics).
+    pub fn write_f64(&mut self, v: f64) -> &mut Fnv64 {
+        self.write_u64(v.to_bits())
+    }
+
+    pub fn write_bool(&mut self, v: bool) -> &mut Fnv64 {
+        self.write_u64(v as u64)
+    }
+
+    /// Length-prefixed string write.
+    pub fn write_str(&mut self, s: &str) -> &mut Fnv64 {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c — the published test vector.
+        let mut f = Fnv64::new();
+        f.write_bytes(b"a");
+        assert_eq!(f.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv64::with_seed(7);
+        a.write_u64(1).write_u64(2);
+        let mut b = Fnv64::with_seed(7);
+        b.write_u64(1).write_u64(2);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::with_seed(7);
+        c.write_u64(2).write_u64(1);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn strings_are_length_prefixed() {
+        let mut a = Fnv64::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn seeds_separate_domains() {
+        let mut a = Fnv64::with_seed(1);
+        a.write_u64(42);
+        let mut b = Fnv64::with_seed(2);
+        b.write_u64(42);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn float_bits_not_value() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.0);
+        let mut b = Fnv64::new();
+        b.write_f64(-0.0);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -130,9 +130,9 @@ fn worker_pool_parallel_model_evaluation() {
     // agree with serial evaluation.
     let pool = Pool::new(4);
     let names = zoo::all_names();
-    let parallel: Vec<u64> = pool.map(names.clone(), |n| {
-        zoo::by_name(&n).unwrap().stats().unwrap().total_macs
-    });
+    let parallel: Vec<u64> = pool
+        .map(names.clone(), |n| zoo::by_name(&n).unwrap().stats().unwrap().total_macs)
+        .expect("no job panics");
     let serial: Vec<u64> =
         names.iter().map(|n| zoo::by_name(n).unwrap().stats().unwrap().total_macs).collect();
     assert_eq!(parallel, serial);

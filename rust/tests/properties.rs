@@ -3,9 +3,13 @@
 //! graphs, models and configurations; every failure reports a reproducing
 //! seed.
 
+use std::sync::Arc;
+
 use autodnnchip::builder::{
-    build_accelerator, pnr_check, stage1, Candidate, PnrOutcome, Spec, SweepGrid,
+    build_accelerator, build_accelerator_with, pnr_check, stage1, stage1_with, Candidate,
+    DseCache, PnrOutcome, Spec, SweepGrid,
 };
+use autodnnchip::coordinator::Pool;
 use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
@@ -355,6 +359,68 @@ fn prop_pnr_check_is_deterministic() {
             prop_assert!(achieved_freq_mhz > 0.0);
             prop_assert!(achieved_freq_mhz <= cand.cfg.freq_mhz + 1e-9);
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_stage1_selects_identical_candidates() {
+    // The DSE cache bypasses only build-and-predict, never filtering or
+    // selection, so a warm (all-hit) sweep must reproduce the cold
+    // (all-miss) sweep exactly — same selection, same trace — for any
+    // model, spec, N₂ and worker count.
+    check_cfg("stage1 cache identical", Config { cases: 4, seed: 0xCAC4E }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec =
+            if rng.bool(0.5) { Spec::ultra96_object_detection() } else { Spec::asic_vision() };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let n2 = rng.range(1, 5);
+        let pool = Pool::new(rng.range(1, 4));
+        let cache = Arc::new(DseCache::new());
+        let cold = stage1_with(m, &spec, &grid, n2, &pool, &cache).map_err(|e| e.to_string())?;
+        let warm = stage1_with(m, &spec, &grid, n2, &pool, &cache).map_err(|e| e.to_string())?;
+        prop_assert!(cold.cache_hits == 0, "fresh cache reported {} hits", cold.cache_hits);
+        prop_assert!(cold.cache_misses == grid.len() as u64);
+        prop_assert!(warm.cache_hits == grid.len() as u64, "warm sweep must be all-hit");
+        prop_assert!(warm.cache_misses == 0);
+        prop_assert!(warm.evaluated == cold.evaluated && warm.feasible == cold.feasible);
+        prop_assert!(
+            format!("{:?}", warm.selected) == format!("{:?}", cold.selected),
+            "cached selection diverged from uncached"
+        );
+        prop_assert!(
+            format!("{:?}", warm.trace) == format!("{:?}", cold.trace),
+            "cached trace diverged from uncached"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_stage2_byte_identical_to_serial() {
+    // Stage-2 fan-out must be a pure wall-clock optimization: the whole
+    // BuildOutput from a multi-worker pool is byte-identical (Debug
+    // representation, which prints every f64 exactly) to Pool::new(1).
+    check_cfg("stage2 parallel determinism", Config { cases: 2, seed: 0x5E21A }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let n2 = rng.range(2, 4);
+        let serial_pool = Pool::new(1);
+        let parallel_pool = Pool::new(4);
+        let serial_cache = Arc::new(DseCache::new());
+        let parallel_cache = Arc::new(DseCache::new());
+        let a = build_accelerator_with(m, &spec, &grid, n2, 2, &serial_pool, &serial_cache)
+            .map_err(|e| e.to_string())?;
+        let b = build_accelerator_with(m, &spec, &grid, n2, 2, &parallel_pool, &parallel_cache)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            format!("{a:?}") == format!("{b:?}"),
+            "parallel stage 2 diverged from serial for {} (n2={n2})",
+            m.name
+        );
         Ok(())
     });
 }
