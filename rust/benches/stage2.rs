@@ -1,0 +1,103 @@
+//! Stage-2 move-engine benchmarks: Algorithm-2 co-optimization with the
+//! legacy move registry (the PR-2 pipeline/bus/buffer trio) vs the full
+//! registry (plus unroll rebalance, precision down-scaling and per-layer
+//! tiling overrides), from the expert starting design.
+//!
+//! Emits a machine-readable summary to `BENCH_stage2.json` (override with
+//! `BENCH_STAGE2_JSON=path`) and exits non-zero when the full registry's
+//! result is *worse* than the legacy one on the spec's objective — that
+//! ordering is guaranteed by construction (the extension phase only
+//! accepts objective-improving moves), so a violation means the engine is
+//! broken, not the machine slow. The CI bench-smoke job runs this with
+//! `BENCH_QUICK=1 BENCH_STAGE2_TINY=1` and uploads the JSON as an
+//! artifact.
+
+use std::path::Path;
+
+use autodnnchip::builder::moves::is_extension_action;
+use autodnnchip::builder::{stage2, stage2_with_moves, Candidate, MoveSet, Spec};
+use autodnnchip::dnn::zoo;
+use autodnnchip::predictor::predict_coarse;
+use autodnnchip::templates::{HwConfig, TemplateId};
+use autodnnchip::util::bench::Bench;
+
+fn expert_candidate(m: &autodnnchip::dnn::Model) -> Candidate {
+    let cfg = HwConfig::ultra96_default();
+    let g = TemplateId::Hetero.build(m, &cfg).expect("expert design builds");
+    let coarse = predict_coarse(&g, &cfg.tech).expect("expert design predicts");
+    Candidate { template: TemplateId::Hetero, fine_latency_ms: coarse.latency_ms, cfg, coarse }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("stage2");
+
+    let m = if std::env::var("BENCH_STAGE2_TINY").is_ok() {
+        zoo::skynet_tiny()
+    } else {
+        zoo::by_name("SK8").unwrap()
+    };
+    let spec = Spec::ultra96_object_detection();
+    let cand = expert_candidate(&m);
+    let full_set = MoveSet::full(&m, &spec);
+
+    b.run("moveset_full_construction", || MoveSet::full(&m, &spec).names().len());
+
+    let legacy_ns = b
+        .run(&format!("stage2_legacy/{}", m.name), || {
+            stage2(&m, &spec, cand.clone()).unwrap().steps.len()
+        })
+        .mean_ns;
+    let full_ns = b
+        .run(&format!("stage2_full/{}", m.name), || {
+            stage2_with_moves(&m, &spec, cand.clone(), &full_set).unwrap().steps.len()
+        })
+        .mean_ns;
+
+    // One run of each for the derived quality metrics (deterministic, so
+    // any iteration reports the same result).
+    let legacy = stage2(&m, &spec, cand.clone()).unwrap();
+    let full = stage2_with_moves(&m, &spec, cand, &full_set).unwrap();
+    let score =
+        |c: &Candidate| spec.objective_score(c.fine_latency_ms, c.coarse.energy_uj());
+    let (legacy_score, full_score) = (score(&legacy.best), score(&full.best));
+    let gain_pct = (legacy_score - full_score) / legacy_score * 100.0;
+    let new_moves_accepted =
+        full.steps.iter().filter(|s| s.accepted && is_extension_action(&s.action)).count();
+
+    println!(
+        "\n  legacy {:.4} vs full {:.4} on the objective ({:.2}% gain, {} extension moves, \
+         {:.2}x search cost)",
+        legacy_score,
+        full_score,
+        gain_pct,
+        new_moves_accepted,
+        full_ns / legacy_ns.max(1.0)
+    );
+
+    let path =
+        std::env::var("BENCH_STAGE2_JSON").unwrap_or_else(|_| "BENCH_stage2.json".to_string());
+    let derived = [
+        ("stage2_legacy_ns", legacy_ns),
+        ("stage2_full_ns", full_ns),
+        ("stage2_full_cost_ratio", full_ns / legacy_ns.max(1.0)),
+        ("legacy_objective", legacy_score),
+        ("full_objective", full_score),
+        ("full_gain_pct", gain_pct),
+        ("legacy_steps", legacy.steps.len() as f64),
+        ("full_steps", full.steps.len() as f64),
+        ("new_moves_accepted", new_moves_accepted as f64),
+    ];
+    b.write_json(Path::new(&path), "stage2", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+
+    // Gate: the full registry must never lose to the legacy one on the
+    // optimized objective (the extension phase only accepts improvements).
+    if full_score > legacy_score * (1.0 + 1e-12) {
+        eprintln!(
+            "FAIL: full move set ended at {full_score} on the objective, worse than the \
+             legacy {legacy_score}"
+        );
+        std::process::exit(1);
+    }
+}

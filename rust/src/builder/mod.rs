@@ -8,6 +8,11 @@
 //!   deterministic), budget filtering, top-N₂ selection.
 //! * [`stage2`](mod@stage2) — Algorithm-2 inter-IP pipeline co-optimization
 //!   driven by the fine-grained run-time simulation.
+//! * [`moves`] — the pluggable registry of stage-2 design transforms
+//!   ([`Move`] / [`MoveSet`]): the legacy pipeline/bus/buffer trio plus
+//!   unroll rebalance, precision down-scaling and per-layer tiling
+//!   overrides. The full set is the default for builds; `MoveSet::legacy()`
+//!   reproduces the PR-2 loop byte-for-byte.
 //! * [`pnr`] — deterministic placement-and-route feasibility model
 //!   (utilization-driven derating on FPGA, wire load on ASIC).
 //! * [`cache`] — thread-safe memo table for stage-1 coarse predictions,
@@ -21,6 +26,7 @@
 //! count.
 
 pub mod cache;
+pub mod moves;
 pub mod pnr;
 pub mod spec;
 pub mod stage1;
@@ -36,10 +42,11 @@ use crate::predictor::CoarseReport;
 use crate::templates::{HwConfig, TemplateId};
 
 pub use cache::{CacheKey, CacheStats, DseCache};
+pub use moves::{AppliedMove, BoxedMove, Move, MoveSet};
 pub use pnr::{pnr_check, PnrOutcome};
 pub use spec::{Backend, Objective, Spec, SweepGrid};
 pub use stage1::{stage1, stage1_with, Stage1Output, TracePoint};
-pub use stage2::{stage2, Stage2Report, Stage2Step};
+pub use stage2::{stage2, stage2_with_moves, Stage2Report, Stage2Step};
 
 /// One design point carried between the builder's stages: a template
 /// instantiation, its configuration, the coarse prediction, and the best
@@ -90,9 +97,10 @@ pub fn build_accelerator_with_grid(
     build_accelerator_with(model, spec, grid, n2, n_opt, &pool, DseCache::global())
 }
 
-/// The full flow over an explicit worker pool and prediction cache — the
-/// entry point the coordinator and the experiment loops share, so one pool
-/// and one memo table serve a whole batch of builds.
+/// The full flow over an explicit worker pool and prediction cache, with
+/// the full stage-2 move set for the (model, spec) pair — the entry point
+/// the coordinator and the experiment loops share, so one pool and one
+/// memo table serve a whole batch of builds.
 pub fn build_accelerator_with(
     model: &Model,
     spec: &Spec,
@@ -101,6 +109,24 @@ pub fn build_accelerator_with(
     n_opt: usize,
     pool: &Pool,
     cache: &Arc<DseCache>,
+) -> Result<BuildOutput> {
+    let moves = Arc::new(MoveSet::full(model, spec));
+    build_accelerator_with_moves(model, spec, grid, n2, n_opt, pool, cache, &moves)
+}
+
+/// The most general entry point: the full flow over an explicit pool,
+/// cache *and* stage-2 move registry (`MoveSet::legacy()` reproduces the
+/// PR-2 behavior; ablations compare registries through this).
+#[allow(clippy::too_many_arguments)]
+pub fn build_accelerator_with_moves(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    n_opt: usize,
+    pool: &Pool,
+    cache: &Arc<DseCache>,
+    moves: &Arc<MoveSet>,
 ) -> Result<BuildOutput> {
     let s1 = stage1_with(model, spec, grid, n2, pool, cache)?;
     let (cache_hits, cache_misses) = (s1.cache_hits, s1.cache_misses);
@@ -111,8 +137,10 @@ pub fn build_accelerator_with(
     // run with `Pool::new(1)` — a property test enforces byte-equality.
     let shared_model = Arc::new(model.clone());
     let shared_spec = spec.clone();
-    let refined =
-        pool.map(s1.selected, move |cand| stage2(&shared_model, &shared_spec, cand))?;
+    let shared_moves = Arc::clone(moves);
+    let refined = pool.map(s1.selected, move |cand| {
+        stage2_with_moves(&shared_model, &shared_spec, cand, &shared_moves)
+    })?;
     let mut stage2_reports = Vec::with_capacity(refined.len());
     for report in refined {
         stage2_reports.push(report?);
@@ -174,6 +202,47 @@ mod tests {
         let out = build_accelerator(&m, &spec, 2, 1).unwrap();
         assert!(out.survivors.len() <= 1);
         assert_eq!(out.stage2_reports.len().min(2), out.stage2_reports.len());
+    }
+
+    #[test]
+    fn full_move_set_meets_or_beats_legacy_build() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(2);
+        let cache = Arc::new(DseCache::new());
+        let legacy = build_accelerator_with_moves(
+            &m,
+            &spec,
+            &grid,
+            2,
+            1,
+            &pool,
+            &cache,
+            &Arc::new(MoveSet::legacy()),
+        )
+        .unwrap();
+        let full = build_accelerator_with_moves(
+            &m,
+            &spec,
+            &grid,
+            2,
+            1,
+            &pool,
+            &cache,
+            &Arc::new(MoveSet::full(&m, &spec)),
+        )
+        .unwrap();
+        let score =
+            |c: &Candidate| spec.objective_score(c.fine_latency_ms, c.coarse.energy_uj());
+        let lb = legacy.survivors.first().expect("legacy survivor");
+        let fb = full.survivors.first().expect("full survivor");
+        assert!(
+            score(fb) <= score(lb) * (1.0 + 1e-12),
+            "full move set lost to legacy: {} vs {}",
+            score(fb),
+            score(lb)
+        );
     }
 
     #[test]

@@ -1,0 +1,645 @@
+//! Pluggable stage-2 design transforms (the paper's Algorithm 2 "design
+//! adjustments", generalized): every rebalancing move the co-optimization
+//! can try is a [`Move`] — a named, ordered, applicability-gated transform
+//! from one [`HwConfig`] to a candidate configuration — and the stage-2
+//! loop iterates a [`MoveSet`] registry instead of owning an inline
+//! if-chain. New DSE features (batch mode, new templates, new knobs) plug
+//! in by adding a move, not by editing the search loop.
+//!
+//! Two tiers:
+//!
+//! * **Base** moves — the PR-2 trio plus buffer split: deeper inter-IP
+//!   pipeline, wider bus, bigger activation/weight buffers.
+//!   [`MoveSet::legacy`] carries exactly these, and the engine runs them
+//!   with the original latency-greedy loop, so legacy results are
+//!   byte-identical to the pre-refactor stage 2 (property-tested).
+//! * **Extension** moves — unroll rebalance between the hetero template's
+//!   DW/PW engines, precision down-scaling (16→12→8, gated by
+//!   [`Spec::min_precision_bits`]), and per-layer tiling overrides.
+//!   [`MoveSet::full`] enables them in a second phase that starts from the
+//!   base fixed point and accepts only moves that improve the spec's
+//!   *objective*, so a full-set run can never end worse than a legacy run
+//!   on the metric the spec optimizes.
+//!
+//! Everything here is deterministic and `Send + Sync`: move sets are built
+//! once per build and shared across the stage-2 worker fan-out.
+
+use crate::dnn::Model;
+use crate::graph::{Graph, NodeId};
+use crate::ip::Precision;
+use crate::templates::HwConfig;
+
+use super::spec::Spec;
+
+/// Sanity caps shared with the pre-refactor loop.
+const PIPELINE_CAP: u64 = 64;
+const BUS_CAP: usize = 512;
+const BUF_CAP_BITS: u64 = 32 << 20;
+/// Per-layer tiling override ceiling (finer than this is pure control
+/// overhead at the modeled state granularities).
+const TILE_CAP: u64 = 256;
+/// Unroll-share step and bounds for the DW/PW rebalance, in percent.
+const SHARE_STEP: usize = 10;
+const SHARE_MIN: usize = 5;
+const SHARE_MAX: usize = 75;
+
+/// A move's output: the candidate configuration plus the human-readable
+/// action recorded in the stage-2 step log.
+#[derive(Debug, Clone)]
+pub struct AppliedMove {
+    pub action: String,
+    pub cfg: HwConfig,
+}
+
+/// One stage-2 design transform.
+pub trait Move: Send + Sync + std::fmt::Debug {
+    /// Stable identifier (reports, ablation tables).
+    fn name(&self) -> &'static str;
+
+    /// Relative realization cost, used to order evaluation within an
+    /// iteration: cheap local rebalances first, structural changes last.
+    fn cost_hint(&self) -> u32;
+
+    /// Is the move worth evaluating against the current design? `graph`
+    /// and `bottleneck` let a move target the measured throughput-limiting
+    /// IP (e.g. the rebalance only fires when one hetero engine starves
+    /// the other); `cfg` gates on knob caps.
+    fn applicable(&self, graph: &Graph, bottleneck: NodeId, cfg: &HwConfig) -> bool;
+
+    /// Produce the candidate configuration, or `None` when the knob is
+    /// already at its cap.
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove>;
+}
+
+// ---------------------------------------------------------------------------
+// Base moves (the pre-refactor trio + split buffers, verbatim semantics).
+// ---------------------------------------------------------------------------
+
+/// Double the inter-IP pipelining depth.
+#[derive(Debug, Clone, Copy)]
+pub struct DeeperPipeline;
+
+impl Move for DeeperPipeline {
+    fn name(&self) -> &'static str {
+        "deeper_pipeline"
+    }
+    fn cost_hint(&self) -> u32 {
+        10
+    }
+    fn applicable(&self, _g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        cfg.pipeline < PIPELINE_CAP
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        if cfg.pipeline >= PIPELINE_CAP {
+            return None;
+        }
+        let mut c = cfg.clone();
+        c.pipeline = cfg.pipeline * 2;
+        Some(AppliedMove { action: format!("pipeline {} -> {}", cfg.pipeline, c.pipeline), cfg: c })
+    }
+}
+
+/// Double the bus / DRAM port width.
+#[derive(Debug, Clone, Copy)]
+pub struct WiderBus;
+
+impl Move for WiderBus {
+    fn name(&self) -> &'static str {
+        "wider_bus"
+    }
+    fn cost_hint(&self) -> u32 {
+        20
+    }
+    fn applicable(&self, _g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        cfg.bus_bits < BUS_CAP
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        if cfg.bus_bits >= BUS_CAP {
+            return None;
+        }
+        let mut c = cfg.clone();
+        c.bus_bits = cfg.bus_bits * 2;
+        Some(AppliedMove { action: format!("bus {}b -> {}b", cfg.bus_bits, c.bus_bits), cfg: c })
+    }
+}
+
+/// Double the activation-buffer budget.
+#[derive(Debug, Clone, Copy)]
+pub struct BiggerActBuffer;
+
+impl Move for BiggerActBuffer {
+    fn name(&self) -> &'static str {
+        "bigger_act_buffer"
+    }
+    fn cost_hint(&self) -> u32 {
+        30
+    }
+    fn applicable(&self, _g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        cfg.act_buf_bits < BUF_CAP_BITS
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        if cfg.act_buf_bits >= BUF_CAP_BITS {
+            return None;
+        }
+        let mut c = cfg.clone();
+        c.act_buf_bits = cfg.act_buf_bits * 2;
+        Some(AppliedMove { action: format!("act buffer -> {} Kib", c.act_buf_bits / 1024), cfg: c })
+    }
+}
+
+/// Double the weight-buffer budget.
+#[derive(Debug, Clone, Copy)]
+pub struct BiggerWeightBuffer;
+
+impl Move for BiggerWeightBuffer {
+    fn name(&self) -> &'static str {
+        "bigger_weight_buffer"
+    }
+    fn cost_hint(&self) -> u32 {
+        40
+    }
+    fn applicable(&self, _g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        cfg.w_buf_bits < BUF_CAP_BITS
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        if cfg.w_buf_bits >= BUF_CAP_BITS {
+            return None;
+        }
+        let mut c = cfg.clone();
+        c.w_buf_bits = cfg.w_buf_bits * 2;
+        Some(AppliedMove {
+            action: format!("weight buffer -> {} Kib", c.w_buf_bits / 1024),
+            cfg: c,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extension moves (the ROADMAP's richer move set).
+// ---------------------------------------------------------------------------
+
+/// Shift unroll (MAC) budget between the hetero template's DW and PW
+/// engines, toward whichever one the fine simulation measured as the
+/// bottleneck. Resource-neutral: the total unroll is unchanged.
+#[derive(Debug, Clone, Copy)]
+pub struct UnrollRebalance {
+    pub toward_dw: bool,
+}
+
+impl UnrollRebalance {
+    fn target(&self) -> &'static str {
+        if self.toward_dw {
+            "dw_engine"
+        } else {
+            "pw_engine"
+        }
+    }
+
+    fn next_share(&self, cfg: &HwConfig) -> Option<usize> {
+        if self.toward_dw {
+            let n = cfg.dw_share_pct + SHARE_STEP;
+            (n <= SHARE_MAX).then_some(n)
+        } else {
+            cfg.dw_share_pct.checked_sub(SHARE_STEP).filter(|&n| n >= SHARE_MIN)
+        }
+    }
+}
+
+impl Move for UnrollRebalance {
+    fn name(&self) -> &'static str {
+        if self.toward_dw {
+            "unroll_rebalance_to_dw"
+        } else {
+            "unroll_rebalance_to_pw"
+        }
+    }
+    fn cost_hint(&self) -> u32 {
+        if self.toward_dw {
+            51
+        } else {
+            50
+        }
+    }
+    fn applicable(&self, g: &Graph, bn: NodeId, cfg: &HwConfig) -> bool {
+        // Only meaningful on the heterogeneous template, and only in the
+        // direction that feeds the measured bottleneck engine.
+        g.node_by_name("dw_engine").is_some()
+            && g.node_by_name("pw_engine").is_some()
+            && g.nodes[bn].name == self.target()
+            && self.next_share(cfg).is_some()
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        let next = self.next_share(cfg)?;
+        let mut c = cfg.clone();
+        c.dw_share_pct = next;
+        Some(AppliedMove {
+            action: format!("dw share {}% -> {}%", cfg.dw_share_pct, next),
+            cfg: c,
+        })
+    }
+}
+
+/// Graph-name prefixes of the templates whose *schedules* are precision-
+/// aware: they tile and price activation/weight traffic at the configured
+/// hardware precision (`templates::common::layer_bits` / the hetero
+/// bundles). The ShiDianNao/Eyeriss templates still schedule traffic at
+/// the model's export precision, so precision- and tiling-sensitive moves
+/// gate themselves off there rather than optimize against a cost model
+/// that only half-reacts.
+const PREC_TILED_TEMPLATES: [&str; 3] = ["adder_tree/", "hetero_dw_pw/", "systolic/"];
+
+fn is_prec_tiled(g: &Graph) -> bool {
+    PREC_TILED_TEMPLATES.iter().any(|p| g.name.starts_with(p))
+}
+
+/// One rung down the precision ladder: operands wider than 12 bits drop to
+/// 12, otherwise to 8 — never below the spec's accuracy floor, and never
+/// *raising* a width (an operand already below the next rung stays put).
+/// Only applicable on precision-aware templates (see
+/// [`PREC_TILED_TEMPLATES`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PrecisionDown {
+    /// [`Spec::min_precision_bits`], baked in at move-set construction.
+    pub min_bits: usize,
+}
+
+fn rung_down(bits: usize) -> usize {
+    if bits > 12 {
+        12
+    } else {
+        8
+    }
+}
+
+impl PrecisionDown {
+    fn next_prec(&self, cfg: &HwConfig) -> Option<Precision> {
+        let Precision { w_bits, a_bits } = cfg.prec;
+        let (nw, na) = (rung_down(w_bits), rung_down(a_bits));
+        let ok = (nw, na) != (w_bits, a_bits)
+            && nw <= w_bits
+            && na <= a_bits
+            && nw >= self.min_bits
+            && na >= self.min_bits;
+        ok.then(|| Precision::new(nw, na))
+    }
+}
+
+impl Move for PrecisionDown {
+    fn name(&self) -> &'static str {
+        "precision_down"
+    }
+    fn cost_hint(&self) -> u32 {
+        60
+    }
+    fn applicable(&self, g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        is_prec_tiled(g) && self.next_prec(cfg).is_some()
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        let p = self.next_prec(cfg)?;
+        let mut c = cfg.clone();
+        c.prec = p;
+        Some(AppliedMove {
+            action: format!(
+                "precision <{},{}> -> <{},{}>",
+                cfg.prec.w_bits, cfg.prec.a_bits, p.w_bits, p.a_bits
+            ),
+            cfg: c,
+        })
+    }
+}
+
+/// Double the tiling floor of one DNN layer (the model's heaviest layers
+/// get an instance each), so that layer alone is split finer — more
+/// transfer/compute overlap where it matters, without the global control
+/// overhead of a deeper `pipeline` knob. Honoured by the templates that
+/// tile per layer (adder-tree, hetero, systolic).
+#[derive(Debug, Clone, Copy)]
+pub struct TileDeeper {
+    /// DNN layer index the override targets.
+    pub layer: usize,
+}
+
+impl TileDeeper {
+    fn next_floor(&self, cfg: &HwConfig) -> Option<u64> {
+        // Double from the *effective* floor — the stored override or the
+        // global pipeline depth, whichever is higher — so the proposal is
+        // always a real schedule change, never a no-op re-evaluation of a
+        // floor the pipeline knob has since overtaken.
+        let cur = cfg.tile_override(self.layer).unwrap_or(1).max(cfg.pipeline).max(1);
+        let next = (cur * 2).min(TILE_CAP);
+        (next > cur).then_some(next)
+    }
+}
+
+impl Move for TileDeeper {
+    fn name(&self) -> &'static str {
+        "tile_deeper"
+    }
+    fn cost_hint(&self) -> u32 {
+        45
+    }
+    fn applicable(&self, g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        is_prec_tiled(g) && self.next_floor(cfg).is_some()
+    }
+    fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove> {
+        let next = self.next_floor(cfg)?;
+        let mut c = cfg.clone();
+        c.set_tile_override(self.layer, next);
+        Some(AppliedMove { action: format!("tiles[layer {}] -> {}", self.layer, next), cfg: c })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// A boxed, shareable move.
+pub type BoxedMove = Box<dyn Move>;
+
+/// Does a `Stage2Step::action` string come from an extension move? The
+/// single source of truth for reports (ablation section 5), benches and
+/// tests — the base trio's actions all start with "pipeline", "bus",
+/// "act buffer" or "weight buffer".
+pub fn is_extension_action(action: &str) -> bool {
+    action.starts_with("precision")
+        || action.starts_with("dw share")
+        || action.starts_with("tiles[")
+}
+
+/// The ordered registry of moves the stage-2 loop iterates. Base moves run
+/// in the original latency-greedy phase; extension moves join in a second,
+/// objective-accepting phase that starts from the base fixed point (see
+/// `stage2` module docs).
+#[derive(Debug)]
+pub struct MoveSet {
+    base: Vec<BoxedMove>,
+    extension: Vec<BoxedMove>,
+}
+
+impl MoveSet {
+    fn base_moves() -> Vec<BoxedMove> {
+        vec![
+            Box::new(DeeperPipeline),
+            Box::new(WiderBus),
+            Box::new(BiggerActBuffer),
+            Box::new(BiggerWeightBuffer),
+        ]
+    }
+
+    /// Exactly the pre-refactor move set: stage 2 with this registry is
+    /// byte-identical to PR-2's inline loop.
+    pub fn legacy() -> MoveSet {
+        MoveSet { base: MoveSet::base_moves(), extension: Vec::new() }
+    }
+
+    /// The full registry: base moves plus per-layer tiling overrides for
+    /// the model's heaviest compute layers, DW/PW unroll rebalance, and
+    /// precision down-scaling under the spec's accuracy floor.
+    pub fn full(model: &Model, spec: &Spec) -> MoveSet {
+        let mut extension: Vec<BoxedMove> = Vec::new();
+        // Tiling overrides target the layers owning the most MACs — they
+        // dominate the schedule, so splitting them finer buys the most
+        // overlap per evaluated candidate.
+        let mut ranked: Vec<(usize, u64)> = match model.stats() {
+            Ok(st) => st
+                .per_layer
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.macs > 0)
+                .map(|(i, s)| (i, s.macs))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (li, _) in ranked.into_iter().take(2) {
+            extension.push(Box::new(TileDeeper { layer: li }));
+        }
+        extension.push(Box::new(UnrollRebalance { toward_dw: false }));
+        extension.push(Box::new(UnrollRebalance { toward_dw: true }));
+        extension.push(Box::new(PrecisionDown { min_bits: spec.min_precision_bits }));
+        // Evaluation order within an iteration follows the cost hints
+        // (stable: equal hints keep construction order).
+        extension.sort_by_key(|m| m.cost_hint());
+        MoveSet { base: MoveSet::base_moves(), extension }
+    }
+
+    /// Moves of one engine phase, in evaluation order.
+    pub fn phase_moves(&self, extended: bool) -> impl Iterator<Item = &BoxedMove> {
+        self.base.iter().chain(self.extension.iter().filter(move |_| extended))
+    }
+
+    /// Does this set carry extension moves (i.e. run a second phase)?
+    pub fn has_extension(&self) -> bool {
+        !self.extension.is_empty()
+    }
+
+    /// Names of every registered move, base first.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.phase_moves(true).map(|m| m.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::zoo;
+    use crate::templates::{HwConfig, TemplateId};
+
+    fn hetero_graph_and_bottleneck() -> (Graph, NodeId) {
+        let m = zoo::skynet_tiny();
+        let cfg = HwConfig::ultra96_default();
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let pw = g.node_by_name("pw_engine").unwrap();
+        (g, pw)
+    }
+
+    #[test]
+    fn legacy_moves_reproduce_pr2_actions_and_configs() {
+        let (g, bn) = hetero_graph_and_bottleneck();
+        let cfg = HwConfig::ultra96_default();
+        let set = MoveSet::legacy();
+        assert!(!set.has_extension());
+        let applied: Vec<AppliedMove> = set
+            .phase_moves(false)
+            .filter(|m| m.applicable(&g, bn, &cfg))
+            .map(|m| m.apply(&cfg).unwrap())
+            .collect();
+        let actions: Vec<&str> = applied.iter().map(|a| a.action.as_str()).collect();
+        assert_eq!(
+            actions,
+            vec![
+                "pipeline 2 -> 4",
+                "bus 128b -> 256b",
+                "act buffer -> 4096 Kib",
+                "weight buffer -> 4096 Kib",
+            ]
+        );
+        assert_eq!(applied[0].cfg.pipeline, 4);
+        assert_eq!(applied[1].cfg.bus_bits, 256);
+        assert_eq!(applied[2].cfg.act_buf_bits, 4 << 20);
+        assert_eq!(applied[3].cfg.w_buf_bits, 4 << 20);
+    }
+
+    #[test]
+    fn caps_make_moves_inapplicable() {
+        let (g, bn) = hetero_graph_and_bottleneck();
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 64;
+        cfg.bus_bits = 512;
+        cfg.act_buf_bits = 32 << 20;
+        cfg.w_buf_bits = 32 << 20;
+        for m in MoveSet::legacy().phase_moves(false) {
+            assert!(!m.applicable(&g, bn, &cfg), "{} applicable at cap", m.name());
+            assert!(m.apply(&cfg).is_none(), "{} applied at cap", m.name());
+        }
+    }
+
+    #[test]
+    fn precision_ladder_descends_and_respects_floor() {
+        let (g, bn) = hetero_graph_and_bottleneck();
+        let mv = PrecisionDown { min_bits: 8 };
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.prec = Precision::new(16, 16);
+        let a = mv.apply(&cfg).unwrap();
+        assert_eq!(a.cfg.prec, Precision::new(12, 12));
+        assert_eq!(a.action, "precision <16,16> -> <12,12>");
+        let b = mv.apply(&a.cfg).unwrap();
+        assert_eq!(b.cfg.prec, Precision::new(8, 8));
+        assert!(mv.apply(&b.cfg).is_none(), "8-bit is the bottom rung");
+        assert!(!mv.applicable(&g, bn, &b.cfg));
+
+        // <11,9> steps straight to <8,8> when the floor allows it...
+        let mut c119 = HwConfig::ultra96_default();
+        c119.prec = Precision::new(11, 9);
+        assert_eq!(mv.apply(&c119).unwrap().cfg.prec, Precision::new(8, 8));
+        // ...and is pinned entirely by a 9-bit accuracy floor.
+        let gated = PrecisionDown { min_bits: 9 };
+        assert!(!gated.applicable(&g, bn, &c119));
+        assert!(gated.apply(&c119).is_none());
+        // A mixed width never rises: <16,8> drops only the wide operand.
+        let mut mixed = HwConfig::ultra96_default();
+        mixed.prec = Precision::new(16, 8);
+        assert_eq!(mv.apply(&mixed).unwrap().cfg.prec, Precision::new(12, 8));
+    }
+
+    #[test]
+    fn rebalance_targets_the_bottleneck_engine_only() {
+        let (g, pw) = hetero_graph_and_bottleneck();
+        let dw = g.node_by_name("dw_engine").unwrap();
+        let cfg = HwConfig::ultra96_default();
+        let to_pw = UnrollRebalance { toward_dw: false };
+        let to_dw = UnrollRebalance { toward_dw: true };
+        assert!(to_pw.applicable(&g, pw, &cfg));
+        assert!(!to_dw.applicable(&g, pw, &cfg));
+        assert!(to_dw.applicable(&g, dw, &cfg));
+        assert!(!to_pw.applicable(&g, dw, &cfg));
+        let a = to_pw.apply(&cfg).unwrap();
+        assert_eq!(a.cfg.dw_share_pct, 15);
+        assert_eq!(a.action, "dw share 25% -> 15%");
+        // Bounds: the share never leaves [5, 75].
+        let mut low = cfg.clone();
+        low.dw_share_pct = 5;
+        assert!(to_pw.apply(&low).is_none());
+        let mut high = cfg.clone();
+        high.dw_share_pct = 75;
+        assert!(to_dw.apply(&high).is_none());
+        // Not applicable on a single-engine template.
+        let m = zoo::skynet_tiny();
+        let at = TemplateId::AdderTree.build(&m, &cfg).unwrap();
+        let pe = at.node_by_name("pe").unwrap();
+        assert!(!to_pw.applicable(&at, pe, &cfg));
+    }
+
+    #[test]
+    fn tile_deeper_doubles_from_pipeline_and_caps() {
+        let (g, bn) = hetero_graph_and_bottleneck();
+        let mv = TileDeeper { layer: 0 };
+        let cfg = HwConfig::ultra96_default(); // pipeline = 2
+        assert!(mv.applicable(&g, bn, &cfg));
+        let a = mv.apply(&cfg).unwrap();
+        assert_eq!(a.cfg.tile_override(0), Some(4));
+        assert_eq!(a.action, "tiles[layer 0] -> 4");
+        let b = mv.apply(&a.cfg).unwrap();
+        assert_eq!(b.cfg.tile_override(0), Some(8));
+        let mut capped = cfg.clone();
+        capped.set_tile_override(0, 256);
+        assert!(mv.apply(&capped).is_none());
+        assert!(!mv.applicable(&g, bn, &capped));
+        // The schedule of untiled templates is override-blind, so the move
+        // gates itself off there.
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        let asic = HwConfig::asic_default();
+        let ey = TemplateId::Eyeriss.build(&m, &asic).unwrap();
+        assert!(!mv.applicable(&ey, 0, &asic));
+    }
+
+    #[test]
+    fn precision_down_gates_off_on_precision_blind_templates() {
+        // The ShiDianNao/Eyeriss schedules still price activation traffic
+        // at the model's export precision, so the precision move must not
+        // optimize against their half-reacting cost model.
+        let mv = PrecisionDown { min_bits: 8 };
+        let asic = HwConfig::asic_default(); // <16,16>: the ladder is open
+        let m = zoo::shidiannao_benchmarks().remove(0);
+        assert!(mv.next_prec(&asic).is_some(), "ladder itself must be open");
+        let ey = TemplateId::Eyeriss.build(&m, &asic).unwrap();
+        let sdn = TemplateId::ShiDianNao.build(&m, &asic).unwrap();
+        assert!(!mv.applicable(&ey, 0, &asic));
+        assert!(!mv.applicable(&sdn, 0, &asic));
+        // ...but stays applicable on every precision-aware template.
+        let fpga = HwConfig::ultra96_default();
+        let tiny = zoo::skynet_tiny();
+        for t in [TemplateId::AdderTree, TemplateId::Hetero, TemplateId::Systolic] {
+            let g = t.build(&tiny, &fpga).unwrap();
+            assert!(mv.applicable(&g, 0, &fpga), "{:?}", t);
+        }
+    }
+
+    #[test]
+    fn tile_deeper_proposes_beyond_the_pipeline_floor() {
+        // Once the pipeline knob overtakes a stored override, the next
+        // proposal must still be a real schedule change (> pipeline).
+        let (g, bn) = hetero_graph_and_bottleneck();
+        let mv = TileDeeper { layer: 0 };
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.set_tile_override(0, 4);
+        cfg.pipeline = 16;
+        let a = mv.apply(&cfg).unwrap();
+        assert_eq!(a.cfg.tile_override(0), Some(32), "must double the effective floor");
+        assert!(mv.applicable(&g, bn, &cfg));
+    }
+
+    #[test]
+    fn extension_action_predicate_matches_move_output() {
+        let cfg = HwConfig::ultra96_default();
+        for m in MoveSet::base_moves() {
+            let a = m.apply(&cfg).unwrap();
+            assert!(!is_extension_action(&a.action), "{}", a.action);
+        }
+        let prec = PrecisionDown { min_bits: 8 }.apply(&cfg).unwrap();
+        assert!(is_extension_action(&prec.action), "{}", prec.action);
+        let reb = UnrollRebalance { toward_dw: false }.apply(&cfg).unwrap();
+        assert!(is_extension_action(&reb.action), "{}", reb.action);
+        let tile = TileDeeper { layer: 1 }.apply(&cfg).unwrap();
+        assert!(is_extension_action(&tile.action), "{}", tile.action);
+    }
+
+    #[test]
+    fn full_set_orders_by_cost_hint_and_names_are_unique_enough() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let set = MoveSet::full(&m, &spec);
+        assert!(set.has_extension());
+        let hints: Vec<u32> = set.phase_moves(true).map(|m| m.cost_hint()).collect();
+        for w in hints.windows(2) {
+            assert!(w[0] <= w[1], "moves not ordered by cost hint: {hints:?}");
+        }
+        let names = set.names();
+        assert!(names.contains(&"deeper_pipeline"));
+        assert!(names.contains(&"tile_deeper"));
+        assert!(names.contains(&"unroll_rebalance_to_pw"));
+        assert!(names.contains(&"precision_down"));
+        // Base-only iteration hides the extension tier.
+        assert_eq!(set.phase_moves(false).count(), 4);
+    }
+}

@@ -57,6 +57,11 @@ pub struct Spec {
     /// Power budget in mW.
     pub max_power_mw: f64,
     pub objective: Objective,
+    /// Accuracy floor for the stage-2 precision-down-scaling move: neither
+    /// operand of the hardware precision may be scaled below this many
+    /// bits. 8 permits the full 16→12→8 ladder; 9+ pins the precision the
+    /// accuracy requirement dictates (e.g. the DAC-SDC `<11,9>` setting).
+    pub min_precision_bits: usize,
 }
 
 impl Spec {
@@ -68,6 +73,7 @@ impl Spec {
             min_fps: 20.0,
             max_power_mw: 10_000.0,
             objective: Objective::Latency,
+            min_precision_bits: 8,
         }
     }
 
@@ -80,6 +86,7 @@ impl Spec {
             min_fps: 15.0,
             max_power_mw: 600.0,
             objective: Objective::Edp,
+            min_precision_bits: 8,
         }
     }
 
@@ -191,6 +198,8 @@ impl SweepGrid {
                                             bus_bits: bus,
                                             pipeline,
                                             pe_style: PeStyle::Forwarding,
+                                            dw_share_pct: 25,
+                                            tile_overrides: Vec::new(),
                                         },
                                     ));
                                 }
@@ -240,6 +249,7 @@ mod tests {
             min_fps: 20.0,
             max_power_mw: 10_000.0,
             objective: Objective::Latency,
+            min_precision_bits: 8,
         };
         assert!(!tight.feasible(&c));
         // An impossible throughput floor too.

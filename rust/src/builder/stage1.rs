@@ -212,6 +212,7 @@ mod tests {
             min_fps: 1.0e9,
             max_power_mw: 0.001,
             objective: Objective::Latency,
+            min_precision_bits: 8,
         };
         let grid = SweepGrid::for_backend(&spec.backend);
         let s1 = stage1(&m, &spec, &grid, 4).unwrap();

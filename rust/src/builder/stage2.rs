@@ -2,11 +2,22 @@
 //! pipeline co-optimization driven by the fine-grained run-time simulation.
 //!
 //! Each iteration simulates the current design, identifies the bottleneck
-//! IP from the per-IP busy/idle accounting, and tries a small set of
-//! rebalancing moves (deeper inter-IP pipelining, wider bus, bigger
-//! activation/weight buffers). The best feasible improving move is
-//! accepted; the loop stops at a fixed point (no move improves latency by
-//! more than `MIN_REL_GAIN`) or after `MAX_ITERS` iterations.
+//! IP from the per-IP busy/idle accounting, and tries every applicable
+//! transform in a [`MoveSet`] registry (`builder::moves`). The best
+//! feasible improving move is accepted; the loop stops at a fixed point or
+//! after `MAX_ITERS` iterations per phase.
+//!
+//! The engine runs in (up to) two phases:
+//!
+//! 1. **Base phase** — the registry's base moves under the original
+//!    latency-greedy acceptance. With [`MoveSet::legacy`] this is the
+//!    whole run and is byte-identical to the pre-refactor loop (a property
+//!    test replays the PR-2 algorithm against it).
+//! 2. **Extension phase** — from the base fixed point, the extension moves
+//!    join and acceptance switches to the spec's *objective* score. Since
+//!    the phase only ever accepts score-improving feasible moves, a
+//!    full-set run meets or beats the legacy run's objective value on
+//!    every workload, by construction.
 //!
 //! Each candidate's refinement is independent, so `builder` fans [`stage2`]
 //! calls out over the coordinator's worker pool: everything the move loop
@@ -24,6 +35,7 @@ use crate::graph::{Graph, NodeId};
 use crate::predictor::{predict_coarse, simulate_prevalidated, CoarseReport, FineReport};
 use crate::templates::{HwConfig, TemplateId};
 
+use super::moves::MoveSet;
 use super::spec::Spec;
 use super::stage1::TracePoint;
 use super::Candidate;
@@ -82,15 +94,20 @@ struct EvalPoint {
 // The whole working set of the move loop crosses thread boundaries when
 // stage 2 fans out over the pool; keep it `Send` by construction. (Adding
 // an `Rc`/`RefCell` anywhere inside these types breaks this at compile
-// time, here, rather than at the distant `Pool::map` call site.)
+// time, here, rather than at the distant `Pool::map` call site.) The
+// shared move registry additionally must be `Sync`: one `Arc<MoveSet>`
+// serves every concurrent refinement.
 #[allow(dead_code)]
 fn assert_move_loop_state_is_send() {
     fn assert_send<T: Send>() {}
+    fn assert_sync<T: Sync>() {}
     assert_send::<Model>();
     assert_send::<Spec>();
     assert_send::<Candidate>();
     assert_send::<EvalPoint>();
     assert_send::<Stage2Report>();
+    assert_send::<MoveSet>();
+    assert_sync::<MoveSet>();
 }
 
 /// Build and predict one design point. Structural validation runs once on
@@ -121,36 +138,141 @@ fn throughput_bottleneck(g: &Graph, fine: &FineReport) -> NodeId {
         .unwrap_or(fine.bottleneck)
 }
 
-/// Rebalancing moves applicable to a configuration. Resource effects are
-/// checked by the caller against the spec, so moves only bound themselves
-/// by sanity caps.
-fn candidate_moves(cfg: &HwConfig) -> Vec<(String, HwConfig)> {
-    let mut out = Vec::new();
-    if cfg.pipeline < 64 {
-        let mut c = cfg.clone();
-        c.pipeline = cfg.pipeline * 2;
-        out.push((format!("pipeline {} -> {}", cfg.pipeline, c.pipeline), c));
-    }
-    if cfg.bus_bits < 512 {
-        let mut c = cfg.clone();
-        c.bus_bits = cfg.bus_bits * 2;
-        out.push((format!("bus {}b -> {}b", cfg.bus_bits, c.bus_bits), c));
-    }
-    if cfg.act_buf_bits < (32u64 << 20) {
-        let mut c = cfg.clone();
-        c.act_buf_bits = cfg.act_buf_bits * 2;
-        out.push((format!("act buffer -> {} Kib", c.act_buf_bits / 1024), c));
-    }
-    if cfg.w_buf_bits < (32u64 << 20) {
-        let mut c = cfg.clone();
-        c.w_buf_bits = cfg.w_buf_bits * 2;
-        out.push((format!("weight buffer -> {} Kib", c.w_buf_bits / 1024), c));
-    }
-    out
+/// Acceptance metric of one engine phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Accept {
+    /// Fine-simulated latency (the pre-refactor criterion).
+    Latency,
+    /// The spec's objective over (fine latency, coarse energy).
+    Objective,
 }
 
-/// Run Algorithm 2 on one stage-1 candidate.
+fn phase_score(accept: Accept, spec: &Spec, e: &EvalPoint) -> f64 {
+    match accept {
+        Accept::Latency => e.fine.latency_ms,
+        Accept::Objective => spec.objective_score(e.fine.latency_ms, e.coarse.energy_uj()),
+    }
+}
+
+/// Extra acceptance gate of the extension phase: a candidate must also
+/// close the PnR model, so a phase-2 move can never trade the final PnR
+/// gate away for a better objective (which would let a full-set build
+/// lose a survivor the legacy build kept). The base phase skips this —
+/// it must stay byte-identical to the pre-refactor loop, whose final PnR
+/// check ran only on refined designs.
+fn phase_gate(accept: Accept, template: TemplateId, spec: &Spec, cfg: &HwConfig, e: &EvalPoint) -> bool {
+    match accept {
+        Accept::Latency => true,
+        Accept::Objective => {
+            let cand = Candidate {
+                template,
+                cfg: cfg.clone(),
+                fine_latency_ms: e.fine.latency_ms,
+                coarse: e.coarse.clone(),
+            };
+            super::pnr::pnr_check(&cand, spec).passed()
+        }
+    }
+}
+
+/// Run one greedy phase of the move loop: up to `MAX_ITERS` iterations,
+/// each evaluating every applicable move of the phase and accepting the
+/// best feasible one when it improves the phase's acceptance score by more
+/// than `MIN_REL_GAIN`. `*iter` numbers steps continuously across phases.
+#[allow(clippy::too_many_arguments)]
+fn run_phase(
+    model: &Model,
+    template: TemplateId,
+    spec: &Spec,
+    moves: &MoveSet,
+    extended: bool,
+    accept: Accept,
+    best_cfg: &mut HwConfig,
+    best: &mut EvalPoint,
+    steps: &mut Vec<Stage2Step>,
+    iter: &mut usize,
+) -> Result<()> {
+    let end = *iter + MAX_ITERS;
+    while *iter < end {
+        let bn_now = throughput_bottleneck(&best.graph, &best.fine);
+        let bn_name = best.graph.nodes[bn_now].name.clone();
+        let before_ms = best.fine.latency_ms;
+        let before_score = phase_score(accept, spec, best);
+
+        // Try every applicable move; remember the best feasible one.
+        let mut chosen: Option<(usize, HwConfig, EvalPoint)> = None;
+        for mv in moves.phase_moves(extended) {
+            if !mv.applicable(&best.graph, bn_now, best_cfg) {
+                continue;
+            }
+            let Some(applied) = mv.apply(best_cfg) else { continue };
+            let eval = match evaluate(model, template, &applied.cfg, false) {
+                Ok(e) if spec.feasible(&e.coarse)
+                    && phase_gate(accept, template, spec, &applied.cfg, &e) =>
+                {
+                    Some(e)
+                }
+                _ => None,
+            };
+            let after_ms = eval.as_ref().map(|e| e.fine.latency_ms).unwrap_or(f64::INFINITY);
+            steps.push(Stage2Step {
+                iter: *iter,
+                bottleneck: bn_name.clone(),
+                action: applied.action,
+                latency_ms_before: before_ms,
+                latency_ms_after: after_ms,
+                accepted: false,
+            });
+            if let Some(e) = eval {
+                let improves_on_chosen = match &chosen {
+                    Some((_, _, c)) => phase_score(accept, spec, &e) < phase_score(accept, spec, c),
+                    None => true,
+                };
+                if improves_on_chosen {
+                    chosen = Some((steps.len() - 1, applied.cfg, e));
+                }
+            }
+        }
+
+        match chosen {
+            Some((step_idx, cfg, e))
+                if phase_score(accept, spec, &e) < before_score * (1.0 - MIN_REL_GAIN) =>
+            {
+                steps[step_idx].accepted = true;
+                *best_cfg = cfg;
+                *best = e;
+            }
+            // Fixed point: no move improves this phase any further. Still
+            // consume the iteration number: this sweep logged steps under
+            // it, and a following phase must not reuse it.
+            _ => {
+                *iter += 1;
+                break;
+            }
+        }
+        *iter += 1;
+    }
+    Ok(())
+}
+
+/// Run Algorithm 2 on one stage-1 candidate with the legacy move set
+/// (byte-identical to the pre-refactor stage 2).
 pub fn stage2(model: &Model, spec: &Spec, cand: Candidate) -> Result<Stage2Report> {
+    stage2_with_moves(model, spec, cand, &MoveSet::legacy())
+}
+
+/// Run Algorithm 2 on one stage-1 candidate over an explicit move
+/// registry. Base moves run first under latency-greedy acceptance; if the
+/// registry carries extension moves, a second phase continues from that
+/// fixed point with the whole registry under objective-score acceptance
+/// (see the module docs for why this ordering guarantees the full set
+/// never loses to the legacy set).
+pub fn stage2_with_moves(
+    model: &Model,
+    spec: &Spec,
+    cand: Candidate,
+    moves: &MoveSet,
+) -> Result<Stage2Report> {
     let template = cand.template;
     let initial = evaluate(model, template, &cand.cfg, true)?;
     let bn = throughput_bottleneck(&initial.graph, &initial.fine);
@@ -161,48 +283,33 @@ pub fn stage2(model: &Model, spec: &Spec, cand: Candidate) -> Result<Stage2Repor
     let mut best_cfg = cand.cfg.clone();
     let mut best = initial;
     let mut steps: Vec<Stage2Step> = Vec::new();
+    let mut iter = 0usize;
 
-    for iter in 0..MAX_ITERS {
-        let bn_now = throughput_bottleneck(&best.graph, &best.fine);
-        let bn_name = best.graph.nodes[bn_now].name.clone();
-        let before_ms = best.fine.latency_ms;
-
-        // Try every move; remember the best feasible one.
-        let mut chosen: Option<(usize, HwConfig, EvalPoint)> = None;
-        for (action, cfg) in candidate_moves(&best_cfg) {
-            let eval = match evaluate(model, template, &cfg, false) {
-                Ok(e) if spec.feasible(&e.coarse) => Some(e),
-                _ => None,
-            };
-            let after_ms = eval.as_ref().map(|e| e.fine.latency_ms).unwrap_or(f64::INFINITY);
-            steps.push(Stage2Step {
-                iter,
-                bottleneck: bn_name.clone(),
-                action,
-                latency_ms_before: before_ms,
-                latency_ms_after: after_ms,
-                accepted: false,
-            });
-            if let Some(e) = eval {
-                let improves_on_chosen = match &chosen {
-                    Some((_, _, c)) => e.fine.latency_ms < c.fine.latency_ms,
-                    None => true,
-                };
-                if improves_on_chosen {
-                    chosen = Some((steps.len() - 1, cfg, e));
-                }
-            }
-        }
-
-        match chosen {
-            Some((step_idx, cfg, e)) if e.fine.latency_ms < before_ms * (1.0 - MIN_REL_GAIN) => {
-                steps[step_idx].accepted = true;
-                best_cfg = cfg;
-                best = e;
-            }
-            // Fixed point: no move improves the pipeline any further.
-            _ => break,
-        }
+    run_phase(
+        model,
+        template,
+        spec,
+        moves,
+        false,
+        Accept::Latency,
+        &mut best_cfg,
+        &mut best,
+        &mut steps,
+        &mut iter,
+    )?;
+    if moves.has_extension() {
+        run_phase(
+            model,
+            template,
+            spec,
+            moves,
+            true,
+            Accept::Objective,
+            &mut best_cfg,
+            &mut best,
+            &mut steps,
+            &mut iter,
+        )?;
     }
 
     let bottleneck_busy_after = best.fine.per_node[bn].busy_cycles;
@@ -235,7 +342,9 @@ pub fn stage2(model: &Model, spec: &Spec, cand: Candidate) -> Result<Stage2Repor
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::builder::{Backend, Objective};
     use crate::dnn::zoo;
+    use crate::ip::Precision;
 
     /// An un-pipelined expert-style starting candidate, as Fig. 12 uses.
     fn unpipelined_candidate(m: &Model) -> Candidate {
@@ -288,6 +397,75 @@ mod tests {
             "idle grew: {} -> {}",
             rep.bottleneck_idle_before,
             rep.bottleneck_idle_after
+        );
+    }
+
+    #[test]
+    fn legacy_move_set_is_the_default_engine() {
+        // `stage2` and `stage2_with_moves(.., MoveSet::legacy())` are the
+        // same computation.
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let a = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        let b =
+            stage2_with_moves(&m, &spec, unpipelined_candidate(&m), &MoveSet::legacy()).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn extension_moves_fire_and_never_lose_to_legacy() {
+        // A memory-bound design under a relaxed budget: at the legacy
+        // fixed point the DMA path still dominates (the MAC arrays are
+        // vastly over-provisioned), so the precision/tiling extension
+        // moves must find further gains, and the full-set result can never
+        // be worse than the legacy one on the optimized objective.
+        let m = zoo::skynet_tiny();
+        let spec = Spec {
+            backend: Backend::Fpga {
+                dsp: 100_000,
+                bram18k: 100_000,
+                lut: 10_000_000,
+                ff: 10_000_000,
+            },
+            min_fps: 0.0,
+            max_power_mw: 1.0e12,
+            objective: Objective::Latency,
+            min_precision_bits: 8,
+        };
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.prec = Precision::new(16, 16);
+        cfg.unroll = 8192;
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        let cand = Candidate {
+            template: TemplateId::Hetero,
+            fine_latency_ms: coarse.latency_ms,
+            cfg,
+            coarse,
+        };
+        let legacy = stage2(&m, &spec, cand.clone()).unwrap();
+        let full = stage2_with_moves(&m, &spec, cand, &MoveSet::full(&m, &spec)).unwrap();
+        assert!(
+            full.best.fine_latency_ms <= legacy.best.fine_latency_ms * (1.0 + 1e-12),
+            "full {} ms vs legacy {} ms",
+            full.best.fine_latency_ms,
+            legacy.best.fine_latency_ms
+        );
+        let new_accepted: Vec<&Stage2Step> = full
+            .steps
+            .iter()
+            .filter(|s| s.accepted && crate::builder::moves::is_extension_action(&s.action))
+            .collect();
+        assert!(
+            !new_accepted.is_empty(),
+            "no extension move accepted on a memory-bound design: {:?}",
+            full.steps.iter().filter(|s| s.accepted).map(|s| &s.action).collect::<Vec<_>>()
+        );
+        // The full-set log strictly extends the legacy log: phase 1 is the
+        // same computation, step for step.
+        assert_eq!(
+            format!("{:?}", &full.steps[..legacy.steps.len()]),
+            format!("{:?}", &legacy.steps[..]),
         );
     }
 

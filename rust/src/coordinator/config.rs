@@ -5,15 +5,32 @@ use anyhow::{anyhow, Result};
 use crate::builder::{Backend, Objective, Spec};
 use crate::util::json::Json;
 
+/// Which stage-2 move set a run co-optimizes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MoveSetChoice {
+    /// The three PR-2 moves only (pipeline / bus / buffers).
+    Legacy,
+    /// Legacy plus unroll rebalance, precision down-scaling and per-layer
+    /// tiling overrides (the default).
+    #[default]
+    Full,
+}
+
 /// One Chip-Builder run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Zoo model name (ignored when `model_json` is set).
     pub model: String,
+    /// Path to a framework-export JSON model (`dnn::parser` format); takes
+    /// precedence over `model`, so workloads outside the zoo can be built.
+    pub model_json: Option<String>,
     pub spec: Spec,
     /// Stage-1 survivors carried into stage 2 (paper's N₂).
     pub n2: usize,
     /// Final candidates emitted (paper's N_opt).
     pub n_opt: usize,
+    /// Stage-2 move set ("moves": "legacy" | "full").
+    pub moves: MoveSetChoice,
     pub out_dir: Option<String>,
     pub rtl_out: Option<String>,
 }
@@ -23,14 +40,18 @@ impl RunConfig {
     /// ```json
     /// { "model": "SK", "backend": "fpga", "objective": "latency",
     ///   "min_fps": 20, "max_power_mw": 10000, "n2": 4, "n_opt": 2,
+    ///   "min_precision_bits": 8, "moves": "full",
     ///   "out_dir": "results/sk", "rtl_out": "results/sk/rtl" }
     /// ```
+    /// `"model_json": "path.json"` imports a framework-export model
+    /// instead of naming a zoo entry (then `"model"` may be omitted).
     pub fn from_json(j: &Json) -> Result<RunConfig> {
-        let model = j
-            .get("model")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow!("config: missing 'model'"))?
-            .to_string();
+        let model_json = j.get("model_json").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let model = match j.get("model").and_then(|v| v.as_str()) {
+            Some(m) => m.to_string(),
+            None if model_json.is_some() => String::new(),
+            None => return Err(anyhow!("config: missing 'model' (or 'model_json')")),
+        };
         let backend = match j.get("backend").and_then(|v| v.as_str()).unwrap_or("fpga") {
             "fpga" => Backend::Fpga {
                 dsp: j.get("dsp").and_then(|v| v.as_usize()).unwrap_or(360),
@@ -55,12 +76,23 @@ impl RunConfig {
             min_fps: j.get("min_fps").and_then(|v| v.as_f64()).unwrap_or(20.0),
             max_power_mw: j.get("max_power_mw").and_then(|v| v.as_f64()).unwrap_or(10_000.0),
             objective,
+            min_precision_bits: j
+                .get("min_precision_bits")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(8),
+        };
+        let moves = match j.get("moves").and_then(|v| v.as_str()).unwrap_or("full") {
+            "legacy" => MoveSetChoice::Legacy,
+            "full" => MoveSetChoice::Full,
+            other => return Err(anyhow!("config: unknown move set '{other}'")),
         };
         Ok(RunConfig {
             model,
+            model_json,
             spec,
             n2: j.get("n2").and_then(|v| v.as_usize()).unwrap_or(4),
             n_opt: j.get("n_opt").and_then(|v| v.as_usize()).unwrap_or(2),
+            moves,
             out_dir: j.get("out_dir").and_then(|v| v.as_str()).map(|s| s.to_string()),
             rtl_out: j.get("rtl_out").and_then(|v| v.as_str()).map(|s| s.to_string()),
         })
@@ -84,6 +116,26 @@ mod tests {
         assert_eq!(c.model, "SK");
         assert_eq!(c.n2, 4);
         assert!(matches!(c.spec.backend, Backend::Fpga { dsp: 360, .. }));
+        assert_eq!(c.spec.min_precision_bits, 8);
+        assert_eq!(c.moves, MoveSetChoice::Full);
+        assert!(c.model_json.is_none());
+    }
+
+    #[test]
+    fn parses_model_json_moves_and_precision_floor() {
+        let j = Json::parse(
+            r#"{"model_json":"examples/models/tinyconv.json",
+                "moves":"legacy","min_precision_bits":9}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.model_json.as_deref(), Some("examples/models/tinyconv.json"));
+        assert_eq!(c.moves, MoveSetChoice::Legacy);
+        assert_eq!(c.spec.min_precision_bits, 9);
+        // Neither model nor model_json is an error; unknown move set too.
+        assert!(RunConfig::from_json(&Json::parse(r#"{"n2":1}"#).unwrap()).is_err());
+        let bad = Json::parse(r#"{"model":"SK","moves":"wild"}"#).unwrap();
+        assert!(RunConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -11,17 +11,19 @@ pub mod config;
 pub mod pool;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::builder::{
-    build_accelerator_with, pnr_check, BuildOutput, DseCache, PnrOutcome, SweepGrid,
+    build_accelerator_with_moves, pnr_check, BuildOutput, DseCache, MoveSet, PnrOutcome,
+    SweepGrid,
 };
-use crate::dnn::zoo;
+use crate::dnn::{parser, zoo, Model};
 use crate::rtlgen;
 use crate::util::json::{obj, Json};
 
-pub use config::RunConfig;
+pub use config::{MoveSetChoice, RunConfig};
 pub use pool::Pool;
 
 /// Outcome summary written to `<out_dir>/result.json`.
@@ -30,16 +32,32 @@ pub struct RunSummary {
     pub result_json: Json,
 }
 
+/// Resolve the workload of a run: a framework-export JSON file when
+/// `model_json` is set (the paper's "DNN parser" entry path — workloads
+/// outside the zoo), otherwise a zoo model by name.
+fn resolve_model(cfg: &RunConfig) -> Result<Model> {
+    match &cfg.model_json {
+        Some(path) => parser::load_file(Path::new(path))
+            .with_context(|| format!("importing model JSON '{path}'")),
+        None => zoo::by_name(&cfg.model).with_context(|| {
+            format!("unknown model '{}' (see `autodnnchip list-models`)", cfg.model)
+        }),
+    }
+}
+
 /// Execute a full Chip-Builder run from a configuration. The run shares
 /// one worker pool across both DSE stages and the process-wide
 /// [`DseCache`], so back-to-back runs in one process (experiment loops,
 /// repeated builds) serve stage-1 predictions from warm lookups.
 pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
-    let model = zoo::by_name(&cfg.model)
-        .with_context(|| format!("unknown model '{}' (see `autodnnchip list-models`)", cfg.model))?;
+    let model = resolve_model(cfg)?;
     let pool = Pool::default_size();
     let grid = SweepGrid::for_backend(&cfg.spec.backend);
-    let build = build_accelerator_with(
+    let moves = Arc::new(match cfg.moves {
+        MoveSetChoice::Legacy => MoveSet::legacy(),
+        MoveSetChoice::Full => MoveSet::full(&model, &cfg.spec),
+    });
+    let build = build_accelerator_with_moves(
         &model,
         &cfg.spec,
         &grid,
@@ -47,6 +65,7 @@ pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
         cfg.n_opt,
         &pool,
         DseCache::global(),
+        &moves,
     )?;
 
     let mut designs = Vec::new();
@@ -77,7 +96,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
         }
     }
     let result_json = obj(vec![
-        ("model", cfg.model.as_str().into()),
+        ("model", model.name.as_str().into()),
+        (
+            "moves",
+            match cfg.moves {
+                MoveSetChoice::Legacy => "legacy".into(),
+                MoveSetChoice::Full => "full".into(),
+            },
+        ),
         ("evaluated", build.evaluated.into()),
         (
             "dse_cache",
@@ -120,9 +146,11 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("coord_{}", std::process::id()));
         let cfg = RunConfig {
             model: "SK8".into(),
+            model_json: None,
             spec: Spec::ultra96_object_detection(),
             n2: 2,
             n_opt: 1,
+            moves: MoveSetChoice::Full,
             out_dir: Some(dir.to_string_lossy().into_owned()),
             rtl_out: Some(dir.join("rtl").to_string_lossy().into_owned()),
         };
@@ -145,12 +173,48 @@ mod tests {
     fn unknown_model_is_error() {
         let cfg = RunConfig {
             model: "not_a_model".into(),
+            model_json: None,
             spec: Spec::ultra96_object_detection(),
             n2: 1,
             n_opt: 1,
+            moves: MoveSetChoice::Full,
             out_dir: None,
             rtl_out: None,
         };
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn model_json_takes_precedence_over_zoo_name() {
+        // A parser-format file drives the build even when `model` names
+        // nothing in the zoo; the result is stamped with the file's model
+        // name.
+        let dir = std::env::temp_dir().join(format!("coord_mj_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("custom.json");
+        std::fs::write(
+            &path,
+            r#"{"name":"custom_net","input":[3,16,16],"w_bits":11,"a_bits":9,"layers":[
+                {"name":"c1","type":"conv","out_c":8,"k":3,"pad":1},
+                {"name":"r1","type":"relu"},
+                {"name":"c2","type":"conv","out_c":8,"k":1}
+            ]}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig {
+            model: "not_a_model".into(),
+            model_json: Some(path.to_string_lossy().into_owned()),
+            spec: Spec::ultra96_object_detection(),
+            n2: 1,
+            n_opt: 1,
+            moves: MoveSetChoice::Legacy,
+            out_dir: None,
+            rtl_out: None,
+        };
+        let s = run(&cfg).expect("model_json run");
+        assert!(s.build.evaluated > 0);
+        assert_eq!(s.result_json.get("model").unwrap().as_str().unwrap(), "custom_net");
+        assert_eq!(s.result_json.get("moves").unwrap().as_str().unwrap(), "legacy");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -10,13 +10,21 @@
 //! 4. **DSE cache**: cold vs warm stage-1 sweep on an isolated memo
 //!    table — the hit/miss accounting behind the `dse` bench's speedup
 //!    gate.
+//! 5. **Stage-2 move set**: legacy (PR-2 pipeline/bus/buffer trio) vs the
+//!    full registry (plus unroll rebalance, precision down-scaling,
+//!    per-layer tiling) per zoo model, from the expert starting design —
+//!    which workloads the new moves actually improve, and by which move.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::builder::{stage1_with, DseCache, Spec, SweepGrid};
+use crate::builder::moves::is_extension_action;
+use crate::builder::{
+    stage1_with, stage2, stage2_with_moves, Backend, Candidate, DseCache, MoveSet, Spec,
+    SweepGrid,
+};
 use crate::coordinator::Pool;
 use crate::dnn::zoo;
 use crate::predictor::{predict_coarse, simulate};
@@ -155,16 +163,90 @@ pub fn run() -> Result<ExpReport> {
         ]),
     ));
 
+    // --- 5. stage-2 move set: legacy vs full, per zoo model --------------
+    // From the expert starting design of each back-end (not a DSE-chosen
+    // one, so the comparison isolates the move engine itself): run stage 2
+    // with the legacy registry and the full registry and compare the
+    // spec's objective. FPGA leg covers every zoo model; the ASIC leg
+    // covers the ShiDianNao-class benchmarks the Table-9 budget targets.
+    let mut t = Table::new(
+        "Ablation 5 — stage-2 move set, legacy vs full (expert start)",
+        &["workload", "backend", "legacy score", "full score", "gain %", "new moves accepted"],
+    );
+    let mut rows = Vec::new();
+    let fpga_spec = Spec::ultra96_object_detection();
+    let asic_spec = Spec::asic_vision();
+    let mut legs: Vec<(crate::dnn::Model, &Spec, TemplateId, HwConfig)> = Vec::new();
+    for name in zoo::all_names() {
+        let m = zoo::by_name(&name).unwrap();
+        legs.push((m, &fpga_spec, TemplateId::Hetero, HwConfig::ultra96_default()));
+    }
+    for m in zoo::shidiannao_benchmarks() {
+        // Fit the Table-9 budget: 48 MACs + decoders < 64, buffers < 128 KB.
+        // The systolic template (ASIC pool "template 1") is used because
+        // its schedule is precision/tiling-aware, so the extension moves
+        // are in play; on the precision-blind ShiDianNao/Eyeriss schedules
+        // they gate themselves off (see `builder::moves`).
+        let mut c = HwConfig::asic_default();
+        c.unroll = 48;
+        c.act_buf_bits = 48 * 8 * 1024;
+        c.w_buf_bits = 48 * 8 * 1024;
+        legs.push((m, &asic_spec, TemplateId::Systolic, c));
+    }
+    for (m, spec, template, cfg) in legs {
+        let backend = if matches!(spec.backend, Backend::Asic { .. }) { "asic" } else { "fpga" };
+        let g = template.build(&m, &cfg)?;
+        let coarse = predict_coarse(&g, &cfg.tech)?;
+        let cand = Candidate { template, fine_latency_ms: coarse.latency_ms, cfg, coarse };
+        let legacy = stage2(&m, spec, cand.clone())?;
+        let full = stage2_with_moves(&m, spec, cand, &MoveSet::full(&m, spec))?;
+        let score = |c: &Candidate| spec.objective_score(c.fine_latency_ms, c.coarse.energy_uj());
+        let (ls, fs) = (score(&legacy.best), score(&full.best));
+        let gain_pct = (ls - fs) / ls * 100.0;
+        let new_moves: Vec<String> = full
+            .steps
+            .iter()
+            .filter(|s| s.accepted && is_extension_action(&s.action))
+            .map(|s| s.action.clone())
+            .collect();
+        t.row(vec![
+            m.name.clone(),
+            backend.into(),
+            f(ls, 4),
+            f(fs, 4),
+            f(gain_pct, 2),
+            if new_moves.is_empty() { "-".into() } else { new_moves.join("; ") },
+        ]);
+        rows.push(obj(vec![
+            ("workload", m.name.as_str().into()),
+            ("backend", backend.into()),
+            ("legacy_score", ls.into()),
+            ("full_score", fs.into()),
+            ("gain_pct", gain_pct.into()),
+            ("new_moves", Json::Arr(new_moves.iter().map(|a| a.as_str().into()).collect())),
+        ]));
+    }
+    text.push_str(&t.render());
+    json_parts.push(("move_set", Json::Arr(rows)));
+
     Ok(ExpReport { id: "ablation", text, json: obj(json_parts) })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::OnceLock;
+
+    /// The full ablation sweep is expensive (it now includes the per-model
+    /// move-set comparison), so every test shares one run.
+    fn shared() -> &'static ExpReport {
+        static REPORT: OnceLock<ExpReport> = OnceLock::new();
+        REPORT.get_or_init(|| run().unwrap())
+    }
 
     #[test]
     fn ablation_runs_and_pipeline_monotone() {
-        let r = run().unwrap();
+        let r = shared();
         let sweep = r.json.get("pipeline_sweep").unwrap().as_arr().unwrap();
         let first = sweep.first().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
         let last = sweep.last().unwrap().get("fine_ms").unwrap().as_f64().unwrap();
@@ -173,7 +255,7 @@ mod tests {
 
     #[test]
     fn cache_ablation_counts_cover_the_grid() {
-        let r = run().unwrap();
+        let r = shared();
         let c = r.json.get("dse_cache").unwrap();
         let points = c.get("grid_points").unwrap().as_usize().unwrap() as f64;
         assert_eq!(c.get("cold_hits").unwrap().as_f64().unwrap(), 0.0);
@@ -186,10 +268,32 @@ mod tests {
 
     #[test]
     fn buffer_energy_monotone_in_capacity() {
-        let r = run().unwrap();
+        let r = shared();
         let rows = r.json.get("buffer_sizing").unwrap().as_arr().unwrap();
         let e16 = rows[0].get("dynamic_uj").unwrap().as_f64().unwrap();
         let e128 = rows.last().unwrap().get("dynamic_uj").unwrap().as_f64().unwrap();
         assert!(e128 > e16, "bigger SRAM must cost more per access: {e16} vs {e128}");
+    }
+
+    #[test]
+    fn move_set_section_full_never_loses_and_some_model_improves() {
+        let r = shared();
+        let rows = r.json.get("move_set").unwrap().as_arr().unwrap();
+        assert!(rows.len() >= zoo::all_names().len(), "every zoo model must have an FPGA row");
+        let mut improved_by_new_move = 0usize;
+        for row in rows {
+            let ls = row.get("legacy_score").unwrap().as_f64().unwrap();
+            let fs = row.get("full_score").unwrap().as_f64().unwrap();
+            let name = row.get("workload").unwrap().as_str().unwrap();
+            assert!(fs <= ls * (1.0 + 1e-12), "{name}: full {fs} lost to legacy {ls}");
+            let new_moves = row.get("new_moves").unwrap().as_arr().unwrap();
+            if !new_moves.is_empty() && fs < ls * (1.0 - 1e-9) {
+                improved_by_new_move += 1;
+            }
+        }
+        assert!(
+            improved_by_new_move >= 1,
+            "no workload improved by an extension move — the richer move set is dead weight"
+        );
     }
 }

@@ -17,7 +17,7 @@
 //! | `fig13`  | Fig. 13        | Ultra96 designs vs Pixel2-XL CPU, 10 models |
 //! | `fig14`  | Fig. 14        | ASIC design-space scatter by template |
 //! | `fig15`  | Fig. 15        | normalized energy vs ShiDianNao, 5 nets |
-//! | `ablation` | (ours)       | pipeline depth / PE style / buffer sizing |
+//! | `ablation` | (ours)       | pipeline depth / PE style / buffer sizing / DSE cache / stage-2 move set |
 
 pub mod ablation;
 pub mod fig11_12;

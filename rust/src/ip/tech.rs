@@ -66,6 +66,16 @@ impl UnitCosts {
         self.e_bit_read_pj(kind) * self.write_factor
     }
 
+    /// Read/write-blended access energy per bit (accesses are roughly half
+    /// reads, half writes over a full inference). Per-*word* energy is
+    /// precision-aware through the traffic the templates schedule: a
+    /// `<8,8>` datapath moves half the bits of a `<16,16>` one, so every
+    /// memory and data-path IP's energy scales with the configured
+    /// precision even though the per-bit unit cost is fixed.
+    pub fn e_bit_blended_pj(&self, kind: MemKind) -> f64 {
+        0.5 * self.e_bit_read_pj(kind) + 0.5 * self.e_bit_write_pj(kind)
+    }
+
     /// Transfer energy per bit for a data-path class.
     pub fn e_bit_dp_pj(&self, kind: DataPathKind) -> f64 {
         match kind {
@@ -161,6 +171,22 @@ impl Technology {
         } else {
             2.0
         }
+    }
+
+    /// LUTs per parallel MAC at a precision: the multiplier partial-product
+    /// rows and the adder-tree datapath scale with the wider operand
+    /// (anchored at the 16-bit cost of 90 LUTs/MAC the Eq. 5–6 accounting
+    /// was calibrated with). Together with [`Technology::dsp_per_mac`] this
+    /// is what makes the precision-down-scaling stage-2 move pay off in
+    /// fabric as well as energy.
+    pub fn lut_per_mac(&self, p: Precision) -> usize {
+        (90 * p.w_bits.max(p.a_bits)).div_ceil(16)
+    }
+
+    /// FFs per parallel MAC at a precision (pipeline registers track the
+    /// datapath width; 16-bit anchor: 140 FFs/MAC).
+    pub fn ff_per_mac(&self, p: Precision) -> usize {
+        (140 * p.w_bits.max(p.a_bits)).div_ceil(16)
     }
 
     /// BRAM18K blocks for a buffer of `volume_bits` with a `port_bits`-wide
@@ -356,6 +382,32 @@ mod tests {
         assert_eq!(t.dsp_per_mac(Precision::new(8, 8)), 0.5);
         assert_eq!(t.dsp_per_mac(Precision::new(11, 9)), 1.0);
         assert_eq!(t.dsp_per_mac(Precision::new(32, 32)), 2.0);
+    }
+
+    #[test]
+    fn fabric_cost_scales_with_precision() {
+        let t = fpga_ultra96();
+        // 16-bit anchor reproduces the historical constants exactly.
+        assert_eq!(t.lut_per_mac(Precision::new(16, 16)), 90);
+        assert_eq!(t.ff_per_mac(Precision::new(16, 16)), 140);
+        // Narrower datapaths are monotonically cheaper.
+        let l16 = t.lut_per_mac(Precision::new(16, 16));
+        let l11 = t.lut_per_mac(Precision::new(11, 9));
+        let l8 = t.lut_per_mac(Precision::new(8, 8));
+        assert!(l8 < l11 && l11 < l16, "{l8} {l11} {l16}");
+        assert!(t.ff_per_mac(Precision::new(8, 8)) < t.ff_per_mac(Precision::new(11, 9)));
+        // The wider operand dominates the datapath width.
+        assert_eq!(t.lut_per_mac(Precision::new(11, 9)), t.lut_per_mac(Precision::new(9, 11)));
+    }
+
+    #[test]
+    fn blended_bit_energy_between_read_and_write() {
+        let t = asic_65nm();
+        for kind in [MemKind::Sram, MemKind::Dram, MemKind::RegFile] {
+            let blended = t.costs.e_bit_blended_pj(kind);
+            assert!(blended >= t.costs.e_bit_read_pj(kind));
+            assert!(blended <= t.costs.e_bit_write_pj(kind));
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! autodnnchip list-models
 //! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
 //! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
+//!                      [--moves legacy|full]
+//! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
 //!                       fig11|fig12|fig13|fig14|fig15|all> [--seed N]
@@ -15,7 +17,7 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 use autodnnchip::builder::Spec;
-use autodnnchip::coordinator::{self, RunConfig};
+use autodnnchip::coordinator::{self, MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::predictor::{predict_coarse, simulate};
 use autodnnchip::templates::{HwConfig, TemplateId};
@@ -76,7 +78,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let mut cfg = if tech.fpga.is_some() { HwConfig::ultra96_default() } else { HwConfig::asic_default() };
     cfg.tech = tech;
     cfg.unroll = args.flag_usize("unroll", cfg.unroll);
-    cfg.pipeline = args.flag_usize("pipeline", cfg.pipeline as usize) as u64;
+    cfg.pipeline = args.flag_u64("pipeline", cfg.pipeline);
     let g = tmpl.build(&m, &cfg)?;
     let coarse = predict_coarse(&g, &cfg.tech)?;
     let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
@@ -105,11 +107,20 @@ fn cmd_build(args: &Args) -> Result<()> {
             "asic" => Spec::asic_vision(),
             other => bail!("unknown backend '{other}'"),
         };
+        let moves = match args.flag_or("moves", "full").as_str() {
+            "legacy" => MoveSetChoice::Legacy,
+            "full" => MoveSetChoice::Full,
+            other => bail!("unknown move set '{other}' (expected 'legacy' or 'full')"),
+        };
         RunConfig {
             model: args.flag_or("model", "SK"),
+            // `--model-json path.json` imports a framework-export model
+            // instead of naming a zoo entry.
+            model_json: args.flag("model-json").map(|s| s.to_string()),
             spec,
             n2: args.flag_usize("n2", 4),
             n_opt: args.flag_usize("n-opt", 2),
+            moves,
             out_dir: args.flag("out").map(|s| s.to_string()),
             rtl_out: args.flag("rtl-out").map(|s| s.to_string()),
         }

@@ -81,8 +81,11 @@ pub fn resources(g: &Graph, tech: &Technology) -> Resources {
             IpClass::Compute { unroll, prec, .. } => {
                 r.multipliers += unroll;
                 dsp += tech.dsp_per_mac(*prec) * *unroll as f64;
-                r.lut += 90 * unroll + 600;
-                r.ff += 140 * unroll + 800;
+                // Fabric cost per MAC lane scales with the datapath width
+                // (the other half of the DSP-packing story: narrower
+                // precision frees LUT/FF as well as DSP columns).
+                r.lut += tech.lut_per_mac(*prec) * unroll + 600;
+                r.ff += tech.ff_per_mac(*prec) * unroll + 800;
                 if tech.asic.is_some() {
                     r.area_mm2 += tech.mac_array_area_um2(*unroll, *prec) / 1e6;
                 }
@@ -203,6 +206,24 @@ mod tests {
         assert_eq!(r.decode_multipliers, 1);
         assert_eq!(r.bram18k, 4); // 64Kib/18Kib = 4 banks
         assert_eq!(r.mem_bits["bram"], 64 * 1024);
+    }
+
+    #[test]
+    fn narrower_precision_frees_fabric() {
+        let t = tech::fpga_ultra96();
+        let mk = |prec| {
+            let mut g = Graph::new("p", 200.0);
+            g.add_node(bare_node(
+                "pe",
+                IpClass::Compute { kind: ComputeKind::AdderTree, unroll: 64, prec },
+            ));
+            resources(&g, &t)
+        };
+        let r8 = mk(Precision::new(8, 8));
+        let r16 = mk(Precision::new(16, 16));
+        assert!(r8.lut < r16.lut, "{} vs {}", r8.lut, r16.lut);
+        assert!(r8.ff < r16.ff);
+        assert!(r8.dsp < r16.dsp, "INT8 double-pump must halve DSPs");
     }
 
     #[test]

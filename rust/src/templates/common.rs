@@ -3,7 +3,9 @@
 
 use crate::dnn::{LayerStats, Model};
 use crate::graph::{Graph, Node, NodeId, StateMachine};
-use crate::ip::{ComputeKind, DataPathKind, IpClass, MemKind, Technology};
+use crate::ip::{ComputeKind, DataPathKind, IpClass, MemKind, Precision, Technology};
+
+use super::HwConfig;
 
 /// Create a compute node with unit costs resolved from the technology.
 pub fn comp_node(tech: &Technology, name: &str, kind: ComputeKind, unroll: usize, prec: crate::ip::Precision) -> Node {
@@ -28,9 +30,7 @@ pub fn comp_node(tech: &Technology, name: &str, kind: ComputeKind, unroll: usize
 /// so no scaling there.
 pub fn mem_node(tech: &Technology, name: &str, kind: MemKind, volume_bits: u64, port_bits: usize) -> Node {
     let c = &tech.costs;
-    // Accesses are roughly half reads / half writes over a full inference;
-    // blend the two unit costs.
-    let mut e_bit = 0.5 * c.e_bit_read_pj(kind) + 0.5 * c.e_bit_write_pj(kind);
+    let mut e_bit = c.e_bit_blended_pj(kind);
     if matches!(kind, MemKind::Sram) && volume_bits > 0 {
         let anchor = 64.0 * 8.0 * 1024.0; // 64 KB in bits
         e_bit *= (volume_bits as f64 / anchor).sqrt().clamp(0.6, 1.6);
@@ -96,22 +96,44 @@ pub struct Tiling {
     pub vector_ops: u64,
 }
 
-/// Decide tiling for one layer against buffer budgets. Double-buffering
-/// reserves half of each buffer for the in-flight tile. `min_tiles` is the
-/// inter-IP pipelining depth (paper Fig. 5): 1 ⇒ monolithic per-layer
-/// states (transfer and compute of one layer never overlap), larger values
-/// split each layer into that many sub-states so downstream IPs start on
-/// the first chunk.
-pub fn tile_layer(s: &LayerStats, m: &Model, act_buf_bits: u64, w_buf_bits: u64, min_tiles: u64) -> Tiling {
-    let half_act = (act_buf_bits / 2).max(1);
-    let half_w = (w_buf_bits / 2).max(1);
-    let in_bits = s.in_act_bits;
-    let out_bits = s.out_act_bits;
-    let w_bits = s.params * m.w_bits as u64;
+/// Rescale an activation bit-volume from the model's export precision to
+/// the configured hardware precision. Exact: layer stats are
+/// `elements × a_bits`, so the element count divides back out cleanly.
+pub fn act_bits_at(model_bits: u64, model_a_bits: usize, hw_a_bits: usize) -> u64 {
+    if model_a_bits == 0 {
+        return model_bits;
+    }
+    model_bits / model_a_bits as u64 * hw_a_bits as u64
+}
+
+/// A layer's (input, weight, output) bit-volumes at the hardware precision
+/// of `cfg` — the traffic the datapath actually moves, which is what the
+/// precision-down-scaling stage-2 move trades against accuracy.
+pub fn layer_bits(s: &LayerStats, m: &Model, prec: Precision) -> (u64, u64, u64) {
+    (
+        act_bits_at(s.in_act_bits, m.a_bits, prec.a_bits),
+        s.params * prec.w_bits as u64,
+        act_bits_at(s.out_act_bits, m.a_bits, prec.a_bits),
+    )
+}
+
+/// Decide tiling for DNN layer `li` against `cfg`'s buffer budgets.
+/// Double-buffering reserves half of each buffer for the in-flight tile.
+/// The floor on the tile count is the inter-IP pipelining depth (paper
+/// Fig. 5: 1 ⇒ monolithic per-layer states, larger values split each layer
+/// so downstream IPs start on the first chunk), raised further by a
+/// per-layer override (`HwConfig::tile_overrides`) when the stage-2 tiling
+/// move wants this one layer split finer than the global pipeline depth.
+/// All bit-volumes are taken at the configured hardware precision.
+pub fn tile_layer(s: &LayerStats, m: &Model, cfg: &HwConfig, li: usize) -> Tiling {
+    let half_act = (cfg.act_buf_bits / 2).max(1);
+    let half_w = (cfg.w_buf_bits / 2).max(1);
+    let (in_bits, w_bits, out_bits) = layer_bits(s, m, cfg.prec);
     let t_in = in_bits.div_ceil(half_act);
     let t_out = out_bits.div_ceil(half_act);
     let t_w = w_bits.div_ceil(half_w);
-    let tiles = t_in.max(t_out).max(t_w).max(1).max(min_tiles);
+    let floor = cfg.pipeline.max(cfg.tile_override(li).unwrap_or(1));
+    let tiles = t_in.max(t_out).max(t_w).max(1).max(floor);
     Tiling {
         tiles,
         in_bits,
@@ -179,15 +201,50 @@ mod tests {
     fn tiling_respects_buffers() {
         let m = zoo::alexnet();
         let st = m.stats().unwrap();
-        let act = 1 << 20;
-        let w = 1 << 20;
-        for s in &st.per_layer {
-            let t = tile_layer(s, &m, act, w, 1);
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.act_buf_bits = 1 << 20;
+        cfg.w_buf_bits = 1 << 20;
+        cfg.pipeline = 1;
+        for (li, s) in st.per_layer.iter().enumerate() {
+            let t = tile_layer(s, &m, &cfg, li);
             assert!(t.tiles >= 1);
             // Per-tile shares fit the half-buffers.
-            assert!(t.in_bits.div_ceil(t.tiles) <= act / 2 + 1);
-            assert!(t.w_bits.div_ceil(t.tiles) <= w / 2 + 1);
+            assert!(t.in_bits.div_ceil(t.tiles) <= cfg.act_buf_bits / 2 + 1);
+            assert!(t.w_bits.div_ceil(t.tiles) <= cfg.w_buf_bits / 2 + 1);
         }
+    }
+
+    #[test]
+    fn tile_override_raises_the_floor_for_its_layer_only() {
+        let m = zoo::alexnet();
+        let st = m.stats().unwrap();
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 1;
+        let base: Vec<u64> = st.per_layer.iter().enumerate().map(|(li, s)| tile_layer(s, &m, &cfg, li).tiles).collect();
+        let forced = base[1] * 4;
+        cfg.set_tile_override(1, forced);
+        for (li, s) in st.per_layer.iter().enumerate() {
+            let t = tile_layer(s, &m, &cfg, li);
+            if li == 1 {
+                assert_eq!(t.tiles, forced.max(base[1]));
+            } else {
+                assert_eq!(t.tiles, base[li], "layer {li} tiling moved");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_scale_with_hardware_precision() {
+        let m = zoo::alexnet(); // 16-bit export
+        let st = m.stats().unwrap();
+        let s = &st.per_layer[0];
+        let (i16b, w16b, o16b) = layer_bits(s, &m, Precision::new(16, 16));
+        assert_eq!((i16b, w16b, o16b), (s.in_act_bits, s.weight_bits, s.out_act_bits));
+        let (i8b, w8b, o8b) = layer_bits(s, &m, Precision::new(8, 8));
+        assert_eq!(i8b * 2, i16b);
+        assert_eq!(w8b * 2, w16b);
+        assert_eq!(o8b * 2, o16b);
+        assert_eq!(act_bits_at(90, 9, 11), 110);
     }
 
     #[test]

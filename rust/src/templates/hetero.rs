@@ -21,15 +21,16 @@ use anyhow::Result;
 
 use crate::dnn::{LayerKind, Model};
 use crate::graph::{Graph, State};
-use crate::ip::{ComputeKind, DataPathKind, MemKind};
+use crate::ip::{ComputeKind, DataPathKind, MemKind, Precision};
 
 use super::adder_tree::push_tiled;
-use super::common::{self, compute_cycles, xfer_cycles};
+use super::common::{self, act_bits_at, compute_cycles, xfer_cycles};
 use super::HwConfig;
 
 const VEC_WIDTH: usize = 16;
 
-/// One fused DW(+tail) bundle's aggregated workload.
+/// One fused DW(+tail) bundle's aggregated workload. Bit-volumes are at
+/// the configured hardware precision, not the model's export precision.
 #[derive(Debug, Clone, Copy, Default)]
 struct Bundle {
     in_bits: u64,
@@ -40,44 +41,56 @@ struct Bundle {
     macs_dw: u64,
     macs_pw: u64,
     vec_pw: u64,
+    /// Inclusive range of DNN layer indices fused into this bundle, so the
+    /// per-layer tiling overrides can be mapped onto the fused schedule.
+    first_layer: usize,
+    last_layer: usize,
 }
 
 fn is_dw(kind: &LayerKind) -> bool {
     matches!(kind, LayerKind::Conv { groups, .. } if *groups > 1)
 }
 
-/// Split the model into DW-led bundles.
-fn bundles(model: &Model) -> Result<Vec<Bundle>> {
+/// Split the model into DW-led bundles, with traffic at precision `prec`.
+fn bundles(model: &Model, prec: Precision) -> Result<Vec<Bundle>> {
     let stats = model.stats()?;
+    let acts = |bits: u64| act_bits_at(bits, model.a_bits, prec.a_bits);
     let mut out: Vec<Bundle> = Vec::new();
     let mut cur: Option<Bundle> = None;
     for (i, l) in model.layers.iter().enumerate() {
         let s = &stats.per_layer[i];
+        let w_bits = s.params * prec.w_bits as u64;
         let start_new = is_dw(&l.kind) || cur.is_none();
         if start_new {
             if let Some(b) = cur.take() {
                 out.push(b);
             }
-            let mut b = Bundle { in_bits: s.in_act_bits, ..Default::default() };
+            let mut b = Bundle {
+                in_bits: acts(s.in_act_bits),
+                first_layer: i,
+                last_layer: i,
+                ..Default::default()
+            };
             if is_dw(&l.kind) {
                 b.macs_dw = s.macs;
-                b.w_dw_bits = s.weight_bits;
-                b.mid_bits = s.out_act_bits;
+                b.w_dw_bits = w_bits;
+                b.mid_bits = acts(s.out_act_bits);
             } else {
                 // Bundle without a DW head: DW engine just forwards.
-                b.mid_bits = s.in_act_bits;
+                b.mid_bits = acts(s.in_act_bits);
                 b.macs_pw = s.macs;
                 b.vec_pw = s.vector_ops;
-                b.w_pw_bits = s.weight_bits;
+                b.w_pw_bits = w_bits;
             }
-            b.out_bits = s.out_act_bits;
+            b.out_bits = acts(s.out_act_bits);
             cur = Some(b);
         } else {
             let b = cur.as_mut().unwrap();
             b.macs_pw += s.macs;
             b.vec_pw += s.vector_ops;
-            b.w_pw_bits += s.weight_bits;
-            b.out_bits = s.out_act_bits;
+            b.w_pw_bits += w_bits;
+            b.out_bits = acts(s.out_act_bits);
+            b.last_layer = i;
         }
     }
     if let Some(b) = cur {
@@ -86,15 +99,24 @@ fn bundles(model: &Model) -> Result<Vec<Bundle>> {
     Ok(out)
 }
 
+/// The unroll split between the DW and PW engines for a configuration.
+/// `dw_share_pct = 25` reproduces the historical `unroll / 4` division.
+pub(super) fn engine_split(cfg: &HwConfig) -> (usize, usize) {
+    let u_dw = (cfg.unroll * cfg.dw_share_pct / 100).max(1);
+    let u_pw = cfg.unroll.saturating_sub(u_dw).max(1);
+    (u_dw, u_pw)
+}
+
 /// Build the heterogeneous DW/PW graph.
 pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
     let tech = &cfg.tech;
     let mut g = Graph::new(&format!("hetero_dw_pw/{}", model.name), cfg.freq_mhz);
 
     // The unroll budget is split: DW work is much lighter than PW work in
-    // compact models, so give the DW engine a quarter of the MACs.
-    let u_dw = (cfg.unroll / 4).max(1);
-    let u_pw = (cfg.unroll - u_dw).max(1);
+    // compact models, so the DW engine defaults to a quarter of the MACs;
+    // the stage-2 rebalance move shifts the split when either engine is
+    // the measured bottleneck.
+    let (u_dw, u_pw) = engine_split(cfg);
 
     let dram_in = g.add_node(common::mem_node(tech, "dram_in", MemKind::Dram, 0, cfg.bus_bits));
     let bus_in = g.add_node(common::dp_node(tech, "bus_in", DataPathKind::Bus, cfg.bus_bits));
@@ -131,20 +153,26 @@ pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
     // input DMA waits for this bundle's store-back.
     let e_sync = g.connect_sync(dram_out, dram_in);
 
-    let bundle_list = bundles(model)?;
+    let bundle_list = bundles(model, cfg.prec)?;
     let n_bundles = bundle_list.len();
     common::reserve_phases(&mut g, n_bundles * 2 + 2);
     for (bi, b) in bundle_list.into_iter().enumerate() {
         // Tile so in/mid/out and the bundle weights fit the double buffers.
         let half_act = (cfg.act_buf_bits / 2).max(1);
         let half_w = (cfg.w_buf_bits / 2).max(1);
+        // A tiling override on any fused layer floors the whole bundle.
+        let override_floor = (b.first_layer..=b.last_layer)
+            .filter_map(|li| cfg.tile_override(li))
+            .max()
+            .unwrap_or(1);
         let tiles = b
             .in_bits
             .div_ceil(half_act)
             .max(b.mid_bits.div_ceil(half_act))
             .max(b.out_bits.div_ceil(half_act))
             .max((b.w_dw_bits + b.w_pw_bits).div_ceil(half_w))
-            .max(cfg.pipeline);
+            .max(cfg.pipeline)
+            .max(override_floor);
         let bus = cfg.bus_bits;
         // totals tuple: reuse push_tiled's 5 fields; map as
         // (in, w_dw + w_pw, out, macs_dw, macs_pw) and carry mid/vec via
@@ -255,11 +283,75 @@ mod tests {
     #[test]
     fn bundle_split_covers_all_macs() {
         let m = zoo::skynet_variants().remove(0);
-        let bs = bundles(&m).unwrap();
+        let prec = Precision::new(m.w_bits, m.a_bits);
+        let bs = bundles(&m, prec).unwrap();
         let macs: u64 = bs.iter().map(|b| b.macs_dw + b.macs_pw).sum();
         assert_eq!(macs, m.stats().unwrap().total_macs);
         // SkyNet has 6 DW layers → at least 6 bundles.
         assert!(bs.len() >= 6, "{}", bs.len());
+        // Bundle layer ranges partition the model in order.
+        assert_eq!(bs.first().unwrap().first_layer, 0);
+        assert_eq!(bs.last().unwrap().last_layer, m.layers.len() - 1);
+        for w in bs.windows(2) {
+            assert_eq!(w[0].last_layer + 1, w[1].first_layer);
+        }
+    }
+
+    #[test]
+    fn bundle_traffic_scales_with_hardware_precision() {
+        let m = zoo::skynet_variants().remove(0); // <11,9> export
+        let native = bundles(&m, Precision::new(11, 9)).unwrap();
+        let eight = bundles(&m, Precision::new(8, 8)).unwrap();
+        assert_eq!(native.len(), eight.len());
+        for (n, e) in native.iter().zip(&eight) {
+            assert_eq!(n.macs_dw + n.macs_pw, e.macs_dw + e.macs_pw);
+            assert!(e.in_bits <= n.in_bits);
+            assert!(e.w_dw_bits + e.w_pw_bits <= n.w_dw_bits + n.w_pw_bits);
+        }
+        // Native precision reproduces the raw layer stats exactly.
+        let stats = m.stats().unwrap();
+        let total_w: u64 = native.iter().map(|b| b.w_dw_bits + b.w_pw_bits).sum();
+        let expect: u64 = stats.per_layer.iter().map(|s| s.weight_bits).sum();
+        assert_eq!(total_w, expect);
+    }
+
+    #[test]
+    fn dw_share_rebalances_engine_unrolls() {
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.unroll = 288;
+        assert_eq!(engine_split(&cfg), (72, 216)); // 25% == unroll / 4
+        cfg.dw_share_pct = 45;
+        let (dw, pw) = engine_split(&cfg);
+        assert_eq!(dw + pw, 288);
+        assert!(dw > 72);
+        // The split is honoured by the built graph.
+        let m = zoo::skynet_tiny();
+        let g = build(&m, &cfg).unwrap();
+        g.validate().unwrap();
+        let dwn = g.node_by_name("dw_engine").unwrap();
+        match g.nodes[dwn].class {
+            crate::ip::IpClass::Compute { unroll, .. } => assert_eq!(unroll, dw),
+            _ => panic!("dw_engine not a compute IP"),
+        }
+    }
+
+    #[test]
+    fn tile_override_splits_bundle_finer() {
+        let m = zoo::skynet_tiny();
+        let mut cfg = HwConfig::ultra96_default();
+        cfg.pipeline = 1;
+        let base = build(&m, &cfg).unwrap();
+        cfg.set_tile_override(0, 8);
+        let forced = build(&m, &cfg).unwrap();
+        let dram = base.node_by_name("dram_in").unwrap();
+        assert!(
+            forced.nodes[dram].sm.num_states() > base.nodes[dram].sm.num_states(),
+            "override did not add tiles"
+        );
+        // Work is conserved regardless of the override.
+        let macs = |g: &Graph| -> u64 { g.nodes.iter().map(|n| n.sm.total_macs()).sum() };
+        assert_eq!(macs(&base), macs(&forced));
+        forced.validate().unwrap();
     }
 
     #[test]

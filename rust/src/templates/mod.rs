@@ -62,6 +62,16 @@ pub struct HwConfig {
     pub pipeline: u64,
     /// PE micro-architecture (honoured by the ShiDianNao-style template).
     pub pe_style: PeStyle,
+    /// Share of the unroll budget (in percent) assigned to the DW engine
+    /// of the heterogeneous template; the remainder goes to the PW engine.
+    /// 25 reproduces the historical `unroll / 4` split exactly. Other
+    /// templates ignore it.
+    pub dw_share_pct: usize,
+    /// Per-layer tiling floors, indexed by DNN layer: `Some(t)` forces
+    /// layer `i`'s state machines to split into at least `t` tiles (on top
+    /// of the buffer-fit and pipeline-depth minimums). Layers past the end
+    /// of the vector, and `None` entries, keep the computed tiling.
+    pub tile_overrides: Vec<Option<u64>>,
 }
 
 impl HwConfig {
@@ -78,6 +88,8 @@ impl HwConfig {
             bus_bits: 128,
             pipeline: 2,
             pe_style: PeStyle::Forwarding,
+            dw_share_pct: 25,
+            tile_overrides: Vec::new(),
         }
     }
 
@@ -95,7 +107,23 @@ impl HwConfig {
             bus_bits: 64,
             pipeline: 2,
             pe_style: PeStyle::Forwarding,
+            dw_share_pct: 25,
+            tile_overrides: Vec::new(),
         }
+    }
+
+    /// The tiling floor configured for DNN layer `li`, if any.
+    pub fn tile_override(&self, li: usize) -> Option<u64> {
+        self.tile_overrides.get(li).copied().flatten()
+    }
+
+    /// Force layer `li` to split into at least `tiles` tiles (grows the
+    /// override vector as needed).
+    pub fn set_tile_override(&mut self, li: usize, tiles: u64) {
+        if self.tile_overrides.len() <= li {
+            self.tile_overrides.resize(li + 1, None);
+        }
+        self.tile_overrides[li] = Some(tiles);
     }
 
     /// Stable fingerprint over every knob (and the full technology cost
@@ -117,6 +145,8 @@ impl HwConfig {
             bus_bits,
             pipeline,
             pe_style,
+            dw_share_pct,
+            tile_overrides,
         } = self;
         let Precision { w_bits, a_bits } = *prec;
         let mut h = Fnv64::with_seed(0x4857_4346_4750_3031); // "HWCFGP01"
@@ -132,7 +162,20 @@ impl HwConfig {
             .write_u64(match pe_style {
                 PeStyle::Forwarding => 0,
                 PeStyle::Direct => 1,
-            });
+            })
+            .write_usize(*dw_share_pct);
+        // Hash only the `Some` overrides as (layer, floor) pairs: an empty
+        // vector and an all-`None` vector configure the same design and
+        // must share a fingerprint.
+        let set: Vec<(usize, u64)> = tile_overrides
+            .iter()
+            .enumerate()
+            .filter_map(|(li, t)| t.map(|t| (li, t)))
+            .collect();
+        h.write_usize(set.len());
+        for (li, t) in set {
+            h.write_usize(li).write_u64(t);
+        }
         h.finish()
     }
 }
@@ -250,11 +293,37 @@ mod tests {
             let mut c = base.clone();
             c.pe_style = PeStyle::Direct;
             v.push(c);
+            let mut c = base.clone();
+            c.dw_share_pct = 35;
+            v.push(c);
+            let mut c = base.clone();
+            c.set_tile_override(3, 8);
+            v.push(c);
             v
         };
         for (i, m) in mutations.iter().enumerate() {
             assert_ne!(base.fingerprint(), m.fingerprint(), "mutation {i} not distinguished");
         }
+    }
+
+    #[test]
+    fn tile_override_none_entries_do_not_change_fingerprint() {
+        // An all-`None` override vector is the same design as no vector.
+        let base = HwConfig::ultra96_default();
+        let mut padded = base.clone();
+        padded.tile_overrides = vec![None; 6];
+        assert_eq!(base.fingerprint(), padded.fingerprint());
+        // But distinct (layer, floor) pairs are distinct designs.
+        let mut a = base.clone();
+        a.set_tile_override(2, 8);
+        let mut b = base.clone();
+        b.set_tile_override(3, 8);
+        let mut c = base.clone();
+        c.set_tile_override(2, 16);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(a.tile_override(2), Some(8));
+        assert_eq!(a.tile_override(5), None);
     }
 
     #[test]

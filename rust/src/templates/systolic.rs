@@ -65,7 +65,7 @@ pub fn build(model: &Model, cfg: &HwConfig) -> Result<Graph> {
 
     let fill_drain = (rows + cols) as u64;
     for (li, s) in stats.per_layer.iter().enumerate() {
-        let t = common::tile_layer(s, model, cfg.act_buf_bits, cfg.w_buf_bits, cfg.pipeline);
+        let t = common::tile_layer(s, model, cfg, li);
         let totals = (t.in_bits, t.w_bits, t.out_bits, t.macs, t.vector_ops);
         let bus = cfg.bus_bits;
 

@@ -54,6 +54,13 @@ impl Args {
         self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse a flag directly as `u64` — for knobs that are `u64` in the
+    /// domain model (e.g. `HwConfig::pipeline`), so no lossy round-trip
+    /// through `usize` happens on 32-bit hosts.
+    pub fn flag_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
     pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
         self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -92,5 +99,16 @@ mod tests {
         let a = p("run");
         assert_eq!(a.flag_f64("x", 2.5), 2.5);
         assert!(!a.flag_bool("missing"));
+        assert_eq!(a.flag_u64("missing", 7), 7);
+    }
+
+    #[test]
+    fn u64_flags_parse_beyond_u32() {
+        let a = p("predict --pipeline 8 --big 5000000000");
+        assert_eq!(a.flag_u64("pipeline", 1), 8);
+        assert_eq!(a.flag_u64("big", 0), 5_000_000_000);
+        // Garbage falls back to the default instead of panicking.
+        let b = p("predict --pipeline nope");
+        assert_eq!(b.flag_u64("pipeline", 2), 2);
     }
 }

@@ -2,7 +2,7 @@
 //! consistency, experiment-harness sanity, CLI-level orchestration.
 
 use autodnnchip::builder::{build_accelerator, Spec};
-use autodnnchip::coordinator::{self, Pool, RunConfig};
+use autodnnchip::coordinator::{self, MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo};
 use autodnnchip::experiments;
 use autodnnchip::funcsim::{self, Mode, Tensor};
@@ -122,6 +122,35 @@ fn model_json_export_runs_through_full_predictor() {
     let g = autodnnchip::templates::TemplateId::Systolic.build(&back, &cfg).unwrap();
     let r = simulate(&g, 0.0, false).unwrap();
     assert!(r.cycles > 0);
+}
+
+#[test]
+fn examples_model_json_builds_via_coordinator() {
+    // The shipped examples/models/tinyconv.json drives a full build via
+    // `RunConfig::model_json` (CLI: `build --model-json path.json`) — the
+    // parser-import entry path for workloads outside the zoo.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/models/tinyconv.json");
+    let m = parser::load_file(std::path::Path::new(path)).expect("example model parses");
+    assert_eq!(m.name, "tinyconv");
+    assert!(m.layers.iter().any(|l| matches!(
+        l.kind,
+        autodnnchip::dnn::LayerKind::Conv { groups, .. } if groups > 1
+    )));
+    let cfg = RunConfig {
+        model: String::new(),
+        model_json: Some(path.to_string()),
+        spec: Spec::ultra96_object_detection(),
+        n2: 2,
+        n_opt: 1,
+        moves: MoveSetChoice::Full,
+        out_dir: None,
+        rtl_out: None,
+    };
+    let s = coordinator::run(&cfg).expect("build from model JSON");
+    assert!(s.build.evaluated > 100);
+    assert!(!s.build.survivors.is_empty(), "tinyconv must fit Ultra96");
+    assert_eq!(s.result_json.get("model").unwrap().as_str().unwrap(), "tinyconv");
+    assert_eq!(s.result_json.get("moves").unwrap().as_str().unwrap(), "full");
 }
 
 #[test]

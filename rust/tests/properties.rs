@@ -6,14 +6,16 @@
 use std::sync::Arc;
 
 use autodnnchip::builder::{
-    build_accelerator, build_accelerator_with, pnr_check, stage1, stage1_with, Candidate,
-    DseCache, PnrOutcome, Spec, SweepGrid,
+    build_accelerator, build_accelerator_with, pnr_check, stage1, stage1_with, stage2,
+    stage2_with_moves, Backend, Candidate, DseCache, MoveSet, PnrOutcome, Spec, SweepGrid,
 };
 use autodnnchip::coordinator::Pool;
 use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
-use autodnnchip::predictor::{predict_coarse, simulate};
+use autodnnchip::predictor::{
+    predict_coarse, simulate, simulate_prevalidated, CoarseReport, FineReport,
+};
 use autodnnchip::prop_assert;
 use autodnnchip::templates::{HwConfig, TemplateId};
 use autodnnchip::testkit::{check, check_cfg, Config};
@@ -423,6 +425,194 @@ fn prop_parallel_stage2_byte_identical_to_serial() {
         );
         Ok(())
     });
+}
+
+/// The PR-2 stage-2 move list, replayed verbatim (caps and action strings
+/// included) as the reference for the byte-identity property below.
+fn pr2_inline_moves(cfg: &HwConfig) -> Vec<(String, HwConfig)> {
+    let mut out = Vec::new();
+    if cfg.pipeline < 64 {
+        let mut c = cfg.clone();
+        c.pipeline = cfg.pipeline * 2;
+        out.push((format!("pipeline {} -> {}", cfg.pipeline, c.pipeline), c));
+    }
+    if cfg.bus_bits < 512 {
+        let mut c = cfg.clone();
+        c.bus_bits = cfg.bus_bits * 2;
+        out.push((format!("bus {}b -> {}b", cfg.bus_bits, c.bus_bits), c));
+    }
+    if cfg.act_buf_bits < (32u64 << 20) {
+        let mut c = cfg.clone();
+        c.act_buf_bits = cfg.act_buf_bits * 2;
+        out.push((format!("act buffer -> {} Kib", c.act_buf_bits / 1024), c));
+    }
+    if cfg.w_buf_bits < (32u64 << 20) {
+        let mut c = cfg.clone();
+        c.w_buf_bits = cfg.w_buf_bits * 2;
+        out.push((format!("weight buffer -> {} Kib", c.w_buf_bits / 1024), c));
+    }
+    out
+}
+
+type Design = (Graph, CoarseReport, FineReport);
+
+fn pr2_eval(m: &Model, t: TemplateId, cfg: &HwConfig) -> Option<Design> {
+    let g = t.build(m, cfg).ok()?;
+    let coarse = predict_coarse(&g, &cfg.tech).ok()?;
+    let fine = simulate_prevalidated(&g, cfg.tech.costs.leakage_mw, false).ok()?;
+    Some((g, coarse, fine))
+}
+
+fn pr2_bottleneck(g: &Graph, fine: &FineReport) -> usize {
+    g.nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.class.is_compute())
+        .max_by_key(|&(i, _)| fine.per_node[i].busy_cycles)
+        .map(|(i, _)| i)
+        .unwrap_or(fine.bottleneck)
+}
+
+#[test]
+fn prop_legacy_move_set_byte_identical_to_pr2_inline_stage2() {
+    // `MoveSet::legacy()` must reproduce the pre-refactor stage-2 loop
+    // byte for byte: same step log (iteration, bottleneck, action and the
+    // exact f64 bit patterns of the latencies), same accepted moves, same
+    // final configuration. The reference below replays the PR-2 algorithm
+    // — inline move list, latency-greedy acceptance at MIN_REL_GAIN=1e-3,
+    // MAX_ITERS=10 — on top of the same predictors.
+    const MAX_ITERS: usize = 10;
+    const MIN_REL_GAIN: f64 = 1.0e-3;
+    check_cfg("legacy engine replay", Config { cases: 3, seed: 0x1E6AC7 }, |rng, _| {
+        let mut models = zoo::shidiannao_benchmarks();
+        models.push(zoo::skynet_tiny());
+        let m = rng.choose(&models).clone();
+        let spec =
+            if rng.bool(0.5) { Spec::ultra96_object_detection() } else { Spec::asic_vision() };
+        let points = SweepGrid::for_backend(&spec.backend).points();
+        let (template, cfg) = points[rng.below(points.len())].clone();
+        let Some((g0, c0, f0)) = pr2_eval(&m, template, &cfg) else { return Ok(()) };
+        if g0.validate().is_err() {
+            return Ok(());
+        }
+        let cand = Candidate {
+            template,
+            fine_latency_ms: c0.latency_ms,
+            cfg: cfg.clone(),
+            coarse: c0.clone(),
+        };
+
+        // Engine under test: stage 2 over the legacy move registry.
+        let report = stage2(&m, &spec, cand).map_err(|e| e.to_string())?;
+
+        // Reference: the PR-2 inline loop.
+        let mut best_cfg = cfg.clone();
+        let mut best = (g0, c0, f0);
+        let mut steps: Vec<(usize, String, String, f64, f64, bool)> = Vec::new();
+        for iter in 0..MAX_ITERS {
+            let bn = pr2_bottleneck(&best.0, &best.2);
+            let bn_name = best.0.nodes[bn].name.clone();
+            let before_ms = best.2.latency_ms;
+            let mut chosen: Option<(usize, HwConfig, Design)> = None;
+            for (action, c) in pr2_inline_moves(&best_cfg) {
+                let e = pr2_eval(&m, template, &c).filter(|(_, co, _)| spec.feasible(co));
+                let after_ms = e.as_ref().map(|(_, _, f)| f.latency_ms).unwrap_or(f64::INFINITY);
+                steps.push((iter, bn_name.clone(), action, before_ms, after_ms, false));
+                if let Some(e) = e {
+                    let better = match &chosen {
+                        Some((_, _, (_, _, cf))) => e.2.latency_ms < cf.latency_ms,
+                        None => true,
+                    };
+                    if better {
+                        chosen = Some((steps.len() - 1, c, e));
+                    }
+                }
+            }
+            match chosen {
+                Some((idx, c, e)) if e.2.latency_ms < before_ms * (1.0 - MIN_REL_GAIN) => {
+                    steps[idx].5 = true;
+                    best_cfg = c;
+                    best = e;
+                }
+                _ => break,
+            }
+        }
+
+        prop_assert!(
+            report.steps.len() == steps.len(),
+            "step-log length diverged: engine {} vs replay {} ({} on {:?})",
+            report.steps.len(),
+            steps.len(),
+            m.name,
+            template
+        );
+        for (s, r) in steps.iter().zip(&report.steps) {
+            prop_assert!(
+                r.iter == s.0 && r.bottleneck == s.1 && r.action == s.2 && r.accepted == s.5,
+                "step diverged: engine {r:?} vs replay {s:?}"
+            );
+            prop_assert!(r.latency_ms_before.to_bits() == s.3.to_bits());
+            prop_assert!(r.latency_ms_after.to_bits() == s.4.to_bits());
+        }
+        prop_assert!(
+            report.best.cfg.fingerprint() == best_cfg.fingerprint(),
+            "final configuration diverged"
+        );
+        prop_assert!(report.best.fine_latency_ms.to_bits() == best.2.latency_ms.to_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn full_move_set_never_loses_on_any_zoo_model_or_backend() {
+    // Exhaustive over the zoo × {FPGA, ASIC}: stage 2 with the full move
+    // registry must meet or beat the legacy registry on the spec's
+    // objective (phase 1 is the identical computation; phase 2 only ever
+    // accepts objective-improving, feasible, PnR-clean moves). At least
+    // one workload must actually be improved by a new move, or the
+    // extension tier is dead weight.
+    let mut improved = 0usize;
+    for name in zoo::all_names() {
+        let m = zoo::by_name(&name).unwrap();
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let (template, cfg) = match spec.backend {
+                Backend::Fpga { .. } => (TemplateId::Hetero, HwConfig::ultra96_default()),
+                Backend::Asic { .. } => {
+                    // The Table-9 budget needs unroll + decoders < 64 MACs
+                    // and buffers within 128 KB (as the PnR tests size it).
+                    // Systolic, not ShiDianNao: its schedule is precision/
+                    // tiling-aware, so the extension moves are in play.
+                    let mut c = HwConfig::asic_default();
+                    c.unroll = 48;
+                    c.act_buf_bits = 48 * 8 * 1024;
+                    c.w_buf_bits = 48 * 8 * 1024;
+                    (TemplateId::Systolic, c)
+                }
+            };
+            let Some((g, coarse, _)) = pr2_eval(&m, template, &cfg) else { continue };
+            if g.validate().is_err() {
+                continue;
+            }
+            let cand =
+                Candidate { template, fine_latency_ms: coarse.latency_ms, cfg, coarse };
+            let legacy = stage2(&m, &spec, cand.clone()).unwrap();
+            let full = stage2_with_moves(&m, &spec, cand, &MoveSet::full(&m, &spec)).unwrap();
+            let score = |c: &Candidate| {
+                spec.objective_score(c.fine_latency_ms, c.coarse.energy_uj())
+            };
+            assert!(
+                score(&full.best) <= score(&legacy.best) * (1.0 + 1e-12),
+                "{name} × {:?}: full {} lost to legacy {}",
+                spec.backend,
+                score(&full.best),
+                score(&legacy.best)
+            );
+            if score(&full.best) < score(&legacy.best) * (1.0 - 1e-9) {
+                improved += 1;
+            }
+        }
+    }
+    assert!(improved >= 1, "no zoo workload was improved by the extension moves");
 }
 
 #[test]
