@@ -1,0 +1,106 @@
+//! Engine serving-mode benchmark: a batch of N Build requests through
+//! `Engine::submit_batch` (one long-lived engine — shared pool, shared
+//! cache, requests fanned out) vs the equivalent serial `coordinator::run`
+//! loop (a fresh engine per call — the legacy drive pattern).
+//!
+//! Emits a machine-readable summary to `BENCH_engine.json` (override with
+//! `BENCH_ENGINE_JSON=path`) and exits non-zero when the batch is not
+//! faster than the serial loop on a warm cache (both legs share the
+//! process-wide DSE cache and the harness warmup runs first, so the
+//! measured samples compare warm serving). The CI bench-smoke job runs
+//! this with `BENCH_QUICK=1 BENCH_ENGINE_TINY=1` and uploads the JSON as
+//! an artifact. Full mode batches the fig13 10-variant SkyNet set.
+
+use std::path::Path;
+
+use autodnnchip::api::{BuildRequest, Engine, Request};
+use autodnnchip::builder::Spec;
+use autodnnchip::coordinator::{self, MoveSetChoice, RunConfig};
+use autodnnchip::dnn::zoo;
+use autodnnchip::util::bench::Bench;
+
+fn cfg_for(model: &str) -> RunConfig {
+    RunConfig {
+        model: model.to_string(),
+        model_json: None,
+        spec: Spec::ultra96_object_detection(),
+        n2: 2,
+        n_opt: 1,
+        moves: MoveSetChoice::Full,
+        out_dir: None,
+        rtl_out: None,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("engine");
+
+    // Tiny mode (CI): the three smallest ShiDianNao-class workloads; full
+    // mode: the fig13 10-variant SkyNet set.
+    let names: Vec<String> = if std::env::var("BENCH_ENGINE_TINY").is_ok() {
+        vec!["sdn_smile".to_string(), "sdn_gaze".to_string(), "sdn_ocr".to_string()]
+    } else {
+        zoo::skynet_variants().into_iter().map(|m| m.name).collect()
+    };
+    let n = names.len();
+    let requests: Vec<Request> =
+        names.iter().map(|m| Request::Build(BuildRequest(cfg_for(m)))).collect();
+
+    // One long-lived engine for the batch leg; `coordinator::run` builds a
+    // fresh engine (pool + registries) per call. Both share the
+    // process-wide DSE cache.
+    let engine = Engine::builder().build();
+
+    let serial_ns = b
+        .run(&format!("coordinator_run_serial_x{n}"), || {
+            let mut survivors = 0usize;
+            for m in &names {
+                let summary = coordinator::run(&cfg_for(m)).expect("serial build");
+                survivors += summary.build.survivors.len();
+            }
+            survivors
+        })
+        .mean_ns;
+    let batch_ns = b
+        .run(&format!("engine_submit_batch_x{n}"), || {
+            let responses = engine.submit_batch(requests.clone());
+            assert!(responses.iter().all(|r| !r.is_error()), "batch request failed");
+            responses.len()
+        })
+        .mean_ns;
+
+    let speedup = serial_ns / batch_ns.max(1.0);
+    println!(
+        "\n  batch-of-{n} via submit_batch: {:.2}x vs the serial coordinator::run loop \
+         ({:.2} ms vs {:.2} ms)",
+        speedup,
+        batch_ns / 1e6,
+        serial_ns / 1e6
+    );
+
+    let path =
+        std::env::var("BENCH_ENGINE_JSON").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    let derived = [
+        ("requests", n as f64),
+        ("serial_coordinator_ns", serial_ns),
+        ("engine_batch_ns", batch_ns),
+        ("batch_speedup", speedup),
+    ];
+    b.write_json(Path::new(&path), "engine", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+
+    // Gate: batched serving must beat the serial loop on a warm cache —
+    // the whole point of the shared-engine mode.
+    let min_speedup: f64 = std::env::var("BENCH_ENGINE_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    if speedup < min_speedup {
+        eprintln!(
+            "FAIL: submit_batch ({batch_ns:.0} ns) is not >= {min_speedup}x faster than the \
+             serial coordinator::run loop ({serial_ns:.0} ns)"
+        );
+        std::process::exit(1);
+    }
+}

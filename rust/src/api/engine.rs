@@ -1,0 +1,526 @@
+//! [`EngineBuilder`] → [`Engine`]: the session object behind the facade.
+//!
+//! An engine owns the three pieces of shared state every flow in this
+//! crate needs — the worker [`Pool`], the [`DseCache`], and the resolved
+//! stage-2 move registries — exactly once, so callers stop threading
+//! pool/cache/move-set plumbing by hand. `submit` routes one typed
+//! [`Request`]; [`Engine::submit_batch`] fans a request vector out over
+//! the shared pool (order-preserving, panic-safe, cache-warm across
+//! requests) — the crate's batch/serving mode.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::builder::{
+    build_accelerator_with_moves, pnr_check, stage1_with, BuildOutput, DseCache, MoveSet,
+    PnrOutcome, Spec, Stage1Output, SweepGrid,
+};
+use crate::coordinator::pool::panic_message;
+use crate::coordinator::{MoveSetChoice, Pool, RunConfig, RunSummary};
+use crate::dnn::{zoo, Model};
+use crate::ip::tech;
+use crate::predictor::{predict_coarse, simulate};
+use crate::rtlgen;
+use crate::templates::{HwConfig, TemplateId};
+use crate::util::json::{obj, Json};
+
+use super::request::{PredictRequest, Request, SweepRequest};
+use super::response::{
+    BuildResponse, PredictResponse, Response, SimulateFineResponse, SweepResponse, SweepSelection,
+};
+
+enum CacheChoice {
+    Global,
+    Isolated,
+    Explicit(Arc<DseCache>),
+}
+
+/// Configures and constructs an [`Engine`].
+///
+/// ```no_run
+/// # fn main() -> anyhow::Result<()> {
+/// use autodnnchip::api::{Engine, PredictRequest, Request};
+///
+/// let engine = Engine::builder().workers(4).build();
+/// let response = engine.submit(Request::Predict(PredictRequest::for_model("SK")))?;
+/// println!("{}", response.to_json().pretty());
+/// # Ok(())
+/// # }
+/// ```
+pub struct EngineBuilder {
+    workers: Option<usize>,
+    cache: CacheChoice,
+    batch_width: Option<usize>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder { workers: None, cache: CacheChoice::Global, batch_width: None }
+    }
+
+    /// Worker-pool size (default: machine-sized, see
+    /// [`Pool::default_size`]).
+    pub fn workers(mut self, n: usize) -> EngineBuilder {
+        self.workers = Some(n);
+        self
+    }
+
+    /// Use a fresh private [`DseCache`] instead of the process-wide one —
+    /// for cold-vs-warm measurements and determinism tests.
+    pub fn isolated_cache(mut self) -> EngineBuilder {
+        self.cache = CacheChoice::Isolated;
+        self
+    }
+
+    /// Share an explicit cache (e.g. between engines).
+    pub fn cache(mut self, cache: Arc<DseCache>) -> EngineBuilder {
+        self.cache = CacheChoice::Explicit(cache);
+        self
+    }
+
+    /// Maximum requests in flight at once in [`Engine::submit_batch`]
+    /// (default: the worker count).
+    pub fn batch_width(mut self, n: usize) -> EngineBuilder {
+        self.batch_width = Some(n);
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        let pool = match self.workers {
+            Some(n) => Pool::new(n),
+            None => Pool::default_size(),
+        };
+        let cache = match self.cache {
+            CacheChoice::Global => Arc::clone(DseCache::global()),
+            CacheChoice::Isolated => Arc::new(DseCache::new()),
+            CacheChoice::Explicit(c) => c,
+        };
+        let batch_width = self.batch_width.unwrap_or_else(|| pool.workers()).max(1);
+        // The legacy registry is model/spec-independent: resolve it once
+        // per engine. The full registry is tailored per (model, spec) at
+        // request time.
+        Engine { pool, cache, legacy_moves: Arc::new(MoveSet::legacy()), batch_width }
+    }
+}
+
+/// A long-lived session serving typed [`Request`]s over one shared worker
+/// pool, DSE cache and move registry — the front door for predict, build
+/// and sweep flows (single or batched).
+pub struct Engine {
+    pool: Pool,
+    cache: Arc<DseCache>,
+    legacy_moves: Arc<MoveSet>,
+    batch_width: usize,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// The engine's worker pool (shared by stage 1, stage 2 and batches).
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The engine's DSE cache.
+    pub fn cache(&self) -> &Arc<DseCache> {
+        &self.cache
+    }
+
+    /// Route one request to the matching flow.
+    pub fn submit(&self, req: Request) -> Result<Response> {
+        self.submit_at(req, true)
+    }
+
+    /// `fan_out` is true only outside a batch: a nested `Batch` request
+    /// runs serially on the slot thread that carries it, so the outermost
+    /// batch alone owns the in-flight bound (no `batch_width^depth` thread
+    /// explosion from nested batches).
+    fn submit_at(&self, req: Request, fan_out: bool) -> Result<Response> {
+        match req {
+            Request::Predict(p) => self.predict(&p).map(Response::Predict),
+            Request::SimulateFine(s) => self.simulate_fine(&s.0).map(Response::SimulateFine),
+            Request::Build(b) => {
+                let summary = self.run(&b.0)?;
+                let model = summary
+                    .result_json
+                    .get("model")
+                    .and_then(|m| m.as_str())
+                    .unwrap_or_default()
+                    .to_string();
+                Ok(Response::Build(BuildResponse {
+                    model,
+                    output: summary.build,
+                    result_json: summary.result_json,
+                }))
+            }
+            Request::Sweep(s) => self.sweep(&s).map(Response::Sweep),
+            Request::Batch(reqs) => Ok(Response::Batch(self.submit_batch_at(reqs, fan_out))),
+        }
+    }
+
+    /// Fan a request vector out over the shared pool: responses come back
+    /// in request order, a failing or panicking request becomes an
+    /// [`Response::Error`] in its slot (never aborting the batch), and all
+    /// requests share this engine's cache — later requests are served from
+    /// entries earlier ones populated.
+    pub fn submit_batch(&self, reqs: Vec<Request>) -> Vec<Response> {
+        self.submit_batch_at(reqs, true)
+    }
+
+    fn submit_batch_at(&self, reqs: Vec<Request>, fan_out: bool) -> Vec<Response> {
+        if !fan_out {
+            // Nested batch: serve in order on the current slot thread. The
+            // inner builds still parallelize over the shared worker pool.
+            return reqs.into_iter().map(|req| self.serve_one(req, false)).collect();
+        }
+        // `batch_width` slot threads pull the next pending request as soon
+        // as they free up — bounded in-flight requests without a barrier,
+        // so one slow build never stalls the rest of the batch. Each
+        // request's heavy inner stages (stage-1 sweeps, stage-2
+        // refinements) interleave on the shared worker pool.
+        let n = reqs.len();
+        let slots: Vec<Mutex<Option<Request>>> =
+            reqs.into_iter().map(|r| Mutex::new(Some(r))).collect();
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Response)>();
+        thread::scope(|s| {
+            for _ in 0..self.batch_width.min(n).max(1) {
+                let tx = tx.clone();
+                let (slots, next) = (&slots, &next);
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let req = slots[i]
+                        .lock()
+                        .unwrap_or_else(|poisoned| poisoned.into_inner())
+                        .take()
+                        .expect("each request slot is taken exactly once");
+                    let _ = tx.send((i, self.serve_one(req, false)));
+                });
+            }
+        });
+        drop(tx);
+        let mut out: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        for (i, resp) in rx {
+            out[i] = Some(resp);
+        }
+        out.into_iter()
+            .map(|r| r.unwrap_or_else(|| Response::error("request slot was never served")))
+            .collect()
+    }
+
+    /// Serve one request, mapping errors and panics to an in-place
+    /// [`Response::Error`] (the batch/serving contract).
+    fn serve_one(&self, req: Request, fan_out: bool) -> Response {
+        match catch_unwind(AssertUnwindSafe(|| self.submit_at(req, fan_out))) {
+            Ok(Ok(resp)) => resp,
+            Ok(Err(e)) => Response::error(format!("{e:#}")),
+            Err(payload) => {
+                Response::error(format!("request panicked: {}", panic_message(payload)))
+            }
+        }
+    }
+
+    /// Execute a full Chip-Builder run (DSE → PnR → RTL emit → result
+    /// dump) from a configuration, over this engine's pool and cache.
+    /// `coordinator::run` is a thin wrapper around this.
+    pub fn run(&self, cfg: &RunConfig) -> Result<RunSummary> {
+        let model = cfg.resolve_model()?;
+        let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        let build = self.build_with(&model, &cfg.spec, &grid, cfg.n2, cfg.n_opt, cfg.moves)?;
+
+        let mut designs = Vec::new();
+        for (rank, cand) in build.survivors.iter().enumerate() {
+            let pnr = pnr_check(cand, &cfg.spec);
+            let achieved = match pnr {
+                PnrOutcome::Pass { achieved_freq_mhz } => achieved_freq_mhz,
+                PnrOutcome::Fail { .. } => 0.0,
+            };
+            designs.push(obj(vec![
+                ("rank", rank.into()),
+                ("template", cand.template.name().into()),
+                ("unroll", cand.cfg.unroll.into()),
+                ("act_buf_bits", cand.cfg.act_buf_bits.into()),
+                ("w_buf_bits", cand.cfg.w_buf_bits.into()),
+                ("bus_bits", cand.cfg.bus_bits.into()),
+                ("pipeline", cand.cfg.pipeline.into()),
+                ("latency_ms", cand.fine_latency_ms.into()),
+                ("energy_uj", cand.coarse.energy_uj().into()),
+                ("dsp", cand.coarse.resources.dsp.into()),
+                ("bram18k", cand.coarse.resources.bram18k.into()),
+                ("achieved_freq_mhz", achieved.into()),
+            ]));
+            // Emit RTL for every surviving design.
+            if let Some(dir) = &cfg.rtl_out {
+                let bundle = rtlgen::generate(&model, cand)?;
+                rtlgen::emit(&bundle, &Path::new(dir).join(format!("design_{rank}")))?;
+            }
+        }
+        let result_json = obj(vec![
+            ("model", model.name.as_str().into()),
+            (
+                "moves",
+                match cfg.moves {
+                    MoveSetChoice::Legacy => "legacy".into(),
+                    MoveSetChoice::Full => "full".into(),
+                },
+            ),
+            ("evaluated", build.evaluated.into()),
+            (
+                "dse_cache",
+                obj(vec![
+                    ("hits", build.cache_hits.into()),
+                    ("misses", build.cache_misses.into()),
+                ]),
+            ),
+            ("survivors", Json::Arr(designs)),
+            (
+                "stage2_improvement_pct",
+                Json::Arr(
+                    build
+                        .stage2_reports
+                        .iter()
+                        .map(|r| {
+                            Json::Num(
+                                (r.initial_latency_ms - r.best.fine_latency_ms)
+                                    / r.initial_latency_ms
+                                    * 100.0,
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        if let Some(dir) = &cfg.out_dir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(Path::new(dir).join("result.json"), result_json.pretty())?;
+        }
+        Ok(RunSummary { build, result_json })
+    }
+
+    /// The typed core the `Build` route goes through: the full two-stage
+    /// flow over this engine's pool and cache, with an explicit grid (for
+    /// experiments that pin sweep axes) and move-set choice. Byte-identical
+    /// to `build_accelerator_with_moves` on the same inputs.
+    pub fn build_with(
+        &self,
+        model: &Model,
+        spec: &Spec,
+        grid: &SweepGrid,
+        n2: usize,
+        n_opt: usize,
+        moves: MoveSetChoice,
+    ) -> Result<BuildOutput> {
+        let moves = self.resolve_moves(model, spec, moves);
+        build_accelerator_with_moves(model, spec, grid, n2, n_opt, &self.pool, &self.cache, &moves)
+    }
+
+    /// Stage-1-only sweep over this engine's pool and cache (the `Sweep`
+    /// route, and the experiment loops' cold/warm cache studies).
+    pub fn sweep_with(
+        &self,
+        model: &Model,
+        spec: &Spec,
+        grid: &SweepGrid,
+        n2: usize,
+    ) -> Result<Stage1Output> {
+        stage1_with(model, spec, grid, n2, &self.pool, &self.cache)
+    }
+
+    fn resolve_moves(&self, model: &Model, spec: &Spec, choice: MoveSetChoice) -> Arc<MoveSet> {
+        match choice {
+            MoveSetChoice::Legacy => Arc::clone(&self.legacy_moves),
+            MoveSetChoice::Full => Arc::new(MoveSet::full(model, spec)),
+        }
+    }
+
+    /// Resolve a (model, template, tech) request point to the concrete
+    /// objects, with the tech's expert default configuration.
+    fn resolve_point(&self, p: &PredictRequest) -> Result<(Model, TemplateId, HwConfig)> {
+        let model = zoo::by_name(&p.model).ok_or_else(|| {
+            anyhow!("unknown model '{}' (see `autodnnchip list-models`)", p.model)
+        })?;
+        let template = TemplateId::by_name(&p.template)
+            .ok_or_else(|| anyhow!("unknown template '{}'", p.template))?;
+        let tech =
+            tech::by_name(&p.tech).ok_or_else(|| anyhow!("unknown tech '{}'", p.tech))?;
+        let mut cfg = HwConfig::default_for_tech(&tech);
+        if let Some(u) = p.unroll {
+            cfg.unroll = u;
+        }
+        if let Some(pl) = p.pipeline {
+            cfg.pipeline = pl;
+        }
+        Ok((model, template, cfg))
+    }
+
+    fn predict(&self, p: &PredictRequest) -> Result<PredictResponse> {
+        let (model, template, cfg) = self.resolve_point(p)?;
+        let g = template.build(&model, &cfg)?;
+        let coarse = predict_coarse(&g, &cfg.tech)?;
+        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+        Ok(PredictResponse {
+            model: model.name,
+            template: template.name().to_string(),
+            tech: cfg.tech.name.to_string(),
+            coarse_latency_ms: coarse.latency_ms,
+            fine_latency_ms: fine.latency_ms,
+            coarse_energy_uj: coarse.energy_uj(),
+            fine_energy_pj: fine.energy_pj,
+            coarse_fps: coarse.fps(),
+            dsp: coarse.resources.dsp,
+            bram18k: coarse.resources.bram18k,
+            sram_kb: coarse.resources.sram_kb,
+            multipliers: coarse.resources.multipliers,
+        })
+    }
+
+    fn simulate_fine(&self, p: &PredictRequest) -> Result<SimulateFineResponse> {
+        let (model, template, cfg) = self.resolve_point(p)?;
+        let g = template.build(&model, &cfg)?;
+        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+        Ok(SimulateFineResponse {
+            model: model.name,
+            template: template.name().to_string(),
+            cycles: fine.cycles,
+            latency_ms: fine.latency_ms,
+            energy_pj: fine.energy_pj,
+            bottleneck: g.nodes[fine.bottleneck].name.clone(),
+            bottleneck_idle_cycles: fine.bottleneck_idle(),
+        })
+    }
+
+    fn sweep(&self, s: &SweepRequest) -> Result<SweepResponse> {
+        let cfg = &s.0;
+        let model = cfg.resolve_model()?;
+        let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        let out = self.sweep_with(&model, &cfg.spec, &grid, cfg.n2)?;
+        Ok(SweepResponse {
+            model: model.name,
+            evaluated: out.evaluated,
+            feasible: out.feasible,
+            cache_hits: out.cache_hits,
+            cache_misses: out.cache_misses,
+            selected: out
+                .selected
+                .iter()
+                .map(|c| SweepSelection {
+                    template: c.template.name().to_string(),
+                    unroll: c.cfg.unroll,
+                    latency_ms: c.coarse.latency_ms,
+                    energy_uj: c.coarse.energy_uj(),
+                })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::request::SimulateFineRequest;
+
+    #[test]
+    fn predict_matches_direct_predictors_bit_for_bit() {
+        // The facade adds routing, not computation: Engine-served Predict
+        // must carry the exact f64 bit patterns of the legacy entry points
+        // (`predict_coarse` / `simulate` on the tech default config).
+        let engine = Engine::builder().workers(2).isolated_cache().build();
+        let resp = engine
+            .submit(Request::Predict(PredictRequest::for_model("SK8")))
+            .expect("predict SK8");
+        let Response::Predict(p) = resp else { panic!("wrong response variant") };
+
+        let model = zoo::by_name("SK8").unwrap();
+        let cfg = HwConfig::default_for_tech(&tech::by_name("ultra96").unwrap());
+        let g = TemplateId::Hetero.build(&model, &cfg).unwrap();
+        let coarse = predict_coarse(&g, &cfg.tech).unwrap();
+        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false).unwrap();
+        assert_eq!(p.coarse_latency_ms.to_bits(), coarse.latency_ms.to_bits());
+        assert_eq!(p.fine_latency_ms.to_bits(), fine.latency_ms.to_bits());
+        assert_eq!(p.coarse_energy_uj.to_bits(), coarse.energy_uj().to_bits());
+        assert_eq!(p.fine_energy_pj.to_bits(), fine.energy_pj.to_bits());
+        assert_eq!(p.dsp, coarse.resources.dsp);
+        assert_eq!(p.multipliers, coarse.resources.multipliers);
+        assert_eq!(p.model, "SK8");
+    }
+
+    #[test]
+    fn simulate_fine_names_the_bottleneck() {
+        let engine = Engine::builder().workers(1).isolated_cache().build();
+        let resp = engine
+            .submit(Request::SimulateFine(SimulateFineRequest(PredictRequest::for_model(
+                "sdn_gaze",
+            ))))
+            .expect("fine sim");
+        let Response::SimulateFine(s) = resp else { panic!("wrong response variant") };
+        assert!(s.cycles > 0);
+        assert!(s.latency_ms > 0.0);
+        assert!(!s.bottleneck.is_empty());
+    }
+
+    #[test]
+    fn submit_batch_maps_failures_in_place() {
+        let engine = Engine::builder().workers(2).isolated_cache().build();
+        let responses = engine.submit_batch(vec![
+            Request::Predict(PredictRequest::for_model("no_such_model")),
+            Request::Predict(PredictRequest::for_model("SK8")),
+            Request::Predict(PredictRequest {
+                template: "warp_drive".to_string(),
+                ..PredictRequest::for_model("SK8")
+            }),
+        ]);
+        assert_eq!(responses.len(), 3);
+        assert!(responses[0].is_error(), "unknown model must error in place");
+        assert!(!responses[1].is_error(), "valid request must succeed");
+        assert!(responses[2].is_error(), "unknown template must error in place");
+        let msg = responses[0].to_json().get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("no_such_model"), "error must name the model: {msg}");
+    }
+
+    #[test]
+    fn nested_batches_serve_in_place_without_fan_out() {
+        // A Batch inside a batch is served serially on its wave thread —
+        // same responses, shaped as a nested Response::Batch, with the
+        // in-flight bound owned by the outermost batch alone.
+        let engine = Engine::builder().workers(2).isolated_cache().build();
+        let nested = Request::Batch(vec![
+            Request::Predict(PredictRequest::for_model("no_such_model")),
+            Request::Batch(vec![Request::Predict(PredictRequest::for_model("also_missing"))]),
+        ]);
+        let rs = engine.submit_batch(vec![nested]);
+        assert_eq!(rs.len(), 1);
+        let Response::Batch(inner) = &rs[0] else { panic!("expected a batch response") };
+        assert_eq!(inner.len(), 2);
+        assert!(inner[0].is_error());
+        let Response::Batch(deep) = &inner[1] else { panic!("expected a nested batch response") };
+        assert_eq!(deep.len(), 1);
+        assert!(deep[0].is_error());
+    }
+
+    #[test]
+    fn unknown_names_error_with_context() {
+        let engine = Engine::builder().workers(1).isolated_cache().build();
+        for req in [
+            Request::Predict(PredictRequest { tech: "quantum".to_string(), ..Default::default() }),
+            Request::Predict(PredictRequest::for_model("nope")),
+        ] {
+            assert!(engine.submit(req).is_err());
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The service facade: one typed front door for everything the crate can
+//! do — predict, fine-simulate, build, sweep — plus the batched serving
+//! mode the ROADMAP's north star calls for.
+//!
+//! * [`engine`] — [`EngineBuilder`] → [`Engine`]: a session object that
+//!   owns the worker [`Pool`](crate::coordinator::Pool), the
+//!   [`DseCache`](crate::builder::DseCache) and the resolved stage-2 move
+//!   registries once, instead of every caller threading pool/cache/move-set
+//!   plumbing by hand.
+//! * [`request`] / [`response`] — typed [`Request`] / [`Response`] enums
+//!   with serde-free JSON round-tripping over [`crate::util::json`], so
+//!   request streams can arrive (and responses leave) as JSONL.
+//! * [`serve`] — the JSONL serving loop behind `autodnnchip serve`.
+//!
+//! [`Engine::submit`] routes one request; [`Engine::submit_batch`] fans a
+//! request vector out over the shared pool — order-preserving, panic-safe,
+//! and cache-warm across requests. The legacy free functions
+//! (`coordinator::run`, `builder::build_accelerator*`, the bare
+//! predictors) remain as thin wrappers or direct entry points for existing
+//! code; the engine is the recommended front door for anything
+//! serving-shaped or batch-shaped.
+
+pub mod engine;
+pub mod request;
+pub mod response;
+pub mod serve;
+
+pub use engine::{Engine, EngineBuilder};
+pub use request::{
+    parse_jsonl, BuildRequest, PredictRequest, Request, SimulateFineRequest, SweepRequest,
+};
+pub use response::{
+    BuildResponse, ErrorResponse, PredictResponse, Response, SimulateFineResponse, SweepResponse,
+    SweepSelection,
+};
+pub use serve::{serve_lines, serve_path, write_jsonl, ServeOutcome};

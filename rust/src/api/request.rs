@@ -1,0 +1,344 @@
+//! Typed request objects for the [`Engine`](super::Engine) facade, with
+//! serde-free JSON round-tripping over [`crate::util::json`] so request
+//! streams can arrive as JSONL (`autodnnchip serve --requests file.jsonl`).
+//!
+//! Every request carries a `"type"` tag in its JSON form:
+//!
+//! ```json
+//! {"type":"predict","model":"SK","template":"hetero_dw_pw","tech":"ultra96"}
+//! {"type":"simulate_fine","model":"sdn_ocr","template":"systolic"}
+//! {"type":"build","model":"sdn_ocr","backend":"fpga","n2":2,"n_opt":1}
+//! {"type":"sweep","model":"SK8","backend":"fpga","n2":3}
+//! {"type":"batch","requests":[{"type":"predict","model":"SK8"}]}
+//! ```
+//!
+//! `build` and `sweep` accept every key of the coordinator's config-file
+//! format ([`RunConfig::from_json`]) — the facade and the config file are
+//! one schema, not two.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::RunConfig;
+use crate::util::json::{obj, Json};
+
+/// One unit of work the [`Engine`](super::Engine) can serve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Coarse + fine prediction of one (model, template, tech) point.
+    Predict(PredictRequest),
+    /// Fine-grained (cycle-level) run-time simulation only.
+    SimulateFine(SimulateFineRequest),
+    /// Full two-stage DSE → PnR → artifacts (the `coordinator::run` flow).
+    Build(BuildRequest),
+    /// Stage-1 coarse sweep only (the Fig. 11/14 design clouds).
+    Sweep(SweepRequest),
+    /// A request vector fanned out over the engine's shared worker pool.
+    Batch(Vec<Request>),
+}
+
+/// Chip-Predictor request: one design point, both prediction modes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictRequest {
+    /// Zoo model name (see `autodnnchip list-models`).
+    pub model: String,
+    /// Template name (`TemplateId::by_name`).
+    pub template: String,
+    /// Technology name (`ip::tech::by_name`).
+    pub tech: String,
+    /// Override of the tech default configuration's unroll factor.
+    pub unroll: Option<usize>,
+    /// Override of the tech default configuration's pipeline depth.
+    pub pipeline: Option<u64>,
+}
+
+impl Default for PredictRequest {
+    fn default() -> Self {
+        PredictRequest {
+            model: "SK".to_string(),
+            template: "hetero_dw_pw".to_string(),
+            tech: "ultra96".to_string(),
+            unroll: None,
+            pipeline: None,
+        }
+    }
+}
+
+impl PredictRequest {
+    /// A default-configured request for one zoo model.
+    pub fn for_model(model: &str) -> PredictRequest {
+        PredictRequest { model: model.to_string(), ..PredictRequest::default() }
+    }
+}
+
+/// Fine-simulation request: the same point addressing as
+/// [`PredictRequest`], run through the cycle-level simulator only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateFineRequest(pub PredictRequest);
+
+/// Chip-Builder request: the coordinator's full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BuildRequest(pub RunConfig);
+
+/// Stage-1-only sweep request; `n2` bounds the reported selection and
+/// `n_opt`/`moves`/artifact paths of the carried config are ignored.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRequest(pub RunConfig);
+
+/// Clone `j` (an object) with a `"type"` tag inserted.
+pub(crate) fn with_type(j: &Json, t: &str) -> Json {
+    match j {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.insert("type".to_string(), Json::Str(t.to_string()));
+            Json::Obj(m)
+        }
+        other => obj(vec![("type", t.into()), ("value", other.clone())]),
+    }
+}
+
+/// Allowed keys of `predict`/`simulate_fine` requests.
+const POINT_KEYS: &[&str] = &["type", "model", "template", "tech", "unroll", "pipeline"];
+
+/// Reject keys outside `allowed`: a misspelled key (`"modle"`) must be an
+/// error, not a silent fall-through to the defaults — the JSONL mirror of
+/// the CLI's unknown-`--flag` warning.
+fn reject_unknown_keys(j: &Json, allowed: &[&str]) -> Result<()> {
+    if let Some(o) = j.as_obj() {
+        for key in o.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(anyhow!(
+                    "unknown request key '{key}' (allowed: {})",
+                    allowed.join(", ")
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A string-valued key with a default — present-but-wrong-typed is an
+/// error, not a silent default.
+fn str_or(j: &Json, key: &str, default: &str) -> Result<String> {
+    match j.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow!("request key '{key}' must be a string")),
+    }
+}
+
+fn point_from_json(j: &Json) -> Result<PredictRequest> {
+    reject_unknown_keys(j, POINT_KEYS)?;
+    let d = PredictRequest::default();
+    let bad_uint = |key: &str| anyhow!("request key '{key}' must be a non-negative integer");
+    // `unroll` is usize in the domain model, `pipeline` is u64 — parse
+    // each at its own width so neither silently truncates.
+    let unroll = match j.get("unroll") {
+        None => None,
+        Some(v) => Some(v.as_usize().ok_or_else(|| bad_uint("unroll"))?),
+    };
+    let pipeline = match j.get("pipeline") {
+        None => None,
+        Some(v) => Some(v.as_u64().ok_or_else(|| bad_uint("pipeline"))?),
+    };
+    Ok(PredictRequest {
+        model: str_or(j, "model", &d.model)?,
+        template: str_or(j, "template", &d.template)?,
+        tech: str_or(j, "tech", &d.tech)?,
+        unroll,
+        pipeline,
+    })
+}
+
+fn point_to_json(p: &PredictRequest, t: &str) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("type", t.into()),
+        ("model", p.model.as_str().into()),
+        ("template", p.template.as_str().into()),
+        ("tech", p.tech.as_str().into()),
+    ];
+    if let Some(u) = p.unroll {
+        pairs.push(("unroll", u.into()));
+    }
+    if let Some(pl) = p.pipeline {
+        pairs.push(("pipeline", pl.into()));
+    }
+    obj(pairs)
+}
+
+impl Request {
+    /// Serialize to the tagged-object JSON form; [`Request::from_json`]
+    /// inverts this exactly (round-trip property-tested per variant).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Predict(p) => point_to_json(p, "predict"),
+            Request::SimulateFine(s) => point_to_json(&s.0, "simulate_fine"),
+            Request::Build(b) => with_type(&b.0.to_json(), "build"),
+            Request::Sweep(s) => with_type(&s.0.to_json(), "sweep"),
+            Request::Batch(reqs) => obj(vec![
+                ("type", "batch".into()),
+                ("requests", Json::Arr(reqs.iter().map(|r| r.to_json()).collect())),
+            ]),
+        }
+    }
+
+    /// Parse a tagged request object.
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let tag = j
+            .get("type")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| anyhow!("request: missing 'type' tag"))?;
+        match tag {
+            "predict" => Ok(Request::Predict(point_from_json(j)?)),
+            "simulate_fine" => Ok(Request::SimulateFine(SimulateFineRequest(point_from_json(j)?))),
+            // `RunConfig::from_json` is itself strict (unknown keys and
+            // wrong-typed values are errors), so build/sweep need no extra
+            // validation here.
+            "build" => Ok(Request::Build(BuildRequest(RunConfig::from_json(j)?))),
+            "sweep" => Ok(Request::Sweep(SweepRequest(RunConfig::from_json(j)?))),
+            "batch" => {
+                reject_unknown_keys(j, &["type", "requests"])?;
+                let arr = j
+                    .get("requests")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("batch request: missing 'requests' array"))?;
+                Ok(Request::Batch(arr.iter().map(Request::from_json).collect::<Result<_>>()?))
+            }
+            other => Err(anyhow!(
+                "unknown request type '{other}' \
+                 (expected predict|simulate_fine|build|sweep|batch)"
+            )),
+        }
+    }
+}
+
+/// Iterate the content lines of a JSONL request stream: one parse result
+/// per non-blank, non-`#`-comment line, with errors already carrying the
+/// `line N:` prefix. [`parse_jsonl`] and the serving loop
+/// ([`super::serve`]) share this — one line-numbered error format — and
+/// differ only in policy (fail fast vs in-place error responses).
+pub(crate) fn jsonl_entries(text: &str) -> impl Iterator<Item = Result<Request, String>> + '_ {
+    text.lines().enumerate().filter_map(|(i, line)| {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return None;
+        }
+        let parsed = Json::parse(line)
+            .map_err(anyhow::Error::from)
+            .and_then(|j| Request::from_json(&j))
+            .map_err(|e| format!("line {}: {e:#}", i + 1));
+        Some(parsed)
+    })
+}
+
+/// Parse a JSONL request stream: one JSON request per line; blank lines
+/// and `#`-comment lines are skipped. Fails on the first malformed line —
+/// the CLI serving loop ([`super::serve`]) instead maps bad lines to
+/// in-place error responses.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Request>> {
+    jsonl_entries(text).map(|r| r.map_err(|e| anyhow!(e))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::Spec;
+    use crate::coordinator::MoveSetChoice;
+
+    fn sample_cfg() -> RunConfig {
+        RunConfig {
+            model: "sdn_ocr".to_string(),
+            model_json: None,
+            spec: Spec::ultra96_object_detection(),
+            n2: 2,
+            n_opt: 1,
+            moves: MoveSetChoice::Legacy,
+            out_dir: Some("results/x".to_string()),
+            rtl_out: None,
+        }
+    }
+
+    fn every_variant() -> Vec<Request> {
+        let mut asic = sample_cfg();
+        asic.spec = Spec::asic_vision();
+        asic.moves = MoveSetChoice::Full;
+        asic.out_dir = None;
+        let mut with_json = sample_cfg();
+        with_json.model = String::new();
+        with_json.model_json = Some("examples/models/tinyconv.json".to_string());
+        vec![
+            Request::Predict(PredictRequest {
+                unroll: Some(128),
+                pipeline: Some(4),
+                ..PredictRequest::for_model("SK8")
+            }),
+            Request::Predict(PredictRequest::default()),
+            Request::SimulateFine(SimulateFineRequest(PredictRequest::for_model("sdn_gaze"))),
+            Request::Build(BuildRequest(sample_cfg())),
+            Request::Build(BuildRequest(with_json)),
+            Request::Sweep(SweepRequest(asic)),
+            Request::Batch(vec![
+                Request::Predict(PredictRequest::for_model("SK")),
+                Request::Sweep(SweepRequest(sample_cfg())),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trip_every_variant() {
+        // Serialize → reparse must be the identity for every variant,
+        // including through a compact JSONL line.
+        for req in every_variant() {
+            let line = req.to_json().to_string();
+            assert!(!line.contains('\n'), "JSONL lines must be single-line: {line}");
+            let back = Request::from_json(&Json::parse(&line).unwrap())
+                .unwrap_or_else(|e| panic!("reparse failed for {line}: {e}"));
+            assert_eq!(back, req, "round trip diverged for {line}");
+        }
+        let stream: String =
+            every_variant().iter().map(|r| r.to_json().to_string() + "\n").collect();
+        let parsed = parse_jsonl(&stream).unwrap();
+        assert_eq!(parsed, every_variant());
+    }
+
+    #[test]
+    fn parse_jsonl_skips_blank_and_comment_lines() {
+        let text = "# smoke set\n\n{\"type\":\"predict\",\"model\":\"SK8\"}\n";
+        let reqs = parse_jsonl(text).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert!(matches!(&reqs[0], Request::Predict(p) if p.model == "SK8"));
+    }
+
+    #[test]
+    fn malformed_lines_name_the_line() {
+        let err = parse_jsonl("{\"type\":\"predict\"}\nnot json\n").unwrap_err();
+        assert!(format!("{err}").contains("line 2"), "{err}");
+        let err = parse_jsonl("{\"model\":\"SK\"}\n").unwrap_err();
+        assert!(format!("{err}").contains("type"), "{err}");
+        let err = Request::from_json(&Json::parse(r#"{"type":"teleport"}"#).unwrap()).unwrap_err();
+        assert!(format!("{err}").contains("teleport"), "{err}");
+    }
+
+    #[test]
+    fn misspelled_and_mistyped_keys_are_errors_not_defaults() {
+        // A typo'd key must not silently fall back to the default design
+        // point (the JSONL mirror of the CLI's unknown-flag warning).
+        for bad in [
+            r#"{"type":"predict","modle":"SK8"}"#,
+            r#"{"type":"predict","model":123}"#,
+            r#"{"type":"predict","pipeline":2.5}"#,
+            r#"{"type":"simulate_fine","templte":"systolic"}"#,
+            r#"{"type":"build","model":"SK","mvoes":"full"}"#,
+            r#"{"type":"build","model":"SK","n2":"3","moves":3}"#,
+            r#"{"type":"sweep","model":"SK","n_2":3}"#,
+            r#"{"type":"batch","requests":[],"bacth_width":4}"#,
+        ] {
+            let err = Request::from_json(&Json::parse(bad).unwrap());
+            assert!(err.is_err(), "must reject: {bad}");
+        }
+        // Known keys of each schema still parse.
+        let ok = r#"{"type":"build","model":"SK","backend":"fpga","n2":2,"moves":"legacy"}"#;
+        assert!(Request::from_json(&Json::parse(ok).unwrap()).is_ok());
+    }
+}

@@ -1,0 +1,195 @@
+//! Typed response objects mirroring the [`Request`](super::Request)
+//! variants, serializable to tagged JSON objects for the JSONL output of
+//! `autodnnchip serve`.
+
+use crate::builder::BuildOutput;
+use crate::util::json::{obj, Json};
+
+use super::request::with_type;
+
+/// The engine's answer to one [`Request`](super::Request).
+#[derive(Debug, Clone)]
+pub enum Response {
+    Predict(PredictResponse),
+    SimulateFine(SimulateFineResponse),
+    Build(BuildResponse),
+    Sweep(SweepResponse),
+    Batch(Vec<Response>),
+    /// A request that failed (error or panicking job). Batch serving
+    /// reports these in place, preserving request order, instead of
+    /// aborting the whole stream.
+    Error(ErrorResponse),
+}
+
+/// Both prediction modes of one design point (the `predict` CLI table).
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    pub model: String,
+    pub template: String,
+    pub tech: String,
+    pub coarse_latency_ms: f64,
+    pub fine_latency_ms: f64,
+    pub coarse_energy_uj: f64,
+    /// Fine-simulated energy in pJ (dynamic + leakage over the simulated
+    /// run), kept raw so the facade is byte-identical to the predictors.
+    pub fine_energy_pj: f64,
+    pub coarse_fps: f64,
+    pub dsp: usize,
+    pub bram18k: usize,
+    pub sram_kb: f64,
+    pub multipliers: usize,
+}
+
+/// Cycle-level simulation result for one design point.
+#[derive(Debug, Clone)]
+pub struct SimulateFineResponse {
+    pub model: String,
+    pub template: String,
+    pub cycles: u64,
+    pub latency_ms: f64,
+    pub energy_pj: f64,
+    /// Name of the bottleneck IP (Algorithm 1 line 22).
+    pub bottleneck: String,
+    pub bottleneck_idle_cycles: u64,
+}
+
+/// Full Chip-Builder run result.
+#[derive(Debug, Clone)]
+pub struct BuildResponse {
+    pub model: String,
+    /// The raw two-stage DSE output — byte-identical to what the legacy
+    /// `build_accelerator_with_moves` entry point returns for the same
+    /// inputs (property-tested).
+    pub output: BuildOutput,
+    /// The `result.json` document of the run (survivors, cache counters,
+    /// stage-2 improvements).
+    pub result_json: Json,
+}
+
+/// One selected stage-1 candidate, summarized.
+#[derive(Debug, Clone)]
+pub struct SweepSelection {
+    pub template: String,
+    pub unroll: usize,
+    pub latency_ms: f64,
+    pub energy_uj: f64,
+}
+
+/// Stage-1 sweep summary.
+#[derive(Debug, Clone)]
+pub struct SweepResponse {
+    pub model: String,
+    pub evaluated: usize,
+    pub feasible: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Top-N₂ feasible candidates, best first.
+    pub selected: Vec<SweepSelection>,
+}
+
+/// A failed request, with the error (or panic) message.
+#[derive(Debug, Clone)]
+pub struct ErrorResponse {
+    pub message: String,
+}
+
+impl Response {
+    /// Shorthand for an in-place failure response.
+    pub fn error(message: impl Into<String>) -> Response {
+        Response::Error(ErrorResponse { message: message.into() })
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, Response::Error(_))
+    }
+
+    /// Serialize to a tagged JSON object (one JSONL line per response in
+    /// serving mode).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Predict(p) => obj(vec![
+                ("type", "predict".into()),
+                ("model", p.model.as_str().into()),
+                ("template", p.template.as_str().into()),
+                ("tech", p.tech.as_str().into()),
+                ("coarse_latency_ms", p.coarse_latency_ms.into()),
+                ("fine_latency_ms", p.fine_latency_ms.into()),
+                ("coarse_energy_uj", p.coarse_energy_uj.into()),
+                ("fine_energy_pj", p.fine_energy_pj.into()),
+                ("coarse_fps", p.coarse_fps.into()),
+                ("dsp", p.dsp.into()),
+                ("bram18k", p.bram18k.into()),
+                ("sram_kb", p.sram_kb.into()),
+                ("multipliers", p.multipliers.into()),
+            ]),
+            Response::SimulateFine(s) => obj(vec![
+                ("type", "simulate_fine".into()),
+                ("model", s.model.as_str().into()),
+                ("template", s.template.as_str().into()),
+                ("cycles", s.cycles.into()),
+                ("latency_ms", s.latency_ms.into()),
+                ("energy_pj", s.energy_pj.into()),
+                ("bottleneck", s.bottleneck.as_str().into()),
+                ("bottleneck_idle_cycles", s.bottleneck_idle_cycles.into()),
+            ]),
+            Response::Build(b) => with_type(&b.result_json, "build"),
+            Response::Sweep(s) => obj(vec![
+                ("type", "sweep".into()),
+                ("model", s.model.as_str().into()),
+                ("evaluated", s.evaluated.into()),
+                ("feasible", s.feasible.into()),
+                ("cache_hits", s.cache_hits.into()),
+                ("cache_misses", s.cache_misses.into()),
+                (
+                    "selected",
+                    Json::Arr(
+                        s.selected
+                            .iter()
+                            .map(|c| {
+                                obj(vec![
+                                    ("template", c.template.as_str().into()),
+                                    ("unroll", c.unroll.into()),
+                                    ("latency_ms", c.latency_ms.into()),
+                                    ("energy_uj", c.energy_uj.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Batch(rs) => obj(vec![
+                ("type", "batch".into()),
+                ("responses", Json::Arr(rs.iter().map(|r| r.to_json()).collect())),
+            ]),
+            Response::Error(e) => {
+                obj(vec![("type", "error".into()), ("error", e.message.as_str().into())])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_shape_and_predicate() {
+        let r = Response::error("boom");
+        assert!(r.is_error());
+        let j = r.to_json();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "error");
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+    }
+
+    #[test]
+    fn batch_serializes_children_in_order() {
+        let r = Response::Batch(vec![Response::error("a"), Response::error("b")]);
+        let j = r.to_json();
+        let arr = j.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("error").unwrap().as_str().unwrap(), "a");
+        assert_eq!(arr[1].get("error").unwrap().as_str().unwrap(), "b");
+        // Every response line parses back as JSON.
+        assert!(Json::parse(&r.to_json().to_string()).is_ok());
+    }
+}

@@ -1,0 +1,112 @@
+//! JSONL serving loop: the machinery behind
+//! `autodnnchip serve --requests file.jsonl [--out dir]`.
+//!
+//! One request per line in, one response per line out, in order. A line
+//! that fails to parse — or a request that errors or panics — becomes an
+//! in-place `{"type":"error",...}` response instead of aborting the
+//! stream, which is what a serving front door must do.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use super::request::{jsonl_entries, Request};
+use super::response::Response;
+
+/// The outcome of serving one request stream.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// One response per request line, in request order.
+    pub responses: Vec<Response>,
+    /// Requests answered successfully.
+    pub ok: usize,
+    /// Requests that failed (parse error, flow error, or panic).
+    pub failed: usize,
+}
+
+/// Serve a JSONL request stream from text: parse each non-blank,
+/// non-`#`-comment line, fan the well-formed requests out through
+/// [`Engine::submit_batch`], and weave parse failures back in as in-place
+/// error responses.
+pub fn serve_lines(engine: &Engine, text: &str) -> ServeOutcome {
+    let parsed: Vec<Result<Request, String>> = jsonl_entries(text).collect();
+    let requests: Vec<Request> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
+    let mut served = engine.submit_batch(requests).into_iter();
+    let responses: Vec<Response> = parsed
+        .into_iter()
+        .map(|r| match r {
+            Ok(_) => served.next().expect("submit_batch returns one response per request"),
+            Err(msg) => Response::error(msg),
+        })
+        .collect();
+    let failed = responses.iter().filter(|r| r.is_error()).count();
+    let ok = responses.len() - failed;
+    ServeOutcome { responses, ok, failed }
+}
+
+/// [`serve_lines`] over a JSONL file on disk.
+pub fn serve_path(engine: &Engine, path: &Path) -> Result<ServeOutcome> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading request stream '{}'", path.display()))?;
+    Ok(serve_lines(engine, &text))
+}
+
+/// Write responses as JSONL (one compact JSON object per line).
+pub fn write_jsonl(responses: &[Response], path: &Path) -> Result<()> {
+    let mut text = String::new();
+    for r in responses {
+        text.push_str(&r.to_json().to_string());
+        text.push('\n');
+    }
+    std::fs::write(path, text).with_context(|| format!("writing '{}'", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::request::PredictRequest;
+    use crate::util::json::Json;
+
+    #[test]
+    fn serve_lines_weaves_parse_errors_in_place() {
+        let engine = Engine::builder().workers(2).isolated_cache().build();
+        let text = "# comment\n\
+                    {\"type\":\"predict\",\"model\":\"SK8\"}\n\
+                    this is not json\n\
+                    {\"type\":\"predict\",\"model\":\"sdn_gaze\",\"template\":\"systolic\"}\n";
+        let outcome = serve_lines(&engine, text);
+        assert_eq!(outcome.responses.len(), 3);
+        assert_eq!(outcome.ok, 2);
+        assert_eq!(outcome.failed, 1);
+        assert!(!outcome.responses[0].is_error());
+        assert!(outcome.responses[1].is_error());
+        assert!(!outcome.responses[2].is_error());
+        let msg = outcome.responses[1]
+            .to_json()
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(msg.contains("line 3"), "parse errors must name the line: {msg}");
+    }
+
+    #[test]
+    fn write_jsonl_emits_one_parseable_line_per_response() {
+        let engine = Engine::builder().workers(1).isolated_cache().build();
+        let outcome = serve_lines(&engine, "{\"type\":\"predict\",\"model\":\"SK8\"}\n");
+        let path = std::env::temp_dir().join(format!("serve_{}.jsonl", std::process::id()));
+        write_jsonl(&outcome.responses, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "predict");
+        std::fs::remove_file(&path).ok();
+        // The request round-trips from the typed side too.
+        let req = Request::Predict(PredictRequest::for_model("SK8"));
+        assert_eq!(Request::from_json(&req.to_json()).unwrap(), req);
+    }
+}

@@ -49,7 +49,7 @@ pub enum Objective {
 
 /// One Chip-Builder target: back-end budget, application constraints and
 /// the metric to optimize.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Spec {
     pub backend: Backend,
     /// Throughput requirement in frames/s.

@@ -1,9 +1,17 @@
 //! Run configuration: JSON config file ↔ [`RunConfig`].
+//!
+//! The same schema doubles as the payload of the `api` facade's `build`
+//! and `sweep` requests ([`RunConfig::to_json`] emits it,
+//! [`RunConfig::from_json`] parses it), so config files and JSONL request
+//! streams never drift apart.
 
-use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::builder::{Backend, Objective, Spec};
-use crate::util::json::Json;
+use crate::dnn::{parser, zoo, Model};
+use crate::util::json::{obj, Json};
 
 /// Which stage-2 move set a run co-optimizes with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -17,7 +25,7 @@ pub enum MoveSetChoice {
 }
 
 /// One Chip-Builder run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// Zoo model name (ignored when `model_json` is set).
     pub model: String,
@@ -35,6 +43,42 @@ pub struct RunConfig {
     pub rtl_out: Option<String>,
 }
 
+/// Keys the run-config schema accepts (`"type"` included so the same
+/// object can carry the `api` request tag).
+const CONFIG_KEYS: &[&str] = &[
+    "type", "model", "model_json", "backend", "dsp", "bram18k", "lut", "ff", "sram_kb", "macs",
+    "objective", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves",
+    "out_dir", "rtl_out",
+];
+
+/// A string key with present-but-wrong-typed as an error, never a silent
+/// default.
+fn want_str<'j>(j: &'j Json, key: &str) -> Result<Option<&'j str>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            v.as_str().map(Some).ok_or_else(|| anyhow!("config: '{key}' must be a string"))
+        }
+    }
+}
+
+fn want_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| anyhow!("config: '{key}' must be a non-negative integer")),
+    }
+}
+
+fn want_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| anyhow!("config: '{key}' must be a number")),
+    }
+}
+
 impl RunConfig {
     /// Parse from a JSON config:
     /// ```json
@@ -45,27 +89,41 @@ impl RunConfig {
     /// ```
     /// `"model_json": "path.json"` imports a framework-export model
     /// instead of naming a zoo entry (then `"model"` may be omitted).
+    ///
+    /// The schema is strict: an unknown key (`"mvoes"`) or a wrong-typed
+    /// value (`"n2": "3"`) is an error, never a silent default — the same
+    /// contract the CLI's unknown-`--flag` warning gives.
     pub fn from_json(j: &Json) -> Result<RunConfig> {
-        let model_json = j.get("model_json").and_then(|v| v.as_str()).map(|s| s.to_string());
-        let model = match j.get("model").and_then(|v| v.as_str()) {
+        if let Some(o) = j.as_obj() {
+            for key in o.keys() {
+                if !CONFIG_KEYS.contains(&key.as_str()) {
+                    return Err(anyhow!(
+                        "config: unknown key '{key}' (allowed: {})",
+                        CONFIG_KEYS.join(", ")
+                    ));
+                }
+            }
+        }
+        let model_json = want_str(j, "model_json")?.map(|s| s.to_string());
+        let model = match want_str(j, "model")? {
             Some(m) => m.to_string(),
             None if model_json.is_some() => String::new(),
             None => return Err(anyhow!("config: missing 'model' (or 'model_json')")),
         };
-        let backend = match j.get("backend").and_then(|v| v.as_str()).unwrap_or("fpga") {
+        let backend = match want_str(j, "backend")?.unwrap_or("fpga") {
             "fpga" => Backend::Fpga {
-                dsp: j.get("dsp").and_then(|v| v.as_usize()).unwrap_or(360),
-                bram18k: j.get("bram18k").and_then(|v| v.as_usize()).unwrap_or(432),
-                lut: j.get("lut").and_then(|v| v.as_usize()).unwrap_or(70_560),
-                ff: j.get("ff").and_then(|v| v.as_usize()).unwrap_or(141_120),
+                dsp: want_usize(j, "dsp")?.unwrap_or(360),
+                bram18k: want_usize(j, "bram18k")?.unwrap_or(432),
+                lut: want_usize(j, "lut")?.unwrap_or(70_560),
+                ff: want_usize(j, "ff")?.unwrap_or(141_120),
             },
             "asic" => Backend::Asic {
-                sram_kb: j.get("sram_kb").and_then(|v| v.as_f64()).unwrap_or(128.0),
-                macs: j.get("macs").and_then(|v| v.as_usize()).unwrap_or(64),
+                sram_kb: want_f64(j, "sram_kb")?.unwrap_or(128.0),
+                macs: want_usize(j, "macs")?.unwrap_or(64),
             },
             other => return Err(anyhow!("config: unknown backend '{other}'")),
         };
-        let objective = match j.get("objective").and_then(|v| v.as_str()).unwrap_or("latency") {
+        let objective = match want_str(j, "objective")?.unwrap_or("latency") {
             "latency" => Objective::Latency,
             "energy" => Objective::Energy,
             "edp" => Objective::Edp,
@@ -73,15 +131,12 @@ impl RunConfig {
         };
         let spec = Spec {
             backend,
-            min_fps: j.get("min_fps").and_then(|v| v.as_f64()).unwrap_or(20.0),
-            max_power_mw: j.get("max_power_mw").and_then(|v| v.as_f64()).unwrap_or(10_000.0),
+            min_fps: want_f64(j, "min_fps")?.unwrap_or(20.0),
+            max_power_mw: want_f64(j, "max_power_mw")?.unwrap_or(10_000.0),
             objective,
-            min_precision_bits: j
-                .get("min_precision_bits")
-                .and_then(|v| v.as_usize())
-                .unwrap_or(8),
+            min_precision_bits: want_usize(j, "min_precision_bits")?.unwrap_or(8),
         };
-        let moves = match j.get("moves").and_then(|v| v.as_str()).unwrap_or("full") {
+        let moves = match want_str(j, "moves")?.unwrap_or("full") {
             "legacy" => MoveSetChoice::Legacy,
             "full" => MoveSetChoice::Full,
             other => return Err(anyhow!("config: unknown move set '{other}'")),
@@ -90,11 +145,11 @@ impl RunConfig {
             model,
             model_json,
             spec,
-            n2: j.get("n2").and_then(|v| v.as_usize()).unwrap_or(4),
-            n_opt: j.get("n_opt").and_then(|v| v.as_usize()).unwrap_or(2),
+            n2: want_usize(j, "n2")?.unwrap_or(4),
+            n_opt: want_usize(j, "n_opt")?.unwrap_or(2),
             moves,
-            out_dir: j.get("out_dir").and_then(|v| v.as_str()).map(|s| s.to_string()),
-            rtl_out: j.get("rtl_out").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            out_dir: want_str(j, "out_dir")?.map(|s| s.to_string()),
+            rtl_out: want_str(j, "rtl_out")?.map(|s| s.to_string()),
         })
     }
 
@@ -102,6 +157,72 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
         RunConfig::from_json(&j)
+    }
+
+    /// Serialize to the exact JSON shape [`RunConfig::from_json`] parses —
+    /// `from_json(to_json(cfg)) == cfg` (the round-trip the `api` request
+    /// stream relies on; property-tested there).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("model", self.model.as_str().into())];
+        if let Some(mj) = &self.model_json {
+            pairs.push(("model_json", mj.as_str().into()));
+        }
+        match &self.spec.backend {
+            Backend::Fpga { dsp, bram18k, lut, ff } => {
+                pairs.push(("backend", "fpga".into()));
+                pairs.push(("dsp", (*dsp).into()));
+                pairs.push(("bram18k", (*bram18k).into()));
+                pairs.push(("lut", (*lut).into()));
+                pairs.push(("ff", (*ff).into()));
+            }
+            Backend::Asic { sram_kb, macs } => {
+                pairs.push(("backend", "asic".into()));
+                pairs.push(("sram_kb", (*sram_kb).into()));
+                pairs.push(("macs", (*macs).into()));
+            }
+        }
+        pairs.push((
+            "objective",
+            match self.spec.objective {
+                Objective::Latency => "latency",
+                Objective::Energy => "energy",
+                Objective::Edp => "edp",
+            }
+            .into(),
+        ));
+        pairs.push(("min_fps", self.spec.min_fps.into()));
+        pairs.push(("max_power_mw", self.spec.max_power_mw.into()));
+        pairs.push(("min_precision_bits", self.spec.min_precision_bits.into()));
+        pairs.push(("n2", self.n2.into()));
+        pairs.push(("n_opt", self.n_opt.into()));
+        pairs.push((
+            "moves",
+            match self.moves {
+                MoveSetChoice::Legacy => "legacy",
+                MoveSetChoice::Full => "full",
+            }
+            .into(),
+        ));
+        if let Some(d) = &self.out_dir {
+            pairs.push(("out_dir", d.as_str().into()));
+        }
+        if let Some(d) = &self.rtl_out {
+            pairs.push(("rtl_out", d.as_str().into()));
+        }
+        obj(pairs)
+    }
+
+    /// Resolve the workload of this run: a framework-export JSON file when
+    /// `model_json` is set (the paper's "DNN parser" entry path —
+    /// workloads outside the zoo), otherwise a zoo model by name.
+    pub fn resolve_model(&self) -> Result<Model> {
+        match &self.model_json {
+            Some(path) => parser::load_file(Path::new(path))
+                .with_context(|| format!("importing model JSON '{path}'")),
+            None => zoo::by_name(&self.model).with_context(|| {
+                format!("unknown model '{}' (see `autodnnchip list-models`)", self.model)
+            }),
+        }
     }
 }
 
@@ -151,5 +272,56 @@ mod tests {
     fn rejects_unknown_backend() {
         let j = Json::parse(r#"{"model":"SK","backend":"quantum"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_wrong_types() {
+        // Typos and wrong-typed values are errors, not silent defaults.
+        for bad in [
+            r#"{"model":"SK","mvoes":"full"}"#,
+            r#"{"model":"SK","n_2":3}"#,
+            r#"{"model":"SK","n2":"3"}"#,
+            r#"{"model":"SK","min_fps":"fast"}"#,
+            r#"{"model":123}"#,
+            r#"{"model":"SK","out_dir":7}"#,
+        ] {
+            assert!(
+                RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject: {bad}"
+            );
+        }
+        // The api request tag is part of the accepted schema.
+        let tagged = Json::parse(r#"{"type":"build","model":"SK"}"#).unwrap();
+        assert!(RunConfig::from_json(&tagged).is_ok());
+    }
+
+    #[test]
+    fn to_json_round_trips_through_from_json() {
+        for text in [
+            r#"{"model":"SK"}"#,
+            r#"{"model":"sdn_ocr","backend":"asic","objective":"edp","macs":48,"sram_kb":96.5}"#,
+            r#"{"model_json":"examples/models/tinyconv.json","moves":"legacy",
+                "min_precision_bits":9,"out_dir":"results/t","rtl_out":"results/t/rtl"}"#,
+            r#"{"model":"SK8","min_fps":27.5,"max_power_mw":8500,"n2":3,"n_opt":2}"#,
+        ] {
+            let c = RunConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+            let back = RunConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(back, c, "round trip diverged for {text}");
+            // And once more through the serialized string form (the JSONL path).
+            let again = RunConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap());
+            assert_eq!(again.unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn resolve_model_prefers_model_json_and_names_failures() {
+        let c = RunConfig::from_json(&Json::parse(r#"{"model":"SK"}"#).unwrap()).unwrap();
+        assert_eq!(c.resolve_model().unwrap().name, "SK");
+        let bad = RunConfig { model: "not_a_model".into(), ..c.clone() };
+        let err = format!("{:#}", bad.resolve_model().unwrap_err());
+        assert!(err.contains("not_a_model"), "{err}");
+        let missing = RunConfig { model_json: Some("/nope/missing.json".into()), ..c };
+        let err = format!("{:#}", missing.resolve_model().unwrap_err());
+        assert!(err.contains("missing.json"), "{err}");
     }
 }

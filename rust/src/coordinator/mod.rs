@@ -1,27 +1,21 @@
 //! Run coordination: job configuration, a worker pool for parallel design
-//! evaluation, and the end-to-end orchestration that the CLI drives
-//! (load config → DSE → PnR → RTL emit → result dump).
+//! evaluation, and the legacy end-to-end orchestration entry point.
 //!
-//! The paper's contribution is the predictor/builder, so this layer is a
-//! thin driver by design — but it is a *real* one: config files, a thread
-//! pool for the embarrassingly-parallel stage-1 sweep, structured result
-//! artifacts, and process exit discipline.
+//! Since the `api` redesign, [`run`] is a thin wrapper: it builds a
+//! default-configured [`crate::api::Engine`] and submits one build —
+//! the engine owns the pool, the DSE cache and the move registries, and
+//! carries the full flow (load config → DSE → PnR → RTL emit → result
+//! dump). Callers that serve more than one run should construct an
+//! [`crate::api::Engine`] themselves and keep it alive, so every run
+//! shares one pool and one warm cache.
 
 pub mod config;
 pub mod pool;
 
-use std::path::Path;
-use std::sync::Arc;
+use anyhow::Result;
 
-use anyhow::{Context, Result};
-
-use crate::builder::{
-    build_accelerator_with_moves, pnr_check, BuildOutput, DseCache, MoveSet, PnrOutcome,
-    SweepGrid,
-};
-use crate::dnn::{parser, zoo, Model};
-use crate::rtlgen;
-use crate::util::json::{obj, Json};
+use crate::builder::BuildOutput;
+use crate::util::json::Json;
 
 pub use config::{MoveSetChoice, RunConfig};
 pub use pool::Pool;
@@ -32,108 +26,13 @@ pub struct RunSummary {
     pub result_json: Json,
 }
 
-/// Resolve the workload of a run: a framework-export JSON file when
-/// `model_json` is set (the paper's "DNN parser" entry path — workloads
-/// outside the zoo), otherwise a zoo model by name.
-fn resolve_model(cfg: &RunConfig) -> Result<Model> {
-    match &cfg.model_json {
-        Some(path) => parser::load_file(Path::new(path))
-            .with_context(|| format!("importing model JSON '{path}'")),
-        None => zoo::by_name(&cfg.model).with_context(|| {
-            format!("unknown model '{}' (see `autodnnchip list-models`)", cfg.model)
-        }),
-    }
-}
-
-/// Execute a full Chip-Builder run from a configuration. The run shares
-/// one worker pool across both DSE stages and the process-wide
-/// [`DseCache`], so back-to-back runs in one process (experiment loops,
-/// repeated builds) serve stage-1 predictions from warm lookups.
+/// Execute a full Chip-Builder run from a configuration (legacy front
+/// door, kept for downstream callers). Builds a fresh
+/// [`crate::api::Engine`] per call; the process-wide
+/// [`DseCache`](crate::builder::DseCache) still makes back-to-back runs in
+/// one process serve stage-1 predictions from warm lookups.
 pub fn run(cfg: &RunConfig) -> Result<RunSummary> {
-    let model = resolve_model(cfg)?;
-    let pool = Pool::default_size();
-    let grid = SweepGrid::for_backend(&cfg.spec.backend);
-    let moves = Arc::new(match cfg.moves {
-        MoveSetChoice::Legacy => MoveSet::legacy(),
-        MoveSetChoice::Full => MoveSet::full(&model, &cfg.spec),
-    });
-    let build = build_accelerator_with_moves(
-        &model,
-        &cfg.spec,
-        &grid,
-        cfg.n2,
-        cfg.n_opt,
-        &pool,
-        DseCache::global(),
-        &moves,
-    )?;
-
-    let mut designs = Vec::new();
-    for (rank, cand) in build.survivors.iter().enumerate() {
-        let pnr = pnr_check(cand, &cfg.spec);
-        let achieved = match pnr {
-            PnrOutcome::Pass { achieved_freq_mhz } => achieved_freq_mhz,
-            PnrOutcome::Fail { .. } => 0.0,
-        };
-        designs.push(obj(vec![
-            ("rank", rank.into()),
-            ("template", cand.template.name().into()),
-            ("unroll", cand.cfg.unroll.into()),
-            ("act_buf_bits", cand.cfg.act_buf_bits.into()),
-            ("w_buf_bits", cand.cfg.w_buf_bits.into()),
-            ("bus_bits", cand.cfg.bus_bits.into()),
-            ("pipeline", cand.cfg.pipeline.into()),
-            ("latency_ms", cand.fine_latency_ms.into()),
-            ("energy_uj", cand.coarse.energy_uj().into()),
-            ("dsp", cand.coarse.resources.dsp.into()),
-            ("bram18k", cand.coarse.resources.bram18k.into()),
-            ("achieved_freq_mhz", achieved.into()),
-        ]));
-        // Emit RTL for every surviving design.
-        if let Some(dir) = &cfg.rtl_out {
-            let bundle = rtlgen::generate(&model, cand)?;
-            rtlgen::emit(&bundle, &Path::new(dir).join(format!("design_{rank}")))?;
-        }
-    }
-    let result_json = obj(vec![
-        ("model", model.name.as_str().into()),
-        (
-            "moves",
-            match cfg.moves {
-                MoveSetChoice::Legacy => "legacy".into(),
-                MoveSetChoice::Full => "full".into(),
-            },
-        ),
-        ("evaluated", build.evaluated.into()),
-        (
-            "dse_cache",
-            obj(vec![
-                ("hits", build.cache_hits.into()),
-                ("misses", build.cache_misses.into()),
-            ]),
-        ),
-        ("survivors", Json::Arr(designs)),
-        (
-            "stage2_improvement_pct",
-            Json::Arr(
-                build
-                    .stage2_reports
-                    .iter()
-                    .map(|r| {
-                        Json::Num(
-                            (r.initial_latency_ms - r.best.fine_latency_ms) / r.initial_latency_ms
-                                * 100.0,
-                        )
-                    })
-                    .collect(),
-            ),
-        ),
-    ]);
-    if let Some(dir) = &cfg.out_dir {
-        std::fs::create_dir_all(dir)?;
-        std::fs::write(Path::new(dir).join("result.json"), result_json.pretty())?;
-    }
-    Ok(RunSummary { build, result_json })
+    crate::api::Engine::builder().build().run(cfg)
 }
 
 #[cfg(test)]

@@ -32,8 +32,9 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// Best-effort extraction of a panic payload's message.
-fn panic_message(payload: Box<dyn Any + Send>) -> String {
+/// Best-effort extraction of a panic payload's message (shared with the
+/// `api` engine's batch fan-out).
+pub(crate) fn panic_message(payload: Box<dyn Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

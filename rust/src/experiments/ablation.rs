@@ -15,17 +15,13 @@
 //!    per-layer tiling) per zoo model, from the expert starting design —
 //!    which workloads the new moves actually improve, and by which move.
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::Engine;
 use crate::builder::moves::is_extension_action;
-use crate::builder::{
-    stage1_with, stage2, stage2_with_moves, Backend, Candidate, DseCache, MoveSet, Spec,
-    SweepGrid,
-};
-use crate::coordinator::Pool;
+use crate::builder::{stage2, stage2_with_moves, Backend, Candidate, MoveSet, Spec, SweepGrid};
 use crate::dnn::zoo;
 use crate::predictor::{predict_coarse, simulate};
 use crate::templates::{HwConfig, PeStyle, TemplateId};
@@ -120,18 +116,18 @@ pub fn run() -> Result<ExpReport> {
     json_parts.push(("buffer_sizing", Json::Arr(rows)));
 
     // --- 4. DSE cache cold vs warm --------------------------------------
-    // An isolated cache (not the process-global one) so the cold leg is
-    // genuinely cold no matter what ran earlier in this process.
+    // An isolated-cache Engine (not the process-global cache) so the cold
+    // leg is genuinely cold no matter what ran earlier in this process;
+    // the engine owns the pool/cache pair the two sweeps share.
     let m = zoo::skynet_tiny();
     let spec = Spec::ultra96_object_detection();
     let grid = SweepGrid::for_backend(&spec.backend);
-    let pool = Pool::default_size();
-    let cache = Arc::new(DseCache::new());
+    let engine = Engine::builder().isolated_cache().build();
     let t0 = Instant::now();
-    let cold = stage1_with(&m, &spec, &grid, 3, &pool, &cache)?;
+    let cold = engine.sweep_with(&m, &spec, &grid, 3)?;
     let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t1 = Instant::now();
-    let warm = stage1_with(&m, &spec, &grid, 3, &pool, &cache)?;
+    let warm = engine.sweep_with(&m, &spec, &grid, 3)?;
     let warm_ms = t1.elapsed().as_secs_f64() * 1e3;
     let mut t = Table::new(
         "Ablation 4 — DSE cache, stage-1 sweep (skynet_tiny, Ultra96 grid)",

@@ -5,8 +5,9 @@
 
 use anyhow::Result;
 
-use crate::builder::{build_accelerator_with, DseCache, Spec, SweepGrid};
-use crate::coordinator::Pool;
+use crate::api::Engine;
+use crate::builder::{Spec, SweepGrid};
+use crate::coordinator::MoveSetChoice;
 use crate::devices::edge::MobileCpu;
 use crate::devices::Device;
 use crate::dnn::zoo;
@@ -29,11 +30,12 @@ pub fn run(seed: u64) -> Result<ExpReport> {
     let cpu = MobileCpu::default();
     let mut rng = Rng::new(seed);
 
-    // One pool and the process-wide DSE cache across all 10 builds: the
-    // first run of the loop populates the memo table, repeated runs (and
-    // any other sweep in this process) serve stage 1 from warm lookups.
-    let pool = Pool::default_size();
-    let cache = DseCache::global();
+    // One long-lived Engine across all 10 builds: it owns the worker pool
+    // and (by default) the process-wide DSE cache, so the first run of the
+    // loop populates the memo table and repeated runs (and any other sweep
+    // in this process) serve stage 1 from warm lookups — no hand-rolled
+    // pool/cache wiring.
+    let engine = Engine::builder().build();
     let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
 
     let mut t = Table::new(
@@ -52,7 +54,7 @@ pub fn run(seed: u64) -> Result<ExpReport> {
     let mut ratios = Vec::new();
     let mut eff_diffs = Vec::new();
     for m in zoo::skynet_variants() {
-        let out = build_accelerator_with(&m, &spec, &grid, 3, 1, &pool, cache)?;
+        let out = engine.build_with(&m, &spec, &grid, 3, 1, MoveSetChoice::Full)?;
         cache_hits += out.cache_hits;
         cache_misses += out.cache_misses;
         let Some(best) = out.survivors.first() else {

@@ -19,6 +19,11 @@
 //!    mode (paper Algorithm 2); survivors go through a PnR feasibility model
 //!    and RTL generation ([`rtlgen`]).
 //!
+//! The [`api`] module is the service facade over all three: an
+//! [`api::Engine`] session owns the worker pool, the DSE cache and the
+//! stage-2 move registries, serves typed predict/build/sweep requests
+//! (single or batched), and backs the `autodnnchip serve` JSONL mode.
+//!
 //! Supporting substrates: the DNN intermediate representation and model zoo
 //! ([`dnn`]), the IP cost-model library ([`ip`]), virtual measured devices
 //! ([`devices`]), a functional accelerator simulator ([`funcsim`]), the
@@ -26,6 +31,7 @@
 //! ([`runtime`]), and the experiment harness that regenerates every table
 //! and figure of the paper's evaluation ([`experiments`]).
 
+pub mod api;
 pub mod builder;
 pub mod coordinator;
 pub mod devices;

@@ -7,20 +7,24 @@
 //!                      [--moves legacy|full]
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
+//! autodnnchip serve    --requests file.jsonl [--out DIR] [--workers N]
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
 //!                       fig11|fig12|fig13|fig14|fig15|all> [--seed N]
 //! autodnnchip validate [--artifacts DIR]
 //! ```
+//!
+//! `predict` and `build` route through the `api::Engine` facade — the CLI
+//! is one consumer of the same typed request/response surface the JSONL
+//! serving mode (`serve`) exposes.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
+use autodnnchip::api::{self, Engine, PredictRequest, Request, Response};
 use autodnnchip::builder::Spec;
-use autodnnchip::coordinator::{self, MoveSetChoice, RunConfig};
+use autodnnchip::coordinator::{MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
-use autodnnchip::predictor::{predict_coarse, simulate};
-use autodnnchip::templates::{HwConfig, TemplateId};
 use autodnnchip::util::cli::Args;
 use autodnnchip::util::table::{f, Table};
 use autodnnchip::{experiments, runtime};
@@ -39,6 +43,7 @@ fn main() -> ExitCode {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("list-models") => {
+            args.warn_unknown_flags(&[]);
             let mut t = Table::new("model zoo", &["name", "layers", "params (M)", "MACs (M)"]);
             for name in zoo::all_names() {
                 let m = zoo::by_name(&name).unwrap();
@@ -55,12 +60,13 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("predict") => cmd_predict(args),
         Some("build") => cmd_build(args),
+        Some("serve") => cmd_serve(args),
         Some("exp") => cmd_exp(args),
         Some("validate") => cmd_validate(args),
         Some(other) => bail!("unknown command '{other}'"),
         None => {
             eprintln!(
-                "usage: autodnnchip <list-models|predict|build|exp|validate> [flags]\n\
+                "usage: autodnnchip <list-models|predict|build|serve|exp|validate> [flags]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())
@@ -68,37 +74,62 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// A numeric flag where an unparsable value warns and falls back to the
+/// default, instead of silently no-opping.
+fn numeric_flag<T: std::str::FromStr>(args: &Args, name: &str) -> Option<T> {
+    args.flag(name).and_then(|s| match s.parse() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            eprintln!("warning: ignoring unparsable --{name} '{s}' (using the default)");
+            None
+        }
+    })
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
-    let model_name = args.flag_or("model", "SK");
-    let m = zoo::by_name(&model_name).ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
-    let tmpl = TemplateId::by_name(&args.flag_or("template", "hetero_dw_pw"))
-        .ok_or_else(|| anyhow!("unknown template"))?;
-    let tech_name = args.flag_or("tech", "ultra96");
-    let tech = autodnnchip::ip::tech::by_name(&tech_name).ok_or_else(|| anyhow!("unknown tech"))?;
-    let mut cfg = if tech.fpga.is_some() { HwConfig::ultra96_default() } else { HwConfig::asic_default() };
-    cfg.tech = tech;
-    cfg.unroll = args.flag_usize("unroll", cfg.unroll);
-    cfg.pipeline = args.flag_u64("pipeline", cfg.pipeline);
-    let g = tmpl.build(&m, &cfg)?;
-    let coarse = predict_coarse(&g, &cfg.tech)?;
-    let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+    args.warn_unknown_flags(&["model", "template", "tech", "unroll", "pipeline"]);
+    let req = PredictRequest {
+        model: args.flag_or("model", "SK"),
+        template: args.flag_or("template", "hetero_dw_pw"),
+        tech: args.flag_or("tech", "ultra96"),
+        unroll: numeric_flag(args, "unroll"),
+        pipeline: numeric_flag(args, "pipeline"),
+    };
+    // Predict runs on the calling thread, so a single-worker engine avoids
+    // spawning a machine-sized pool for the most common CLI command.
+    let engine = Engine::builder().workers(1).build();
+    let Response::Predict(p) = engine.submit(Request::Predict(req))? else {
+        bail!("engine returned a non-predict response");
+    };
     let mut t = Table::new(
-        &format!("Chip Predictor — {model_name} on {}", tmpl.name()),
+        &format!("Chip Predictor — {} on {}", p.model, p.template),
         &["metric", "coarse", "fine"],
     );
-    t.row(vec!["latency (ms)".into(), f(coarse.latency_ms, 3), f(fine.latency_ms, 3)]);
-    t.row(vec!["energy (µJ)".into(), f(coarse.energy_uj(), 1), f(fine.energy_pj / 1e6, 1)]);
-    t.row(vec!["fps".into(), f(coarse.fps(), 1), f(1000.0 / fine.latency_ms, 1)]);
-    t.row(vec!["DSP".into(), coarse.resources.dsp.to_string(), "-".into()]);
-    t.row(vec!["BRAM18K".into(), coarse.resources.bram18k.to_string(), "-".into()]);
-    t.row(vec!["SRAM (KB)".into(), f(coarse.resources.sram_kb, 1), "-".into()]);
-    t.row(vec!["multipliers".into(), coarse.resources.multipliers.to_string(), "-".into()]);
+    t.row(vec!["latency (ms)".into(), f(p.coarse_latency_ms, 3), f(p.fine_latency_ms, 3)]);
+    t.row(vec!["energy (µJ)".into(), f(p.coarse_energy_uj, 1), f(p.fine_energy_pj / 1e6, 1)]);
+    t.row(vec!["fps".into(), f(p.coarse_fps, 1), f(1000.0 / p.fine_latency_ms, 1)]);
+    t.row(vec!["DSP".into(), p.dsp.to_string(), "-".into()]);
+    t.row(vec!["BRAM18K".into(), p.bram18k.to_string(), "-".into()]);
+    t.row(vec!["SRAM (KB)".into(), f(p.sram_kb, 1), "-".into()]);
+    t.row(vec!["multipliers".into(), p.multipliers.to_string(), "-".into()]);
     print!("{}", t.render());
     Ok(())
 }
 
 fn cmd_build(args: &Args) -> Result<()> {
+    args.warn_unknown_flags(&[
+        "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
+    ]);
     let cfg = if let Some(path) = args.flag("config") {
+        // The config file carries the whole run; any other flag on the
+        // line would be silently out-voted, so say so.
+        let ignored = args.unknown_flags(&["config"]);
+        if !ignored.is_empty() {
+            eprintln!(
+                "warning: --config takes precedence; ignoring --{}",
+                ignored.join(" --")
+            );
+        }
         RunConfig::from_file(path)?
     } else {
         let backend = args.flag_or("backend", "fpga");
@@ -118,14 +149,14 @@ fn cmd_build(args: &Args) -> Result<()> {
             // instead of naming a zoo entry.
             model_json: args.flag("model-json").map(|s| s.to_string()),
             spec,
-            n2: args.flag_usize("n2", 4),
-            n_opt: args.flag_usize("n-opt", 2),
+            n2: numeric_flag(args, "n2").unwrap_or(4),
+            n_opt: numeric_flag(args, "n-opt").unwrap_or(2),
             moves,
             out_dir: args.flag("out").map(|s| s.to_string()),
             rtl_out: args.flag("rtl-out").map(|s| s.to_string()),
         }
     };
-    let summary = coordinator::run(&cfg)?;
+    let summary = Engine::builder().build().run(&cfg)?;
     println!("{}", summary.result_json.pretty());
     if summary.build.survivors.is_empty() {
         bail!("no design survived DSE + PnR");
@@ -133,13 +164,49 @@ fn cmd_build(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Batched serving mode: one JSON request per input line, one JSON
+/// response per output line, in order; failing requests become in-place
+/// `{"type":"error",...}` lines instead of aborting the stream.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.warn_unknown_flags(&["requests", "out", "workers"]);
+    let path = args
+        .flag("requests")
+        .ok_or_else(|| anyhow!("usage: serve --requests file.jsonl [--out DIR] [--workers N]"))?;
+    let mut builder = Engine::builder();
+    if let Some(w) = numeric_flag::<usize>(args, "workers") {
+        builder = builder.workers(w);
+    }
+    let engine = builder.build();
+    let outcome = api::serve_path(&engine, Path::new(path))?;
+    for r in &outcome.responses {
+        println!("{}", r.to_json());
+    }
+    if let Some(dir) = args.flag("out") {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating '{dir}'"))?;
+        let out_path = Path::new(dir).join("responses.jsonl");
+        api::write_jsonl(&outcome.responses, &out_path)?;
+        eprintln!("wrote {}", out_path.display());
+    }
+    eprintln!(
+        "served {} request(s): {} ok, {} failed",
+        outcome.responses.len(),
+        outcome.ok,
+        outcome.failed
+    );
+    if outcome.failed > 0 && outcome.ok == 0 {
+        bail!("every request failed");
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<()> {
+    args.warn_unknown_flags(&["seed", "results"]);
     let id = args
         .subcommand
         .get(1)
         .map(|s| s.as_str())
         .ok_or_else(|| anyhow!("usage: exp <id|all>"))?;
-    let seed = args.flag_usize("seed", 0xA070) as u64;
+    let seed = numeric_flag::<u64>(args, "seed").unwrap_or(0xA070);
     let results = PathBuf::from(args.flag_or("results", "results"));
     let ids: Vec<&str> = if id == "all" { experiments::all_ids() } else { vec![id] };
     for id in ids {
@@ -153,6 +220,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
+    args.warn_unknown_flags(&["artifacts"]);
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());

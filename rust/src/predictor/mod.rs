@@ -10,6 +10,11 @@
 //!   of every IP's state machine honouring inter-IP data dependencies,
 //!   yielding exact pipelined latency, per-IP busy/idle cycles and the
 //!   bottleneck IP. Used by stage-2 IP-pipeline co-optimization.
+//!
+//! [`predict_coarse`] and [`simulate`] stay direct library entry points;
+//! service-shaped callers reach both through the [`crate::api::Engine`]
+//! facade (`Predict` / `SimulateFine` requests), which returns the same
+//! numbers bit for bit.
 
 pub mod coarse;
 pub mod fine;

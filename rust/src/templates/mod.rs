@@ -112,6 +112,22 @@ impl HwConfig {
         }
     }
 
+    /// The expert starting configuration for a technology node: the
+    /// Ultra96 default for FPGA technologies, the 65 nm ASIC default
+    /// otherwise, with `tech` (and its default clock) installed. This is
+    /// the one place the FPGA-vs-ASIC default selection lives — the CLI
+    /// and the `api` facade both resolve through it.
+    pub fn default_for_tech(tech: &Technology) -> Self {
+        let mut cfg = if tech.fpga.is_some() {
+            HwConfig::ultra96_default()
+        } else {
+            HwConfig::asic_default()
+        };
+        cfg.freq_mhz = tech.default_freq_mhz;
+        cfg.tech = tech.clone();
+        cfg
+    }
+
     /// The tiling floor configured for DNN layer `li`, if any.
     pub fn tile_override(&self, li: usize) -> Option<u64> {
         self.tile_overrides.get(li).copied().flatten()
@@ -324,6 +340,28 @@ mod tests {
         assert_ne!(a.fingerprint(), c.fingerprint());
         assert_eq!(a.tile_override(2), Some(8));
         assert_eq!(a.tile_override(5), None);
+    }
+
+    #[test]
+    fn default_for_tech_selects_backend_family() {
+        let ultra = crate::ip::tech::fpga_ultra96();
+        let f = HwConfig::default_for_tech(&ultra);
+        assert!(f.tech.fpga.is_some());
+        assert_eq!(f.tech.name, ultra.name);
+        assert_eq!(f.unroll, HwConfig::ultra96_default().unroll);
+        assert_eq!(f.freq_mhz, ultra.default_freq_mhz);
+        // The ultra96 tech default is byte-identical to the historical
+        // default constructor.
+        assert_eq!(f.fingerprint(), HwConfig::ultra96_default().fingerprint());
+
+        let asic28 = crate::ip::tech::asic_28nm();
+        let a = HwConfig::default_for_tech(&asic28);
+        assert!(a.tech.fpga.is_none() && a.tech.asic.is_some());
+        assert_eq!(a.tech.name, asic28.name);
+        assert_eq!(a.unroll, HwConfig::asic_default().unroll);
+        // The clock follows the requested technology, not the default
+        // config's node.
+        assert_eq!(a.freq_mhz, asic28.default_freq_mhz);
     }
 
     #[test]

@@ -68,6 +68,31 @@ impl Args {
     pub fn flag_bool(&self, name: &str) -> bool {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Flags present on the command line but absent from `known` — typos
+    /// like `--mvoes full` would otherwise silently no-op. Returned in
+    /// deterministic (sorted) order.
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags.keys().filter(|k| !known.contains(&k.as_str())).cloned().collect()
+    }
+
+    /// Print a stderr warning for every flag not in `known` (the CLI calls
+    /// this once the subcommand is resolved) and return the unknown names
+    /// so callers and tests can assert on them.
+    pub fn warn_unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        let unknown = self.unknown_flags(known);
+        for name in &unknown {
+            if known.is_empty() {
+                eprintln!("warning: unrecognized flag --{name} (this command takes no flags)");
+            } else {
+                eprintln!(
+                    "warning: unrecognized flag --{name} (known: {})",
+                    known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        unknown
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +125,22 @@ mod tests {
         assert_eq!(a.flag_f64("x", 2.5), 2.5);
         assert!(!a.flag_bool("missing"));
         assert_eq!(a.flag_u64("missing", 7), 7);
+    }
+
+    #[test]
+    fn unknown_flags_catch_typos() {
+        // `--mvoes full` is a typo for `--moves full`: it must be surfaced,
+        // not silently no-opped.
+        let a = p("build --mvoes full --model SK");
+        assert_eq!(a.unknown_flags(&["model", "moves", "backend"]), vec!["mvoes".to_string()]);
+        assert_eq!(a.warn_unknown_flags(&["model", "moves", "backend"]), vec!["mvoes".to_string()]);
+        // Every flag known → nothing reported.
+        assert!(a.unknown_flags(&["model", "mvoes"]).is_empty());
+        // `--flag=value` style and valueless bools are covered too.
+        let b = p("exp fig13 --sede=42 --verbose");
+        let mut unknown = b.unknown_flags(&["seed", "results"]);
+        unknown.sort();
+        assert_eq!(unknown, vec!["sede".to_string(), "verbose".to_string()]);
     }
 
     #[test]

@@ -63,6 +63,19 @@ impl Json {
         })
     }
 
+    /// Non-negative integer as `u64` — for domain knobs that are `u64`
+    /// (e.g. `HwConfig::pipeline`), so no lossy round-trip through `usize`
+    /// happens on 32-bit hosts.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 {
+                Some(n as u64)
+            } else {
+                None
+            }
+        })
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -457,5 +470,14 @@ mod tests {
     #[test]
     fn get_on_non_object() {
         assert!(Json::Num(1.0).get("x").is_none());
+    }
+
+    #[test]
+    fn as_u64_accepts_nonnegative_integers_only() {
+        assert_eq!(Json::Num(8.0).as_u64(), Some(8));
+        assert_eq!(Json::Num(5e9).as_u64(), Some(5_000_000_000));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Str("8".into()).as_u64(), None);
     }
 }

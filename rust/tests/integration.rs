@@ -1,6 +1,7 @@
 //! Cross-module integration tests: full Chip-Builder flows, RTL/funcsim
 //! consistency, experiment-harness sanity, CLI-level orchestration.
 
+use autodnnchip::api::{self, Engine};
 use autodnnchip::builder::{build_accelerator, Spec};
 use autodnnchip::coordinator::{self, MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo};
@@ -151,6 +152,43 @@ fn examples_model_json_builds_via_coordinator() {
     assert!(!s.build.survivors.is_empty(), "tinyconv must fit Ultra96");
     assert_eq!(s.result_json.get("model").unwrap().as_str().unwrap(), "tinyconv");
     assert_eq!(s.result_json.get("moves").unwrap().as_str().unwrap(), "full");
+}
+
+#[test]
+fn serve_smoke_jsonl_through_engine() {
+    // The shipped examples/requests/smoke.jsonl must serve cleanly through
+    // the engine's JSONL loop (the `autodnnchip serve` path): every line
+    // answered, in order, with a parseable tagged response.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/requests/smoke.jsonl");
+    let engine = Engine::builder().build();
+    let outcome = api::serve_path(&engine, std::path::Path::new(path)).expect("serve smoke set");
+    assert_eq!(
+        outcome.failed,
+        0,
+        "smoke request failed: {:?}",
+        outcome
+            .responses
+            .iter()
+            .find(|r| r.is_error())
+            .map(|r| r.to_json().to_string())
+    );
+    assert_eq!(outcome.ok, 4);
+    let types: Vec<String> = outcome
+        .responses
+        .iter()
+        .map(|r| r.to_json().get("type").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(types, ["predict", "simulate_fine", "sweep", "build"]);
+    // Every response is a single parseable JSONL line with content.
+    for r in &outcome.responses {
+        let line = r.to_json().to_string();
+        assert!(!line.contains('\n'));
+        Json::parse(&line).expect("response line parses back as JSON");
+    }
+    // The build line carries survivors and cache accounting.
+    let build = outcome.responses.last().unwrap().to_json();
+    assert!(!build.get("survivors").unwrap().as_arr().unwrap().is_empty());
+    assert!(build.get("dse_cache").is_some());
 }
 
 #[test]

@@ -5,11 +5,13 @@
 
 use std::sync::Arc;
 
+use autodnnchip::api::{BuildRequest, Engine, PredictRequest, Request, Response, SweepRequest};
 use autodnnchip::builder::{
-    build_accelerator, build_accelerator_with, pnr_check, stage1, stage1_with, stage2,
-    stage2_with_moves, Backend, Candidate, DseCache, MoveSet, PnrOutcome, Spec, SweepGrid,
+    build_accelerator, build_accelerator_with, build_accelerator_with_moves, pnr_check, stage1,
+    stage1_with, stage2, stage2_with_moves, Backend, Candidate, DseCache, MoveSet, PnrOutcome,
+    Spec, SweepGrid,
 };
-use autodnnchip::coordinator::Pool;
+use autodnnchip::coordinator::{MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
@@ -613,6 +615,134 @@ fn full_move_set_never_loses_on_any_zoo_model_or_backend() {
         }
     }
     assert!(improved >= 1, "no zoo workload was improved by the extension moves");
+}
+
+fn run_config(model: &str, spec: Spec, n2: usize, n_opt: usize, moves: MoveSetChoice) -> RunConfig {
+    RunConfig {
+        model: model.to_string(),
+        model_json: None,
+        spec,
+        n2,
+        n_opt,
+        moves,
+        out_dir: None,
+        rtl_out: None,
+    }
+}
+
+#[test]
+fn prop_engine_build_byte_identical_to_build_accelerator_with_moves() {
+    // The `api::Engine` facade adds routing, never computation: a Build
+    // request served through `Engine::submit` must return a `BuildOutput`
+    // that is byte-identical (Debug representation — every f64 bit
+    // pattern, every counter) to calling the legacy
+    // `build_accelerator_with_moves` entry point directly with the same
+    // grid and move registry, a fresh pool and a fresh cache — for any
+    // zoo model, either backend, either move set and any worker count.
+    check_cfg("engine build identity", Config { cases: 3, seed: 0xE9619E }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models).clone();
+        let (spec, backend) = if rng.bool(0.5) {
+            (Spec::ultra96_object_detection(), "fpga")
+        } else {
+            (Spec::asic_vision(), "asic")
+        };
+        let choice = if rng.bool(0.5) { MoveSetChoice::Legacy } else { MoveSetChoice::Full };
+        let n2 = rng.range(1, 4);
+
+        let engine = Engine::builder().workers(rng.range(1, 4)).isolated_cache().build();
+        let resp = engine
+            .submit(Request::Build(BuildRequest(run_config(&m.name, spec.clone(), n2, 2, choice))))
+            .map_err(|e| e.to_string())?;
+        let Response::Build(via_engine) = resp else {
+            return Err("engine returned a non-build response".to_string());
+        };
+
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(rng.range(1, 4));
+        let cache = Arc::new(DseCache::new());
+        let moves = Arc::new(match choice {
+            MoveSetChoice::Legacy => MoveSet::legacy(),
+            MoveSetChoice::Full => MoveSet::full(&m, &spec),
+        });
+        let direct = build_accelerator_with_moves(&m, &spec, &grid, n2, 2, &pool, &cache, &moves)
+            .map_err(|e| e.to_string())?;
+
+        prop_assert!(
+            format!("{:?}", via_engine.output) == format!("{:?}", direct),
+            "engine-routed build diverged from build_accelerator_with_moves \
+             for {} × {backend} ({choice:?}, n2={n2})",
+            m.name
+        );
+        prop_assert!(via_engine.model == m.name, "response mislabeled: {}", via_engine.model);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_submit_batch_order_preserving_and_equal_to_serial_submits() {
+    // `submit_batch` is a pure throughput optimization: responses come
+    // back in request order, and each one serializes identically to a
+    // serial `submit` of the same request on an identically configured
+    // (but separately cached) engine — including the in-place error
+    // responses of failing requests. The requests span zoo models and
+    // both backends with disjoint cache footprints, so the counters in
+    // the build/sweep responses must agree too.
+    check_cfg("batch equals serial", Config { cases: 2, seed: 0xBA7C4E }, |rng, _| {
+        let fpga = Spec::ultra96_object_detection();
+        let asic = Spec::asic_vision();
+        let reqs = vec![
+            Request::Predict(PredictRequest::for_model("SK8")),
+            Request::Sweep(SweepRequest(run_config(
+                "sdn_ocr",
+                fpga.clone(),
+                2,
+                1,
+                MoveSetChoice::Full,
+            ))),
+            Request::Build(BuildRequest(run_config(
+                "sdn_gaze",
+                fpga.clone(),
+                2,
+                1,
+                MoveSetChoice::Legacy,
+            ))),
+            Request::Build(BuildRequest(run_config("sdn_smile", asic, 1, 1, MoveSetChoice::Full))),
+            Request::Predict(PredictRequest::for_model("no_such_model")),
+        ];
+        let batch_engine = Engine::builder().workers(rng.range(1, 5)).isolated_cache().build();
+        let serial_engine = Engine::builder().workers(rng.range(1, 5)).isolated_cache().build();
+
+        let batch = batch_engine.submit_batch(reqs.clone());
+        prop_assert!(
+            batch.len() == reqs.len(),
+            "{} responses for {} requests",
+            batch.len(),
+            reqs.len()
+        );
+        let serial: Vec<Response> = reqs
+            .iter()
+            .map(|r| {
+                serial_engine
+                    .submit(r.clone())
+                    .unwrap_or_else(|e| Response::error(format!("{e:#}")))
+            })
+            .collect();
+        for (i, (b, s)) in batch.iter().zip(&serial).enumerate() {
+            prop_assert!(
+                b.to_json().to_string() == s.to_json().to_string(),
+                "response {i} diverged between batch and serial:\n  batch: {}\n  serial: {}",
+                b.to_json(),
+                s.to_json()
+            );
+        }
+        prop_assert!(
+            batch[4].is_error(),
+            "the failing request must map to an in-place error response"
+        );
+        prop_assert!(!batch[1].is_error() && !batch[2].is_error() && !batch[3].is_error());
+        Ok(())
+    });
 }
 
 #[test]
