@@ -1,0 +1,92 @@
+//! Observability overhead benchmarks: the same stage-1 sweep with
+//! instrumentation off and on, plus the raw cost of a span call in both
+//! states.
+//!
+//! Emits `BENCH_obs.json` (override with `BENCH_OBS_JSON=path`) and exits
+//! non-zero when the instrumented sweep is more than
+//! `BENCH_OBS_MAX_OVERHEAD_PCT` (default 5.0) percent slower than the
+//! uninstrumented one — the contract is that telemetry is cheap enough to
+//! leave on in serving mode. The CI bench-smoke job runs this with
+//! `BENCH_QUICK=1` and uploads the JSON as an artifact.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use autodnnchip::builder::{stage1_with, DseCache, Spec, SweepGrid};
+use autodnnchip::coordinator::Pool;
+use autodnnchip::dnn::zoo;
+use autodnnchip::obs;
+use autodnnchip::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("obs");
+
+    let m = zoo::skynet_tiny();
+    let spec = Spec::ultra96_object_detection();
+    let grid = SweepGrid::for_backend(&spec.backend);
+    let pool = Pool::default_size();
+
+    // Cold stage-1 sweep (fresh cache every iteration so each run pays the
+    // full build-and-predict cost the instrumentation wraps), first with
+    // the default disabled instrumentation, then enabled.
+    obs::set_enabled(false);
+    let off_ns = b
+        .run("stage1_cold_sweep/obs_off", || {
+            let cache = Arc::new(DseCache::new());
+            stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap().evaluated
+        })
+        .mean_ns;
+
+    obs::set_enabled(true);
+    let on_ns = b
+        .run("stage1_cold_sweep/obs_on", || {
+            let cache = Arc::new(DseCache::new());
+            stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap().evaluated
+        })
+        .mean_ns;
+    let overhead_pct = (on_ns - off_ns) / off_ns.max(1.0) * 100.0;
+
+    // Raw span cost: disabled must be a branch (one relaxed load), enabled
+    // pays the name format + histogram record on drop.
+    obs::set_enabled(false);
+    let span_disabled_ns = b.run("span/disabled", || obs::span("bench.noop").is_active()).mean_ns;
+    obs::set_enabled(true);
+    let span_enabled_ns = b.run("span/enabled", || obs::span("bench.noop").is_active()).mean_ns;
+    obs::set_enabled(false);
+
+    println!(
+        "\n  stage-1 sweep: off {:.2} ms, on {:.2} ms → {overhead_pct:+.2}% overhead",
+        off_ns / 1e6,
+        on_ns / 1e6
+    );
+    println!("  span call: disabled {span_disabled_ns:.1} ns, enabled {span_enabled_ns:.1} ns");
+
+    let path = std::env::var("BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    let derived = [
+        ("stage1_off_ns", off_ns),
+        ("stage1_on_ns", on_ns),
+        ("overhead_pct", overhead_pct),
+        ("span_disabled_ns", span_disabled_ns),
+        ("span_enabled_ns", span_enabled_ns),
+    ];
+    b.write_json(Path::new(&path), "obs", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+
+    // Gate: instrumentation must stay in the noise of a real sweep. The
+    // per-point cost is a handful of atomic ops and one short format!
+    // against a graph build plus a coarse prediction, so a miss here means
+    // a hot path grew an unconditional allocation, not a slow machine.
+    let max_overhead_pct: f64 = std::env::var("BENCH_OBS_MAX_OVERHEAD_PCT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5.0);
+    if overhead_pct > max_overhead_pct {
+        eprintln!(
+            "FAIL: instrumented stage-1 sweep is {overhead_pct:.2}% slower than the \
+             uninstrumented one (limit {max_overhead_pct:.1}%; off {off_ns:.0} ns vs on \
+             {on_ns:.0} ns)"
+        );
+        std::process::exit(1);
+    }
+}

@@ -13,6 +13,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -24,6 +25,7 @@ use crate::coordinator::pool::panic_message;
 use crate::coordinator::{MoveSetChoice, Pool, RunConfig, RunSummary};
 use crate::dnn::{zoo, Model};
 use crate::ip::tech;
+use crate::obs;
 use crate::predictor::{predict_coarse, simulate};
 use crate::rtlgen;
 use crate::templates::{HwConfig, TemplateId};
@@ -31,7 +33,8 @@ use crate::util::json::{obj, Json};
 
 use super::request::{PredictRequest, Request, SweepRequest};
 use super::response::{
-    BuildResponse, PredictResponse, Response, SimulateFineResponse, SweepResponse, SweepSelection,
+    BuildResponse, PredictResponse, Response, SimulateFineResponse, StatsResponse, SweepResponse,
+    SweepSelection,
 };
 
 enum CacheChoice {
@@ -149,6 +152,11 @@ impl Engine {
     /// batch alone owns the in-flight bound (no `batch_width^depth` thread
     /// explosion from nested batches).
     fn submit_at(&self, req: Request, fan_out: bool) -> Result<Response> {
+        let kind = req.kind();
+        if obs::enabled() {
+            obs::metrics::counter(&format!("engine.requests.{kind}"), 1);
+        }
+        let _span = obs::span_with(|| format!("engine.request.{kind}"));
         match req {
             Request::Predict(p) => self.predict(&p).map(Response::Predict),
             Request::SimulateFine(s) => self.simulate_fine(&s.0).map(Response::SimulateFine),
@@ -168,6 +176,18 @@ impl Engine {
             }
             Request::Sweep(s) => self.sweep(&s).map(Response::Sweep),
             Request::Batch(reqs) => Ok(Response::Batch(self.submit_batch_at(reqs, fan_out))),
+            Request::Stats => Ok(Response::Stats(self.stats())),
+        }
+    }
+
+    /// Snapshot this engine's telemetry: cache counters (always live) plus
+    /// the process-wide metric registry (empty until
+    /// [`crate::obs::set_enabled`] switches instrumentation on).
+    pub fn stats(&self) -> StatsResponse {
+        StatsResponse {
+            enabled: obs::enabled(),
+            cache: self.cache.stats(),
+            metrics: obs::metrics::global_snapshot(),
         }
     }
 
@@ -180,47 +200,106 @@ impl Engine {
         self.submit_batch_at(reqs, true)
     }
 
+    /// [`Engine::submit_batch`], also reporting each request's execute
+    /// wall-time (time on its slot thread, excluding the queue wait before
+    /// pickup). The serving loop uses this for `serve --verbose` per-line
+    /// latencies; a slot that was never served reports `Duration::ZERO`.
+    pub fn submit_batch_timed(&self, reqs: Vec<Request>) -> Vec<(Response, Duration)> {
+        self.fan_out_batch(reqs)
+    }
+
     fn submit_batch_at(&self, reqs: Vec<Request>, fan_out: bool) -> Vec<Response> {
         if !fan_out {
             // Nested batch: serve in order on the current slot thread. The
             // inner builds still parallelize over the shared worker pool.
+            // Per-request execute time is still captured per kind by
+            // `submit_at`'s span; queue wait is deliberately NOT recorded
+            // here — a nested request never waited in the top-level queue,
+            // and re-counting the parent slot's wait would double-book it.
             return reqs.into_iter().map(|req| self.serve_one(req, false)).collect();
         }
-        // `batch_width` slot threads pull the next pending request as soon
-        // as they free up — bounded in-flight requests without a barrier,
-        // so one slow build never stalls the rest of the batch. Each
-        // request's heavy inner stages (stage-1 sweeps, stage-2
-        // refinements) interleave on the shared worker pool.
+        self.fan_out_batch(reqs).into_iter().map(|(resp, _)| resp).collect()
+    }
+
+    /// The top-level batch fan-out: `batch_width` slot threads pull the
+    /// next pending request as soon as they free up — bounded in-flight
+    /// requests without a barrier, so one slow build never stalls the rest
+    /// of the batch. Each request's heavy inner stages (stage-1 sweeps,
+    /// stage-2 refinements) interleave on the shared worker pool.
+    ///
+    /// Telemetry (when enabled) splits each request's wall-time into queue
+    /// wait (batch start → slot pickup, `engine.batch.queue_wait_ns`) and
+    /// execute time (`engine.batch.exec_ns`); per-slot busy totals land in
+    /// `engine.batch.slot_busy_ns` for occupancy analysis.
+    fn fan_out_batch(&self, reqs: Vec<Request>) -> Vec<(Response, Duration)> {
         let n = reqs.len();
+        let observing = obs::enabled();
+        if observing {
+            obs::metrics::counter("engine.batch.batches", 1);
+            obs::metrics::gauge("engine.batch.width", self.batch_width as f64);
+        }
         let slots: Vec<Mutex<Option<Request>>> =
             reqs.into_iter().map(|r| Mutex::new(Some(r))).collect();
         let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Response)>();
+        let (tx, rx) = mpsc::channel::<(usize, Response, Duration)>();
+        let batch_start = Instant::now();
         thread::scope(|s| {
             for _ in 0..self.batch_width.min(n).max(1) {
                 let tx = tx.clone();
                 let (slots, next) = (&slots, &next);
-                s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                s.spawn(move || {
+                    let mut busy = Duration::ZERO;
+                    let mut served_any = false;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let req = slots[i]
+                            .lock()
+                            .unwrap_or_else(|poisoned| poisoned.into_inner())
+                            .take()
+                            .expect("each request slot is taken exactly once");
+                        if observing {
+                            obs::metrics::record(
+                                "engine.batch.queue_wait_ns",
+                                batch_start.elapsed().as_nanos() as u64,
+                            );
+                        }
+                        let t0 = Instant::now();
+                        let resp = self.serve_one(req, false);
+                        let took = t0.elapsed();
+                        if observing {
+                            obs::metrics::record(
+                                "engine.batch.exec_ns",
+                                took.as_nanos() as u64,
+                            );
+                        }
+                        busy += took;
+                        served_any = true;
+                        let _ = tx.send((i, resp, took));
                     }
-                    let req = slots[i]
-                        .lock()
-                        .unwrap_or_else(|poisoned| poisoned.into_inner())
-                        .take()
-                        .expect("each request slot is taken exactly once");
-                    let _ = tx.send((i, self.serve_one(req, false)));
+                    if observing && served_any {
+                        obs::metrics::counter("engine.batch.slots_used", 1);
+                        obs::metrics::record(
+                            "engine.batch.slot_busy_ns",
+                            busy.as_nanos() as u64,
+                        );
+                    }
                 });
             }
         });
         drop(tx);
-        let mut out: Vec<Option<Response>> = (0..n).map(|_| None).collect();
-        for (i, resp) in rx {
-            out[i] = Some(resp);
+        let mut out: Vec<Option<(Response, Duration)>> = (0..n).map(|_| None).collect();
+        for (i, resp, took) in rx {
+            out[i] = Some((resp, took));
         }
         out.into_iter()
-            .map(|r| r.unwrap_or_else(|| Response::error("request slot was never served")))
+            .map(|r| {
+                r.unwrap_or_else(|| {
+                    (Response::error("request slot was never served"), Duration::ZERO)
+                })
+            })
             .collect()
     }
 
@@ -240,13 +319,17 @@ impl Engine {
     /// dump) from a configuration, over this engine's pool and cache.
     /// `coordinator::run` is a thin wrapper around this.
     pub fn run(&self, cfg: &RunConfig) -> Result<RunSummary> {
+        let _run_span = obs::span("engine.run");
         let model = cfg.resolve_model()?;
         let grid = SweepGrid::for_backend(&cfg.spec.backend);
         let build = self.build_with(&model, &cfg.spec, &grid, cfg.n2, cfg.n_opt, cfg.moves)?;
 
         let mut designs = Vec::new();
         for (rank, cand) in build.survivors.iter().enumerate() {
-            let pnr = pnr_check(cand, &cfg.spec);
+            let pnr = {
+                let _pnr_span = obs::span("pnr.check");
+                pnr_check(cand, &cfg.spec)
+            };
             let achieved = match pnr {
                 PnrOutcome::Pass { achieved_freq_mhz } => achieved_freq_mhz,
                 PnrOutcome::Fail { .. } => 0.0,
@@ -267,6 +350,7 @@ impl Engine {
             ]));
             // Emit RTL for every surviving design.
             if let Some(dir) = &cfg.rtl_out {
+                let _rtl_span = obs::span("rtl.emit");
                 let bundle = rtlgen::generate(&model, cand)?;
                 rtlgen::emit(&bundle, &Path::new(dir).join(format!("design_{rank}")))?;
             }
@@ -308,7 +392,20 @@ impl Engine {
         ]);
         if let Some(dir) = &cfg.out_dir {
             std::fs::create_dir_all(dir)?;
-            std::fs::write(Path::new(dir).join("result.json"), result_json.pretty())?;
+            // When instrumentation is on, the on-disk result.json also
+            // carries a registry snapshot. Only the file grows the extra
+            // section: the in-memory document (and therefore every serve
+            // response line) stays byte-identical to the uninstrumented
+            // run.
+            let file_json = match (&result_json, obs::enabled()) {
+                (Json::Obj(m), true) => {
+                    let mut m = m.clone();
+                    m.insert("metrics".to_string(), obs::metrics::global_snapshot().to_json());
+                    Json::Obj(m)
+                }
+                _ => result_json.clone(),
+            };
+            std::fs::write(Path::new(dir).join("result.json"), file_json.pretty())?;
         }
         Ok(RunSummary { build, result_json })
     }

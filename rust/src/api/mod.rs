@@ -30,7 +30,7 @@ pub use request::{
     parse_jsonl, BuildRequest, PredictRequest, Request, SimulateFineRequest, SweepRequest,
 };
 pub use response::{
-    BuildResponse, ErrorResponse, PredictResponse, Response, SimulateFineResponse, SweepResponse,
-    SweepSelection,
+    BuildResponse, ErrorResponse, PredictResponse, Response, SimulateFineResponse, StatsResponse,
+    SweepResponse, SweepSelection,
 };
-pub use serve::{serve_lines, serve_path, write_jsonl, ServeOutcome};
+pub use serve::{serve_lines, serve_path, write_jsonl, LineStat, ServeOutcome};

@@ -10,6 +10,7 @@
 //! {"type":"build","model":"sdn_ocr","backend":"fpga","n2":2,"n_opt":1}
 //! {"type":"sweep","model":"SK8","backend":"fpga","n2":3}
 //! {"type":"batch","requests":[{"type":"predict","model":"SK8"}]}
+//! {"type":"stats"}
 //! ```
 //!
 //! `build` and `sweep` accept every key of the coordinator's config-file
@@ -34,6 +35,10 @@ pub enum Request {
     Sweep(SweepRequest),
     /// A request vector fanned out over the engine's shared worker pool.
     Batch(Vec<Request>),
+    /// Engine/session telemetry snapshot: cache counters plus the full
+    /// observability registry ([`crate::obs`]) — per-request-kind latency
+    /// histograms, stage-1 sweep counters, per-move accept counts.
+    Stats,
 }
 
 /// Chip-Predictor request: one design point, both prediction modes.
@@ -168,6 +173,20 @@ fn point_to_json(p: &PredictRequest, t: &str) -> Json {
 }
 
 impl Request {
+    /// The request's JSON `"type"` tag — the key under which the engine
+    /// buckets per-kind telemetry (`engine.requests.<kind>`,
+    /// `span.engine.request.<kind>_ns`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Request::Predict(_) => "predict",
+            Request::SimulateFine(_) => "simulate_fine",
+            Request::Build(_) => "build",
+            Request::Sweep(_) => "sweep",
+            Request::Batch(_) => "batch",
+            Request::Stats => "stats",
+        }
+    }
+
     /// Serialize to the tagged-object JSON form; [`Request::from_json`]
     /// inverts this exactly (round-trip property-tested per variant).
     pub fn to_json(&self) -> Json {
@@ -180,6 +199,7 @@ impl Request {
                 ("type", "batch".into()),
                 ("requests", Json::Arr(reqs.iter().map(|r| r.to_json()).collect())),
             ]),
+            Request::Stats => obj(vec![("type", "stats".into())]),
         }
     }
 
@@ -205,9 +225,13 @@ impl Request {
                     .ok_or_else(|| anyhow!("batch request: missing 'requests' array"))?;
                 Ok(Request::Batch(arr.iter().map(Request::from_json).collect::<Result<_>>()?))
             }
+            "stats" => {
+                reject_unknown_keys(j, &["type"])?;
+                Ok(Request::Stats)
+            }
             other => Err(anyhow!(
                 "unknown request type '{other}' \
-                 (expected predict|simulate_fine|build|sweep|batch)"
+                 (expected predict|simulate_fine|build|sweep|batch|stats)"
             )),
         }
     }
@@ -282,7 +306,16 @@ mod tests {
                 Request::Predict(PredictRequest::for_model("SK")),
                 Request::Sweep(SweepRequest(sample_cfg())),
             ]),
+            Request::Stats,
         ]
+    }
+
+    #[test]
+    fn kind_matches_json_type_tag() {
+        for req in every_variant() {
+            let tag = req.to_json().get("type").unwrap().as_str().unwrap().to_string();
+            assert_eq!(req.kind(), tag, "kind() diverged from the JSON tag");
+        }
     }
 
     #[test]

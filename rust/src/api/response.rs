@@ -2,7 +2,8 @@
 //! variants, serializable to tagged JSON objects for the JSONL output of
 //! `autodnnchip serve`.
 
-use crate::builder::BuildOutput;
+use crate::builder::{BuildOutput, CacheStats};
+use crate::obs::Snapshot;
 use crate::util::json::{obj, Json};
 
 use super::request::with_type;
@@ -15,6 +16,8 @@ pub enum Response {
     Build(BuildResponse),
     Sweep(SweepResponse),
     Batch(Vec<Response>),
+    /// Engine/session telemetry (the `stats` request).
+    Stats(StatsResponse),
     /// A request that failed (error or panicking job). Batch serving
     /// reports these in place, preserving request order, instead of
     /// aborting the whole stream.
@@ -85,6 +88,20 @@ pub struct SweepResponse {
     pub cache_misses: u64,
     /// Top-N₂ feasible candidates, best first.
     pub selected: Vec<SweepSelection>,
+}
+
+/// Telemetry snapshot for a `stats` request: the engine's cache counters
+/// plus the cumulative observability registry. `metrics` is empty until
+/// instrumentation is switched on ([`crate::obs::set_enabled`]; the
+/// `serve` CLI enables it automatically).
+#[derive(Debug, Clone)]
+pub struct StatsResponse {
+    /// Whether instrumentation was on when the snapshot was taken.
+    pub enabled: bool,
+    /// This engine's DSE-cache counters (always populated).
+    pub cache: CacheStats,
+    /// Process-wide metric registry snapshot.
+    pub metrics: Snapshot,
 }
 
 /// A failed request, with the error (or panic) message.
@@ -160,6 +177,19 @@ impl Response {
             Response::Batch(rs) => obj(vec![
                 ("type", "batch".into()),
                 ("responses", Json::Arr(rs.iter().map(|r| r.to_json()).collect())),
+            ]),
+            Response::Stats(s) => obj(vec![
+                ("type", "stats".into()),
+                ("enabled", s.enabled.into()),
+                (
+                    "cache",
+                    obj(vec![
+                        ("entries", s.cache.entries.into()),
+                        ("hits", s.cache.hits.into()),
+                        ("misses", s.cache.misses.into()),
+                    ]),
+                ),
+                ("metrics", s.metrics.to_json()),
             ]),
             Response::Error(e) => {
                 obj(vec![("type", "error".into()), ("error", e.message.as_str().into())])

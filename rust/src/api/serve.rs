@@ -14,11 +14,24 @@ use super::engine::Engine;
 use super::request::{jsonl_entries, Request};
 use super::response::Response;
 
+/// Per-line serving telemetry: what kind of request the line carried and
+/// how long it executed on its batch slot (`serve --verbose` prints one of
+/// these per line).
+#[derive(Debug, Clone, Copy)]
+pub struct LineStat {
+    /// The request's `"type"` tag, or `"parse_error"` for malformed lines.
+    pub kind: &'static str,
+    /// Execute wall-time on the slot thread (0 for parse errors).
+    pub latency_ms: f64,
+}
+
 /// The outcome of serving one request stream.
 #[derive(Debug)]
 pub struct ServeOutcome {
     /// One response per request line, in request order.
     pub responses: Vec<Response>,
+    /// One stat per request line, parallel to `responses`.
+    pub line_stats: Vec<LineStat>,
     /// Requests answered successfully.
     pub ok: usize,
     /// Requests that failed (parse error, flow error, or panic).
@@ -27,22 +40,32 @@ pub struct ServeOutcome {
 
 /// Serve a JSONL request stream from text: parse each non-blank,
 /// non-`#`-comment line, fan the well-formed requests out through
-/// [`Engine::submit_batch`], and weave parse failures back in as in-place
-/// error responses.
+/// [`Engine::submit_batch_timed`], and weave parse failures back in as
+/// in-place error responses.
 pub fn serve_lines(engine: &Engine, text: &str) -> ServeOutcome {
     let parsed: Vec<Result<Request, String>> = jsonl_entries(text).collect();
     let requests: Vec<Request> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
-    let mut served = engine.submit_batch(requests).into_iter();
-    let responses: Vec<Response> = parsed
-        .into_iter()
-        .map(|r| match r {
-            Ok(_) => served.next().expect("submit_batch returns one response per request"),
-            Err(msg) => Response::error(msg),
-        })
-        .collect();
+    let kinds: Vec<&'static str> = requests.iter().map(|r| r.kind()).collect();
+    let mut served = engine.submit_batch_timed(requests).into_iter().zip(kinds);
+    let mut responses: Vec<Response> = Vec::with_capacity(parsed.len());
+    let mut line_stats: Vec<LineStat> = Vec::with_capacity(parsed.len());
+    for r in parsed {
+        match r {
+            Ok(_) => {
+                let ((resp, took), kind) =
+                    served.next().expect("submit_batch_timed returns one response per request");
+                responses.push(resp);
+                line_stats.push(LineStat { kind, latency_ms: took.as_secs_f64() * 1.0e3 });
+            }
+            Err(msg) => {
+                responses.push(Response::error(msg));
+                line_stats.push(LineStat { kind: "parse_error", latency_ms: 0.0 });
+            }
+        }
+    }
     let failed = responses.iter().filter(|r| r.is_error()).count();
     let ok = responses.len() - failed;
-    ServeOutcome { responses, ok, failed }
+    ServeOutcome { responses, line_stats, ok, failed }
 }
 
 /// [`serve_lines`] over a JSONL file on disk.
@@ -80,6 +103,11 @@ mod tests {
         assert_eq!(outcome.responses.len(), 3);
         assert_eq!(outcome.ok, 2);
         assert_eq!(outcome.failed, 1);
+        assert_eq!(outcome.line_stats.len(), 3);
+        assert_eq!(outcome.line_stats[0].kind, "predict");
+        assert_eq!(outcome.line_stats[1].kind, "parse_error");
+        assert_eq!(outcome.line_stats[1].latency_ms, 0.0);
+        assert_eq!(outcome.line_stats[2].kind, "predict");
         assert!(!outcome.responses[0].is_error());
         assert!(outcome.responses[1].is_error());
         assert!(!outcome.responses[2].is_error());

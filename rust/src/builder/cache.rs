@@ -64,6 +64,27 @@ impl CacheKey {
     }
 }
 
+/// Per-shard metric names, built once: `lookup` is the hottest path in
+/// stage 1, so enabled-mode telemetry must not pay a `format!` per call.
+struct ShardMetricNames {
+    hits: String,
+    misses: String,
+    insertions: String,
+}
+
+fn shard_metric_names() -> &'static [ShardMetricNames] {
+    static NAMES: OnceLock<Vec<ShardMetricNames>> = OnceLock::new();
+    NAMES.get_or_init(|| {
+        (0..SHARDS)
+            .map(|i| ShardMetricNames {
+                hits: format!("dse_cache.shard.{i}.hits"),
+                misses: format!("dse_cache.shard.{i}.misses"),
+                insertions: format!("dse_cache.shard.{i}.insertions"),
+            })
+            .collect()
+    })
+}
+
 /// A memoized stage-1 evaluation: the coarse prediction, or `None` when the
 /// template cannot realize the model under that configuration (a build or
 /// predict error — an infeasible point, memoized so the failing build is
@@ -114,13 +135,30 @@ impl DseCache {
         self.shards[i].lock().unwrap_or_else(|poisoned| poisoned.into_inner())
     }
 
-    /// Look a key up, counting a hit or miss.
+    /// Look a key up, counting a hit or miss (and, when instrumentation is
+    /// on, bumping the global total and per-shard registry counters).
     pub fn lookup(&self, key: &CacheKey) -> Option<CachedPrediction> {
-        let guard = self.lock_shard(key.shard());
-        match guard.get(key) {
+        let si = key.shard();
+        let guard = self.lock_shard(si);
+        let found = guard.get(key).cloned();
+        drop(guard);
+        if crate::obs::enabled() {
+            let names = &shard_metric_names()[si];
+            match found {
+                Some(_) => {
+                    crate::obs::metrics::counter("dse_cache.hits", 1);
+                    crate::obs::metrics::counter(&names.hits, 1);
+                }
+                None => {
+                    crate::obs::metrics::counter("dse_cache.misses", 1);
+                    crate::obs::metrics::counter(&names.misses, 1);
+                }
+            }
+        }
+        match found {
             Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v.clone())
+                Some(v)
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -132,11 +170,17 @@ impl DseCache {
     /// Insert (or overwrite — idempotent for deterministic predictors) a
     /// prediction.
     pub fn insert(&self, key: CacheKey, value: CachedPrediction) {
-        let mut guard = self.lock_shard(key.shard());
+        let si = key.shard();
+        let mut guard = self.lock_shard(si);
         if guard.len() >= SHARD_CAP {
             guard.clear();
         }
         guard.insert(key, value);
+        drop(guard);
+        if crate::obs::enabled() {
+            crate::obs::metrics::counter("dse_cache.insertions", 1);
+            crate::obs::metrics::counter(&shard_metric_names()[si].insertions, 1);
+        }
     }
 
     /// Serve `key` from the cache or compute-and-memoize via `predict`.

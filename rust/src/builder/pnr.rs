@@ -48,6 +48,18 @@ const ASIC_WIRE_NS_PER_MM: f64 = 0.2;
 
 /// Run the deterministic PnR feasibility model on a candidate.
 pub fn pnr_check(cand: &Candidate, spec: &Spec) -> PnrOutcome {
+    let out = pnr_model(cand, spec);
+    if crate::obs::enabled() {
+        crate::obs::metrics::counter("pnr.checks", 1);
+        let verdict = if out.passed() { "pnr.pass" } else { "pnr.fail" };
+        crate::obs::metrics::counter(verdict, 1);
+    }
+    out
+}
+
+/// The model itself, kept free of instrumentation so the outcome is
+/// trivially a pure function of (candidate, spec).
+fn pnr_model(cand: &Candidate, spec: &Spec) -> PnrOutcome {
     let r = &cand.coarse.resources;
     let target = cand.cfg.freq_mhz;
     match &spec.backend {

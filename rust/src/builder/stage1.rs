@@ -84,6 +84,7 @@ pub fn stage1_with(
     // Validate the model once up front so per-point failures can only mean
     // "this configuration cannot realize the model", not "bad model".
     model.stats()?;
+    let _sweep_span = crate::obs::span("stage1.sweep");
 
     let points = grid.points();
     let evaluated = points.len();
@@ -98,6 +99,11 @@ pub fn stage1_with(
         .map(points, move |(template, cfg)| {
             let key = CacheKey::new(model_fp, template, &cfg);
             let (predicted, hit) = shared_cache.get_or_predict(key, || {
+                // Cache misses pay the build-and-predict cost; time them
+                // per template so a Stats snapshot can attribute sweep
+                // time (`span.stage1.eval.<template>_ns`).
+                let _eval_span =
+                    crate::obs::span_with(|| format!("stage1.eval.{}", template.name()));
                 // A config the template cannot realize is an infeasible
                 // point, not a sweep-level error; memoize the failure too.
                 template
@@ -134,6 +140,16 @@ pub fn stage1_with(
         .context("stage-1 sweep failed")?;
 
     let feasible = evals.iter().filter(|e| e.feasible).count();
+    let (cache_hits, cache_misses) =
+        (hits.load(Ordering::Relaxed), misses.load(Ordering::Relaxed));
+    if crate::obs::enabled() {
+        use crate::obs::metrics::counter;
+        counter("stage1.sweeps", 1);
+        counter("stage1.points_evaluated", evaluated as u64);
+        counter("stage1.cache_served", cache_hits);
+        counter("stage1.predicted", cache_misses);
+        counter("stage1.feasible", feasible as u64);
+    }
     let trace: Vec<TracePoint> = evals
         .iter()
         .map(|e| TracePoint {
@@ -165,14 +181,7 @@ pub fn stage1_with(
     });
     selected.truncate(n2);
 
-    Ok(Stage1Output {
-        evaluated,
-        feasible,
-        trace,
-        selected,
-        cache_hits: hits.load(Ordering::Relaxed),
-        cache_misses: misses.load(Ordering::Relaxed),
-    })
+    Ok(Stage1Output { evaluated, feasible, trace, selected, cache_hits, cache_misses })
 }
 
 #[cfg(test)]

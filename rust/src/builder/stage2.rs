@@ -199,20 +199,33 @@ fn run_phase(
         let before_ms = best.fine.latency_ms;
         let before_score = phase_score(accept, spec, best);
 
-        // Try every applicable move; remember the best feasible one.
-        let mut chosen: Option<(usize, HwConfig, EvalPoint)> = None;
+        // Try every applicable move; remember the best feasible one. When
+        // instrumentation is on, each proposal is counted and timed
+        // (`stage2.move.<name>` spans cover apply + evaluate + gate), and
+        // the per-iteration proposal list resolves to accepted/rejected
+        // counters below — the dataset the learned-DSE item trains on.
+        let observing = crate::obs::enabled();
+        let mut proposed: Vec<&'static str> = Vec::new();
+        let mut chosen: Option<(usize, &'static str, HwConfig, EvalPoint)> = None;
         for mv in moves.phase_moves(extended) {
             if !mv.applicable(&best.graph, bn_now, best_cfg) {
                 continue;
             }
             let Some(applied) = mv.apply(best_cfg) else { continue };
-            let eval = match evaluate(model, template, &applied.cfg, false) {
-                Ok(e) if spec.feasible(&e.coarse)
-                    && phase_gate(accept, template, spec, &applied.cfg, &e) =>
-                {
-                    Some(e)
+            if observing {
+                crate::obs::metrics::counter(&format!("stage2.move.{}.proposed", mv.name()), 1);
+                proposed.push(mv.name());
+            }
+            let eval = {
+                let _mv_span = crate::obs::span_with(|| format!("stage2.move.{}", mv.name()));
+                match evaluate(model, template, &applied.cfg, false) {
+                    Ok(e) if spec.feasible(&e.coarse)
+                        && phase_gate(accept, template, spec, &applied.cfg, &e) =>
+                    {
+                        Some(e)
+                    }
+                    _ => None,
                 }
-                _ => None,
             };
             let after_ms = eval.as_ref().map(|e| e.fine.latency_ms).unwrap_or(f64::INFINITY);
             steps.push(Stage2Step {
@@ -225,20 +238,30 @@ fn run_phase(
             });
             if let Some(e) = eval {
                 let improves_on_chosen = match &chosen {
-                    Some((_, _, c)) => phase_score(accept, spec, &e) < phase_score(accept, spec, c),
+                    Some((_, _, _, c)) => {
+                        phase_score(accept, spec, &e) < phase_score(accept, spec, c)
+                    }
                     None => true,
                 };
                 if improves_on_chosen {
-                    chosen = Some((steps.len() - 1, applied.cfg, e));
+                    chosen = Some((steps.len() - 1, mv.name(), applied.cfg, e));
                 }
             }
         }
 
         match chosen {
-            Some((step_idx, cfg, e))
+            Some((step_idx, mv_name, cfg, e))
                 if phase_score(accept, spec, &e) < before_score * (1.0 - MIN_REL_GAIN) =>
             {
                 steps[step_idx].accepted = true;
+                if observing {
+                    // Each move proposes at most once per iteration, so
+                    // everything except the winner was rejected.
+                    for name in &proposed {
+                        let verdict = if *name == mv_name { "accepted" } else { "rejected" };
+                        crate::obs::metrics::counter(&format!("stage2.move.{name}.{verdict}"), 1);
+                    }
+                }
                 *best_cfg = cfg;
                 *best = e;
             }
@@ -246,6 +269,11 @@ fn run_phase(
             // consume the iteration number: this sweep logged steps under
             // it, and a following phase must not reuse it.
             _ => {
+                if observing {
+                    for name in &proposed {
+                        crate::obs::metrics::counter(&format!("stage2.move.{name}.rejected"), 1);
+                    }
+                }
                 *iter += 1;
                 break;
             }
@@ -273,6 +301,18 @@ pub fn stage2_with_moves(
     cand: Candidate,
     moves: &MoveSet,
 ) -> Result<Stage2Report> {
+    let _refine_span = crate::obs::span("stage2.refine");
+    if crate::obs::enabled() {
+        // Pre-register the per-move counters at zero so a Stats snapshot
+        // always lists every registered move, including never-proposed
+        // ones — downstream consumers (the learned-DSE training-set
+        // collector) see the full move vocabulary.
+        for name in moves.names() {
+            for verdict in ["proposed", "accepted", "rejected"] {
+                crate::obs::metrics::counter(&format!("stage2.move.{name}.{verdict}"), 0);
+            }
+        }
+    }
     let template = cand.template;
     let initial = evaluate(model, template, &cand.cfg, true)?;
     let bn = throughput_bottleneck(&initial.graph, &initial.fine);

@@ -62,7 +62,20 @@ impl Pool {
                             // by `map` (or swallowed for fire-and-forget
                             // `submit` jobs).
                             Ok(job) => {
-                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                if crate::obs::enabled() {
+                                    let t0 = std::time::Instant::now();
+                                    let r = catch_unwind(AssertUnwindSafe(job));
+                                    crate::obs::metrics::counter("pool.jobs", 1);
+                                    crate::obs::metrics::record(
+                                        "pool.job_ns",
+                                        t0.elapsed().as_nanos() as u64,
+                                    );
+                                    if r.is_err() {
+                                        crate::obs::metrics::counter("pool.panics", 1);
+                                    }
+                                } else {
+                                    let _ = catch_unwind(AssertUnwindSafe(job));
+                                }
                             }
                             Err(_) => break, // sender dropped → shut down
                         }

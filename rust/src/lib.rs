@@ -25,7 +25,9 @@
 //! (single or batched), and backs the `autodnnchip serve` JSONL mode.
 //!
 //! Supporting substrates: the DNN intermediate representation and model zoo
-//! ([`dnn`]), the IP cost-model library ([`ip`]), virtual measured devices
+//! ([`dnn`]), the IP cost-model library ([`ip`]), the zero-dependency
+//! observability layer ([`obs`]: spans, metrics, Chrome-trace export
+//! across the whole pipeline), virtual measured devices
 //! ([`devices`]), a functional accelerator simulator ([`funcsim`]), the
 //! PJRT runtime for golden-reference execution of AOT-compiled JAX models
 //! ([`runtime`]), and the experiment harness that regenerates every table
@@ -40,6 +42,7 @@ pub mod experiments;
 pub mod funcsim;
 pub mod graph;
 pub mod ip;
+pub mod obs;
 pub mod predictor;
 pub mod rtlgen;
 pub mod runtime;

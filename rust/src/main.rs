@@ -8,6 +8,7 @@
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
 //! autodnnchip serve    --requests file.jsonl [--out DIR] [--workers N]
+//!                      [--verbose]
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
 //!                       fig11|fig12|fig13|fig14|fig15|all> [--seed N]
 //! autodnnchip validate [--artifacts DIR]
@@ -16,6 +17,12 @@
 //! `predict` and `build` route through the `api::Engine` facade — the CLI
 //! is one consumer of the same typed request/response surface the JSONL
 //! serving mode (`serve`) exposes.
+//!
+//! Every command additionally accepts `--trace-out FILE` (Chrome
+//! `trace_event` JSON, loadable in Perfetto / chrome://tracing) and
+//! `--metrics-out FILE` (a metric-registry snapshot); either flag switches
+//! instrumentation on for the whole process. `serve` records telemetry
+//! unconditionally so JSONL `{"type":"stats"}` requests always have data.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -27,7 +34,45 @@ use autodnnchip::coordinator::{MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::util::cli::Args;
 use autodnnchip::util::table::{f, Table};
-use autodnnchip::{experiments, runtime};
+use autodnnchip::{experiments, obs, runtime};
+
+/// Where the `--trace-out`/`--metrics-out` telemetry goes. Every command
+/// accepts both flags; either one switches instrumentation on for the
+/// whole process ([`obs::set_enabled`]).
+struct ObsOutputs {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+}
+
+fn obs_outputs(args: &Args) -> ObsOutputs {
+    let out = ObsOutputs {
+        trace_out: args.flag("trace-out").map(|s| s.to_string()),
+        metrics_out: args.flag("metrics-out").map(|s| s.to_string()),
+    };
+    if out.trace_out.is_some() || out.metrics_out.is_some() {
+        obs::set_enabled(true);
+    }
+    if out.trace_out.is_some() {
+        obs::install_trace_sink();
+    }
+    out
+}
+
+impl ObsOutputs {
+    /// Write whatever was requested (called after the command body, even a
+    /// failing one — a failing build's trace is the one worth reading).
+    fn finish(&self) -> Result<()> {
+        if let Some(p) = &self.metrics_out {
+            obs::write_metrics(Path::new(p)).with_context(|| format!("writing '{p}'"))?;
+            eprintln!("wrote {p}");
+        }
+        if let Some(p) = &self.trace_out {
+            obs::write_chrome_trace(Path::new(p)).with_context(|| format!("writing '{p}'"))?;
+            eprintln!("wrote {p} (load in Perfetto / chrome://tracing)");
+        }
+        Ok(())
+    }
+}
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -41,9 +86,34 @@ fn main() -> ExitCode {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    let telemetry = obs_outputs(args);
+    let result = run_command(args);
+    // Flush telemetry even when the command failed; but never let a flush
+    // error mask the command's own error.
+    match telemetry.finish() {
+        Err(e) if result.is_ok() => Err(e),
+        Err(e) => {
+            eprintln!("warning: {e:#}");
+            result
+        }
+        Ok(()) => result,
+    }
+}
+
+/// Flags every command accepts (handled in [`dispatch`], before the
+/// command body runs).
+const OBS_FLAGS: [&str; 2] = ["trace-out", "metrics-out"];
+
+/// `known` command flags plus the global observability flags, for
+/// `warn_unknown_flags`.
+fn with_obs_flags<'a>(known: &[&'a str]) -> Vec<&'a str> {
+    known.iter().copied().chain(OBS_FLAGS).collect()
+}
+
+fn run_command(args: &Args) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("list-models") => {
-            args.warn_unknown_flags(&[]);
+            args.warn_unknown_flags(&OBS_FLAGS);
             let mut t = Table::new("model zoo", &["name", "layers", "params (M)", "MACs (M)"]);
             for name in zoo::all_names() {
                 let m = zoo::by_name(&name).unwrap();
@@ -87,7 +157,7 @@ fn numeric_flag<T: std::str::FromStr>(args: &Args, name: &str) -> Option<T> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&["model", "template", "tech", "unroll", "pipeline"]);
+    args.warn_unknown_flags(&with_obs_flags(&["model", "template", "tech", "unroll", "pipeline"]));
     let req = PredictRequest {
         model: args.flag_or("model", "SK"),
         template: args.flag_or("template", "hetero_dw_pw"),
@@ -117,13 +187,15 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_build(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&[
+    args.warn_unknown_flags(&with_obs_flags(&[
         "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
-    ]);
+    ]));
     let cfg = if let Some(path) = args.flag("config") {
         // The config file carries the whole run; any other flag on the
-        // line would be silently out-voted, so say so.
-        let ignored = args.unknown_flags(&["config"]);
+        // line would be silently out-voted, so say so. The observability
+        // flags are global (handled in `dispatch`), not part of the run
+        // config, so they coexist with --config.
+        let ignored = args.unknown_flags(&with_obs_flags(&["config"]));
         if !ignored.is_empty() {
             eprintln!(
                 "warning: --config takes precedence; ignoring --{}",
@@ -168,16 +240,27 @@ fn cmd_build(args: &Args) -> Result<()> {
 /// response per output line, in order; failing requests become in-place
 /// `{"type":"error",...}` lines instead of aborting the stream.
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&["requests", "out", "workers"]);
-    let path = args
-        .flag("requests")
-        .ok_or_else(|| anyhow!("usage: serve --requests file.jsonl [--out DIR] [--workers N]"))?;
+    args.warn_unknown_flags(&with_obs_flags(&["requests", "out", "workers", "verbose"]));
+    let path = args.flag("requests").ok_or_else(|| {
+        anyhow!("usage: serve --requests file.jsonl [--out DIR] [--workers N] [--verbose]")
+    })?;
+    // Serving mode always records telemetry, so a `{"type":"stats"}` line
+    // has per-request-kind latency histograms, cache counters and stage
+    // metrics to report without any extra flag.
+    obs::set_enabled(true);
+    let verbose = args.flag_bool("verbose");
     let mut builder = Engine::builder();
     if let Some(w) = numeric_flag::<usize>(args, "workers") {
         builder = builder.workers(w);
     }
     let engine = builder.build();
     let outcome = api::serve_path(&engine, Path::new(path))?;
+    if verbose {
+        for (i, (ls, r)) in outcome.line_stats.iter().zip(&outcome.responses).enumerate() {
+            let status = if r.is_error() { "error" } else { "ok" };
+            eprintln!("request {}: {} {:.2} ms -> {status}", i + 1, ls.kind, ls.latency_ms);
+        }
+    }
     for r in &outcome.responses {
         println!("{}", r.to_json());
     }
@@ -200,7 +283,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&["seed", "results"]);
+    args.warn_unknown_flags(&with_obs_flags(&["seed", "results"]));
     let id = args
         .subcommand
         .get(1)
@@ -220,7 +303,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&["artifacts"]);
+    args.warn_unknown_flags(&with_obs_flags(&["artifacts"]));
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());

@@ -1,0 +1,193 @@
+//! Trace-sink and artifact export: Chrome `trace_event` JSON (loadable in
+//! `chrome://tracing` / Perfetto) and metrics-snapshot files.
+//!
+//! The sink is process-global and off by default: spans check one atomic
+//! before touching it. [`install_trace_sink`] arms it (and pins the time
+//! epoch all timestamps are relative to); finished spans then append one
+//! complete event (`ph:"X"`) each, tagged with a small per-thread `tid` so
+//! Perfetto lays concurrent work out on separate tracks. The buffer is
+//! capped — a runaway sweep degrades to dropped events (counted in
+//! `obs.trace.dropped`), never unbounded memory.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
+
+use super::metrics::{global_snapshot, Registry};
+
+/// Event-buffer cap (~1M events); beyond it events are dropped and
+/// counted.
+const MAX_EVENTS: usize = 1 << 20;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Small stable per-thread id for trace tracks (1, 2, 3, ... in thread
+    /// first-use order — readable in Perfetto, unlike raw OS thread ids).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One completed span, in Chrome `trace_event` terms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Microseconds since the sink's epoch.
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+}
+
+fn lock_events() -> MutexGuard<'static, Vec<TraceEvent>> {
+    EVENTS.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Arm the trace sink: subsequent spans append Chrome trace events. Also
+/// pins the trace epoch on first call.
+pub fn install_trace_sink() {
+    EPOCH.get_or_init(Instant::now);
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+pub fn trace_sink_installed() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Append one complete event; called from `Span::drop`. No-op unless the
+/// sink is installed.
+pub(crate) fn trace_complete(name: &str, start: Instant, dur: Duration) {
+    if !trace_sink_installed() {
+        return;
+    }
+    let Some(epoch) = EPOCH.get() else { return };
+    let mut events = lock_events();
+    if events.len() >= MAX_EVENTS {
+        drop(events);
+        Registry::global().add("obs.trace.dropped", 1);
+        return;
+    }
+    // A span opened before the sink was installed clamps to the epoch.
+    let ts_us = start.saturating_duration_since(*epoch).as_secs_f64() * 1e6;
+    events.push(TraceEvent {
+        name: name.to_string(),
+        ts_us,
+        dur_us: dur.as_secs_f64() * 1e6,
+        tid: TID.with(|t| *t),
+    });
+}
+
+/// Drain the buffered trace events (the sink stays armed).
+pub fn take_trace_events() -> Vec<TraceEvent> {
+    std::mem::take(&mut *lock_events())
+}
+
+/// Render events in the Chrome `trace_event` "JSON object format":
+/// `{"traceEvents":[...],"displayTimeUnit":"ms"}` with thread-id'd
+/// `ph:"X"` complete events — the shape `chrome://tracing` and Perfetto
+/// load directly.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("name", e.name.as_str().into()),
+                ("cat", "autodnnchip".into()),
+                ("ph", "X".into()),
+                ("ts", e.ts_us.into()),
+                ("dur", e.dur_us.into()),
+                ("pid", 1u64.into()),
+                ("tid", e.tid.into()),
+            ])
+        })
+        .collect();
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(rows));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc)
+}
+
+/// Drain the sink and write a Chrome trace file (pretty-printed, trailing
+/// newline). Writes an empty-but-valid trace if nothing was captured.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<()> {
+    let events = take_trace_events();
+    let mut text = chrome_trace_json(&events).pretty();
+    if !text.ends_with('\n') {
+        text.push('\n');
+    }
+    std::fs::write(path, text)
+}
+
+/// Write the global metrics snapshot as pretty JSON.
+pub fn write_metrics(path: &Path) -> std::io::Result<()> {
+    let mut text = global_snapshot().to_json().pretty();
+    if !text.ends_with('\n') {
+        text.push('\n');
+    }
+    std::fs::write(path, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_sink_captures_spans_as_chrome_events() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        install_trace_sink();
+        take_trace_events(); // start from an empty buffer
+        {
+            let _a = crate::obs::span("unit.trace.outer");
+            let _b = crate::obs::span("unit.trace.inner");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let events = take_trace_events();
+        assert!(events.len() >= 2, "both spans captured: {events:?}");
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"unit.trace.outer"));
+        assert!(names.contains(&"unit.trace.inner"));
+        for e in &events {
+            assert!(e.ts_us >= 0.0 && e.dur_us >= 0.0 && e.tid >= 1);
+        }
+
+        // The JSON form has the Chrome trace_event shape.
+        let j = chrome_trace_json(&events);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), events.len());
+        for row in rows {
+            assert_eq!(row.get("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(row.get("cat").unwrap().as_str(), Some("autodnnchip"));
+            assert!(row.get("ts").unwrap().as_f64().is_some());
+            assert!(row.get("dur").unwrap().as_f64().is_some());
+            assert!(row.get("tid").unwrap().as_u64().is_some());
+        }
+        crate::obs::set_enabled(false);
+        Registry::global().clear();
+    }
+
+    #[test]
+    fn trace_files_write_even_when_empty() {
+        let _guard = crate::obs::test_guard();
+        take_trace_events();
+        let dir = std::env::temp_dir();
+        let trace = dir.join(format!("obs_trace_{}.json", std::process::id()));
+        let metrics = dir.join(format!("obs_metrics_{}.json", std::process::id()));
+        write_chrome_trace(&trace).unwrap();
+        write_metrics(&metrics).unwrap();
+        let t = std::fs::read_to_string(&trace).unwrap();
+        let parsed = Json::parse(&t).unwrap();
+        assert!(parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        let m = std::fs::read_to_string(&metrics).unwrap();
+        assert!(Json::parse(&m).unwrap().get("counters").is_some());
+        std::fs::remove_file(&trace).ok();
+        std::fs::remove_file(&metrics).ok();
+    }
+}

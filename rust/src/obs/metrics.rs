@@ -1,0 +1,533 @@
+//! Counters, gauges and log2-bucketed histograms behind a lock-striped
+//! global [`Registry`], snapshot-able to [`crate::util::json::Json`].
+//!
+//! The registry is sharded by metric-name hash (the same striping idea as
+//! `builder::cache::DseCache`) so concurrent stage-1 workers recording
+//! different metrics do not serialize on one mutex. Values are updated
+//! under a per-shard lock; a [`Snapshot`] clones the current state out and
+//! can be merged with other snapshots (counters add, histograms merge,
+//! gauges take the latest).
+//!
+//! The free functions [`counter`], [`gauge`] and [`record`] are the
+//! instrumentation entry points the rest of the crate calls: each is an
+//! atomic-load-and-early-out no-op while [`crate::obs::enabled`] is false,
+//! so the disabled path costs one relaxed load per call site.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::hash::Fnv64;
+use crate::util::json::{obj, Json};
+
+/// Histogram buckets: bucket 0 holds the value 0, bucket `i >= 1` holds
+/// values in `[2^(i-1), 2^i)` — 65 buckets cover the whole `u64` range.
+const BUCKETS: usize = 65;
+
+/// Registry shard count (power of two, mirroring `DseCache`).
+const SHARDS: usize = 16;
+
+/// A log2-bucketed histogram of `u64` samples (typically nanoseconds).
+///
+/// Fixed-size and allocation-free to record into; quantiles are estimated
+/// by linear interpolation inside the hit bucket and clamped to the exact
+/// observed `[min, max]`, so constant streams report exact quantiles.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Bucket index of a value: 0 for 0, else `64 - leading_zeros`.
+fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive value range `[lo, hi]` of bucket `i`.
+fn bucket_range(i: usize) -> (u64, u64) {
+    if i == 0 {
+        (0, 0)
+    } else {
+        let lo = 1u64 << (i - 1);
+        let hi = if i >= 64 { u64::MAX } else { (1u64 << i) - 1 };
+        (lo, hi)
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Estimated `q`-th percentile (`q` in 0..=100): rank-walk over the
+    /// buckets, linear interpolation within the hit bucket, clamped to the
+    /// observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil().clamp(1.0, self.count as f64);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= rank {
+                let (lo, hi) = bucket_range(i);
+                let frac = (rank - cum as f64) / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return est.clamp(self.min as f64, self.max as f64);
+            }
+            cum += c;
+        }
+        self.max as f64
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// JSON form: summary scalars plus the non-empty buckets as
+    /// `[bucket_index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![i.into(), c.into()]))
+            .collect();
+        obj(vec![
+            ("count", self.count.into()),
+            ("sum", self.sum.into()),
+            ("min", self.min().into()),
+            ("max", self.max.into()),
+            ("mean", self.mean().into()),
+            ("p50", self.quantile(50.0).into()),
+            ("p90", self.quantile(90.0).into()),
+            ("p99", self.quantile(99.0).into()),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("min", &self.min())
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+/// One named metric.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Histogram),
+}
+
+/// Lock-striped table of named metrics. Most callers use the process-wide
+/// [`Registry::global`] through the gated free functions; benches and
+/// tests can construct private registries.
+pub struct Registry {
+    shards: Vec<Mutex<BTreeMap<String, Metric>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect() }
+    }
+
+    /// The process-wide registry all instrumentation records into.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn shard_of(name: &str) -> usize {
+        (Fnv64::new().write_str(name).finish() as usize) % SHARDS
+    }
+
+    fn lock_shard(&self, i: usize) -> MutexGuard<'_, BTreeMap<String, Metric>> {
+        // Metric updates are small scalar writes; recover poisoned locks
+        // like `DseCache` does rather than wedging instrumentation.
+        self.shards[i].lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Add `n` to a counter (creating it at `n`). A name previously used
+    /// for a different metric kind is restarted as a counter.
+    pub fn add(&self, name: &str, n: u64) {
+        let mut shard = self.lock_shard(Registry::shard_of(name));
+        match shard.get_mut(name) {
+            Some(Metric::Counter(c)) => *c += n,
+            Some(other) => *other = Metric::Counter(n),
+            None => {
+                shard.insert(name.to_string(), Metric::Counter(n));
+            }
+        }
+    }
+
+    /// Set a gauge to `v` (latest value wins).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut shard = self.lock_shard(Registry::shard_of(name));
+        shard.insert(name.to_string(), Metric::Gauge(v));
+    }
+
+    /// Record one sample into a histogram (creating it on first use).
+    pub fn record(&self, name: &str, v: u64) {
+        let mut shard = self.lock_shard(Registry::shard_of(name));
+        match shard.get_mut(name) {
+            Some(Metric::Hist(h)) => h.record(v),
+            Some(other) => {
+                let mut h = Histogram::new();
+                h.record(v);
+                *other = Metric::Hist(h);
+            }
+            None => {
+                let mut h = Histogram::new();
+                h.record(v);
+                shard.insert(name.to_string(), Metric::Hist(h));
+            }
+        }
+    }
+
+    /// Clone the current state out (deterministically ordered).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for i in 0..SHARDS {
+            for (name, m) in self.lock_shard(i).iter() {
+                match m {
+                    Metric::Counter(c) => {
+                        snap.counters.insert(name.clone(), *c);
+                    }
+                    Metric::Gauge(g) => {
+                        snap.gauges.insert(name.clone(), *g);
+                    }
+                    Metric::Hist(h) => {
+                        snap.histograms.insert(name.clone(), h.clone());
+                    }
+                }
+            }
+        }
+        snap
+    }
+
+    /// Total metrics registered.
+    pub fn len(&self) -> usize {
+        (0..SHARDS).map(|i| self.lock_shard(i).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every metric.
+    pub fn clear(&self) {
+        for i in 0..SHARDS {
+            self.lock_shard(i).clear();
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Registry`]'s metrics, mergeable across
+/// registries/processes and serializable to JSON (the `metrics` section of
+/// `result.json`, the `--metrics-out` file, and `Response::Stats`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Snapshot {
+    /// Merge another snapshot in: counters add, histograms merge, gauges
+    /// take `other`'s value (latest wins).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, n) in &other.counters {
+            *self.counters.entry(name.clone()).or_insert(0) += n;
+        }
+        for (name, v) in &other.gauges {
+            self.gauges.insert(name.clone(), *v);
+        }
+        for (name, h) in &other.histograms {
+            self.histograms
+                .entry(name.clone())
+                .and_modify(|mine| mine.merge(h))
+                .or_insert_with(|| h.clone());
+        }
+    }
+
+    /// A counter's value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// A histogram by name.
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(k, &v)| (k.clone(), v.into())).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, &v)| (k.clone(), v.into())).collect();
+        let hists: BTreeMap<String, Json> =
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+/// Bump a global counter by `n`. No-op while instrumentation is disabled.
+pub fn counter(name: &str, n: u64) {
+    if super::enabled() {
+        Registry::global().add(name, n);
+    }
+}
+
+/// Set a global gauge. No-op while instrumentation is disabled.
+pub fn gauge(name: &str, v: f64) {
+    if super::enabled() {
+        Registry::global().set_gauge(name, v);
+    }
+}
+
+/// Record a sample into a global histogram. No-op while disabled.
+pub fn record(name: &str, v: u64) {
+    if super::enabled() {
+        Registry::global().record(name, v);
+    }
+}
+
+/// Snapshot the global registry (works regardless of the enabled flag —
+/// it reports whatever was recorded while instrumentation was on).
+pub fn global_snapshot() -> Snapshot {
+    Registry::global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        for i in 1..64 {
+            let (lo, hi) = bucket_range(i);
+            assert_eq!(bucket_index(lo), i, "low edge of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "high edge of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_summary_and_quantiles() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(50.0), 0.0);
+        for _ in 0..1000 {
+            h.record(100);
+        }
+        // A constant stream reports exact quantiles (clamped to min==max).
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.mean(), 100.0);
+        assert_eq!(h.quantile(50.0), 100.0);
+        assert_eq!(h.quantile(99.0), 100.0);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 100);
+
+        // A bimodal stream: the median lands in the low mode's bucket, the
+        // p99 in the high mode's.
+        let mut h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(10_000);
+        }
+        let p50 = h.quantile(50.0);
+        let p99 = h.quantile(99.0);
+        assert!((10.0..100.0).contains(&p50), "p50 {p50} should sit near the low mode");
+        assert!(p99 > 1_000.0, "p99 {p99} should sit in the high mode");
+        assert!(p99 <= 10_000.0, "quantiles are clamped to the observed max");
+    }
+
+    #[test]
+    fn histogram_merge_adds_everything() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [1u64, 2, 3] {
+            a.record(v);
+        }
+        for v in [1000u64, 2000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 1 + 2 + 3 + 1000 + 2000);
+        assert_eq!(a.min(), 1);
+        assert_eq!(a.max(), 2000);
+        // Merging an empty histogram is the identity.
+        let before = a.clone();
+        a.merge(&Histogram::new());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn registry_kinds_and_snapshot() {
+        let r = Registry::new();
+        r.add("reqs", 2);
+        r.add("reqs", 3);
+        r.set_gauge("width", 4.0);
+        r.set_gauge("width", 8.0);
+        r.record("lat_ns", 100);
+        r.record("lat_ns", 300);
+        let s = r.snapshot();
+        assert_eq!(s.counter("reqs"), 5);
+        assert_eq!(s.counter("absent"), 0);
+        assert_eq!(s.gauges.get("width"), Some(&8.0));
+        assert_eq!(s.hist("lat_ns").unwrap().count(), 2);
+        assert_eq!(r.len(), 3);
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn snapshot_merge_semantics() {
+        let a_reg = Registry::new();
+        a_reg.add("c", 1);
+        a_reg.set_gauge("g", 1.0);
+        a_reg.record("h", 10);
+        let b_reg = Registry::new();
+        b_reg.add("c", 2);
+        b_reg.add("only_b", 7);
+        b_reg.set_gauge("g", 2.0);
+        b_reg.record("h", 30);
+        let mut a = a_reg.snapshot();
+        a.merge(&b_reg.snapshot());
+        assert_eq!(a.counter("c"), 3, "counters add");
+        assert_eq!(a.counter("only_b"), 7, "missing counters are created");
+        assert_eq!(a.gauges.get("g"), Some(&2.0), "gauges take the latest");
+        assert_eq!(a.hist("h").unwrap().count(), 2, "histograms merge");
+        assert_eq!(a.hist("h").unwrap().sum(), 40);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let r = Registry::new();
+        r.add("stage1.sweeps", 1);
+        r.set_gauge("engine.batch.width", 4.0);
+        r.record("pool.job_ns", 12_345);
+        let j = r.snapshot().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("counters").unwrap().get("stage1.sweeps").unwrap().as_u64(),
+            Some(1)
+        );
+        assert_eq!(
+            parsed.get("gauges").unwrap().get("engine.batch.width").unwrap().as_f64(),
+            Some(4.0)
+        );
+        let h = parsed.get("histograms").unwrap().get("pool.job_ns").unwrap();
+        assert_eq!(h.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(h.get("sum").unwrap().as_u64(), Some(12_345));
+        assert!(!h.get("buckets").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn gated_free_functions_are_noops_while_disabled() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        Registry::global().clear();
+        counter("off.counter", 1);
+        gauge("off.gauge", 1.0);
+        record("off.hist", 1);
+        let s = global_snapshot();
+        assert_eq!(s.counter("off.counter"), 0);
+        assert!(!s.gauges.contains_key("off.gauge"));
+        assert!(s.hist("off.hist").is_none());
+
+        crate::obs::set_enabled(true);
+        counter("on.counter", 2);
+        record("on.hist", 5);
+        let s = global_snapshot();
+        assert_eq!(s.counter("on.counter"), 2);
+        assert_eq!(s.hist("on.hist").unwrap().count(), 1);
+        crate::obs::set_enabled(false);
+        Registry::global().clear();
+    }
+}

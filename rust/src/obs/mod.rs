@@ -1,0 +1,82 @@
+//! In-tree observability: tracing spans, metrics, and Chrome-trace export
+//! for the whole DSE pipeline (zero external dependencies, like
+//! [`crate::util::json`]).
+//!
+//! * [`metrics`] — a lock-striped global [`Registry`] of counters, gauges
+//!   and log2-bucketed [`Histogram`]s, snapshot-able to JSON.
+//! * [`span`] — RAII wall-time spans (`obs::span("stage1.sweep")`) that
+//!   record into `span.<name>_ns` histograms.
+//! * [`export`] — an optional trace sink turning finished spans into
+//!   Chrome `trace_event` JSON (`--trace-out`, viewable in Perfetto), plus
+//!   the `--metrics-out` snapshot writer.
+//!
+//! Everything hangs off one process-global switch: [`enabled`] defaults to
+//! **off**, and every instrumentation entry point (the gated free
+//! functions in [`metrics`], [`span::span`], [`span::span_with`])
+//! early-outs on a single relaxed atomic load, so the disabled path is
+//! branch-cheap and leaves all pipeline outputs byte-identical
+//! (property-tested in `tests/properties.rs`, overhead-gated by
+//! `benches/obs.rs`).
+//!
+//! What the pipeline records when enabled (the metric catalog is in the
+//! README's "Observability" section): per-request-kind engine latency and
+//! batch queue-wait/exec/slot-occupancy, stage-1 sweep counters and
+//! per-template eval times, per-shard `DseCache` hits/misses/insertions,
+//! per-`Move` proposed/accepted/rejected counts and apply-time histograms
+//! in stage 2, worker-pool job/panic/busy accounting, and PnR check
+//! outcomes. Surfaced via `Request::Stats` over JSONL, the
+//! `--trace-out`/`--metrics-out` CLI flags, and a `metrics` section in
+//! `result.json`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub use export::{
+    chrome_trace_json, install_trace_sink, take_trace_events, trace_sink_installed,
+    write_chrome_trace, write_metrics, TraceEvent,
+};
+pub use metrics::{Histogram, Registry, Snapshot};
+pub use span::{span, span_with, Span};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether instrumentation is on (one relaxed load — the hot-path check).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch instrumentation on or off, process-wide. The CLI flips this on
+/// for `--trace-out`/`--metrics-out` (and always for `serve`, so JSONL
+/// `stats` requests have data to report).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Serializes tests that toggle the process-global enabled flag or mutate
+/// the global registry/trace sink, so parallel unit tests cannot race each
+/// other's toggles.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_toggleable() {
+        let _guard = test_guard();
+        let was = enabled();
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(was);
+    }
+}

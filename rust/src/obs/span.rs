@@ -1,0 +1,101 @@
+//! RAII wall-time spans: `let _s = obs::span("stage1.sweep");` measures
+//! from construction to drop, records the duration into the global
+//! histogram `span.<name>_ns`, and — when a trace sink is installed
+//! ([`super::export::install_trace_sink`]) — emits one Chrome
+//! `trace_event` complete event (`ph:"X"`) for the enclosing scope.
+//!
+//! While instrumentation is disabled a span is a `None` and costs one
+//! relaxed atomic load; [`span_with`] defers the name construction too, so
+//! dynamically-named spans (`stage2.move.<name>`) allocate nothing on the
+//! disabled path.
+
+use std::time::Instant;
+
+use super::export;
+use super::metrics::Registry;
+
+/// An in-flight measurement; ends (and records) when dropped.
+pub struct Span(Option<ActiveSpan>);
+
+struct ActiveSpan {
+    name: String,
+    start: Instant,
+}
+
+/// Open a span named `name`. Records into the histogram `span.<name>_ns`
+/// on drop; no-op while instrumentation is disabled.
+pub fn span(name: &str) -> Span {
+    if !super::enabled() {
+        return Span(None);
+    }
+    Span(Some(ActiveSpan { name: name.to_string(), start: Instant::now() }))
+}
+
+/// Like [`span`], but the name is built lazily — use for formatted names
+/// so the disabled path does not pay the `format!`.
+pub fn span_with<F: FnOnce() -> String>(make_name: F) -> Span {
+    if !super::enabled() {
+        return Span(None);
+    }
+    Span(Some(ActiveSpan { name: make_name(), start: Instant::now() }))
+}
+
+impl Span {
+    /// Whether this span is live (instrumentation was enabled at open).
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.0.take() {
+            let dur = inner.start.elapsed();
+            Registry::global().record(
+                &format!("span.{}_ns", inner.name),
+                dur.as_nanos() as u64,
+            );
+            export::trace_complete(&inner.name, inner.start, dur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::global_snapshot;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        Registry::global().clear();
+        {
+            let s = span("unit.disabled");
+            assert!(!s.is_active());
+        }
+        assert!(global_snapshot().hist("span.unit.disabled_ns").is_none());
+    }
+
+    #[test]
+    fn enabled_spans_record_wall_time() {
+        let _guard = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        Registry::global().clear();
+        {
+            let s = span("unit.enabled");
+            assert!(s.is_active());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _s = span_with(|| format!("unit.{}", "dynamic"));
+        }
+        let snap = global_snapshot();
+        let h = snap.hist("span.unit.enabled_ns").expect("span histogram exists");
+        assert_eq!(h.count(), 1);
+        assert!(h.min() >= 1_000_000, "a 2ms sleep must record >= 1ms: {}", h.min());
+        assert_eq!(snap.hist("span.unit.dynamic_ns").unwrap().count(), 1);
+        crate::obs::set_enabled(false);
+        Registry::global().clear();
+    }
+}

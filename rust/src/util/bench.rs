@@ -8,12 +8,19 @@
 //! together with derived scalar metrics (speedups, point rates), which is
 //! what the `dse` bench uses to emit `BENCH_dse.json` for the CI
 //! bench-smoke gate and for tracking DSE throughput across commits.
+//!
+//! Samples land in an [`obs::Histogram`](crate::obs::Histogram) — the same
+//! log2-bucketed structure the observability registry uses — so a bench
+//! result carries its full distribution (the `hist` JSON key, additive on
+//! top of the original scalar keys) instead of just point summaries.
+//! p50/p95 come from the histogram's quantiles; mean and (population)
+//! stddev come from exact running sums, matching `util::stats` semantics.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use crate::obs::Histogram;
 use crate::util::json::{obj, Json};
-use crate::util::stats;
 
 /// One benchmark's collected timing summary (nanoseconds per iteration).
 #[derive(Debug, Clone)]
@@ -24,10 +31,14 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p95_ns: f64,
     pub stddev_ns: f64,
+    /// Full sample distribution (one entry per timing sample, ns/iter).
+    pub hist: Histogram,
 }
 
 impl BenchResult {
-    /// Machine-readable form (all timings in ns/iter, as measured).
+    /// Machine-readable form (all timings in ns/iter, as measured). The
+    /// scalar keys predate `hist` and stay as-is so existing BENCH_*.json
+    /// consumers keep parsing.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("name", self.name.as_str().into()),
@@ -36,6 +47,7 @@ impl BenchResult {
             ("p50_ns", self.p50_ns.into()),
             ("p95_ns", self.p95_ns.into()),
             ("stddev_ns", self.stddev_ns.into()),
+            ("hist", self.hist.to_json()),
         ])
     }
 
@@ -101,27 +113,40 @@ impl Bench {
         let per_iter = wstart.elapsed().as_secs_f64() / wit as f64;
         // Batch so each sample is >= ~50µs to defeat timer quantization.
         let batch = ((50e-6 / per_iter.max(1e-12)).ceil() as u64).max(1);
-        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut hist = Histogram::new();
+        let (mut sum_ns, mut sumsq_ns) = (0.0_f64, 0.0_f64);
+        let mut samples = 0usize;
         let mstart = Instant::now();
         let mut total_iters = 0u64;
-        while mstart.elapsed() < self.measure || samples_ns.len() < 10 {
+        while mstart.elapsed() < self.measure || samples < 10 {
             let t = Instant::now();
             for _ in 0..batch {
                 std::hint::black_box(f());
             }
-            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            hist.record(ns.max(0.0).round() as u64);
+            sum_ns += ns;
+            sumsq_ns += ns * ns;
+            samples += 1;
             total_iters += batch;
-            if samples_ns.len() > 100_000 {
+            if samples > 100_000 {
                 break;
             }
         }
+        let n = samples as f64;
+        let mean_ns = sum_ns / n;
+        // Population stddev (what `util::stats::stddev` computes), from the
+        // exact running sums; 0 below two samples, like `stats::stddev`.
+        let stddev_ns =
+            if samples < 2 { 0.0 } else { (sumsq_ns / n - mean_ns * mean_ns).max(0.0).sqrt() };
         let res = BenchResult {
             name: name.to_string(),
             iters: total_iters,
-            mean_ns: stats::mean(&samples_ns),
-            p50_ns: stats::percentile(&samples_ns, 50.0),
-            p95_ns: stats::percentile(&samples_ns, 95.0),
-            stddev_ns: stats::stddev(&samples_ns),
+            mean_ns,
+            p50_ns: hist.quantile(50.0),
+            p95_ns: hist.quantile(95.0),
+            stddev_ns,
+            hist,
         };
         println!("{}", res.report_line());
         self.results.push(res);

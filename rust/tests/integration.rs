@@ -172,13 +172,13 @@ fn serve_smoke_jsonl_through_engine() {
             .find(|r| r.is_error())
             .map(|r| r.to_json().to_string())
     );
-    assert_eq!(outcome.ok, 4);
+    assert_eq!(outcome.ok, 5);
     let types: Vec<String> = outcome
         .responses
         .iter()
         .map(|r| r.to_json().get("type").unwrap().as_str().unwrap().to_string())
         .collect();
-    assert_eq!(types, ["predict", "simulate_fine", "sweep", "build"]);
+    assert_eq!(types, ["predict", "simulate_fine", "sweep", "build", "stats"]);
     // Every response is a single parseable JSONL line with content.
     for r in &outcome.responses {
         let line = r.to_json().to_string();
@@ -186,9 +186,118 @@ fn serve_smoke_jsonl_through_engine() {
         Json::parse(&line).expect("response line parses back as JSON");
     }
     // The build line carries survivors and cache accounting.
-    let build = outcome.responses.last().unwrap().to_json();
+    let build = outcome.responses[3].to_json();
     assert!(!build.get("survivors").unwrap().as_arr().unwrap().is_empty());
     assert!(build.get("dse_cache").is_some());
+    // The stats line answers even without instrumentation enabled: cache
+    // counters are always live, the metrics section is just empty-ish.
+    let stats = outcome.responses[4].to_json();
+    assert!(stats.get("cache").unwrap().get("misses").is_some());
+    assert!(stats.get("metrics").unwrap().get("counters").is_some());
+    // One stat per line, with the right kinds.
+    let kinds: Vec<&str> = outcome.line_stats.iter().map(|s| s.kind).collect();
+    assert_eq!(kinds, ["predict", "simulate_fine", "sweep", "build", "stats"]);
+}
+
+/// Serializes the tests that toggle the process-global instrumentation
+/// flag, so their off-legs cannot observe another test's on-state.
+static OBS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn serve_stats_reports_pipeline_telemetry() {
+    // The issue's acceptance path: a JSONL session whose last line is
+    // {"type":"stats"} must report per-request-kind latency histograms,
+    // cache totals, and per-move accept counters after a build.
+    let _guard = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    autodnnchip::obs::set_enabled(true);
+    let engine = Engine::builder().isolated_cache().build();
+    let text = "{\"type\":\"build\",\"model\":\"sdn_gaze\",\"backend\":\"fpga\",\"n2\":1,\"n_opt\":1}\n\
+                {\"type\":\"stats\"}\n";
+    let outcome = api::serve_lines(&engine, text);
+    autodnnchip::obs::set_enabled(false);
+    assert_eq!(outcome.failed, 0, "{:?}", outcome.responses[0].to_json().to_string());
+    assert_eq!(outcome.ok, 2);
+
+    let stats = outcome.responses[1].to_json();
+    assert_eq!(stats.get("type").unwrap().as_str().unwrap(), "stats");
+    assert_eq!(stats.get("enabled").unwrap().as_bool().unwrap(), true);
+    let counters = stats.get("metrics").unwrap().get("counters").unwrap();
+    assert!(
+        counters.get("stage1.points_evaluated").unwrap().as_f64().unwrap() > 0.0,
+        "stage-1 sweep counters must be nonzero after a build"
+    );
+    assert!(counters.get("engine.requests.build").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(counters.get("dse_cache.insertions").unwrap().as_f64().unwrap() > 0.0);
+    // Per-request-kind latency histogram for the build that just ran.
+    let hists = stats.get("metrics").unwrap().get("histograms").unwrap();
+    let build_hist = hists.get("span.engine.request.build_ns").expect("build latency histogram");
+    assert!(build_hist.get("count").unwrap().as_f64().unwrap() >= 1.0);
+    // Per-move verdict counters are pre-registered by stage 2, so every
+    // registered move shows up — and something must have been proposed.
+    let move_counters: Vec<(&String, f64)> = counters
+        .as_obj()
+        .unwrap()
+        .iter()
+        .filter(|(k, _)| k.starts_with("stage2.move."))
+        .map(|(k, v)| (k, v.as_f64().unwrap()))
+        .collect();
+    assert!(
+        move_counters.iter().any(|(k, _)| k.ends_with(".proposed")),
+        "per-move proposed counters missing"
+    );
+    assert!(
+        move_counters.iter().any(|(k, _)| k.ends_with(".accepted")),
+        "per-move accepted counters missing"
+    );
+    assert!(
+        move_counters.iter().filter(|(k, _)| k.ends_with(".proposed")).any(|&(_, v)| v > 0.0),
+        "a stage-2 refinement must propose at least one move"
+    );
+}
+
+#[test]
+fn result_json_metrics_section_is_file_only() {
+    // With instrumentation on, the on-disk result.json gains a "metrics"
+    // section — but the in-memory document (which backs every serve
+    // response line) must stay byte-identical to the uninstrumented run.
+    let _guard = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = std::env::temp_dir().join(format!("obs_result_{}", std::process::id()));
+    let cfg = RunConfig {
+        model: "sdn_smile".to_string(),
+        model_json: None,
+        spec: Spec::ultra96_object_detection(),
+        n2: 1,
+        n_opt: 1,
+        moves: MoveSetChoice::Legacy,
+        out_dir: Some(dir.to_string_lossy().into_owned()),
+        rtl_out: None,
+    };
+    let run_leg = |on: bool| {
+        // Fresh engine + isolated cache per leg, so cold/warm cache
+        // accounting cannot explain a difference between the documents.
+        let engine = Engine::builder().isolated_cache().build();
+        autodnnchip::obs::set_enabled(on);
+        let s = engine.run(&cfg).expect("build");
+        autodnnchip::obs::set_enabled(false);
+        let file = std::fs::read_to_string(dir.join("result.json")).expect("result.json written");
+        (s.result_json.to_string(), file)
+    };
+    let (off_doc, off_file) = run_leg(false);
+    let (on_doc, on_file) = run_leg(true);
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(off_doc, on_doc, "in-memory result_json must ignore instrumentation");
+    assert!(!off_doc.contains("\"metrics\""));
+    assert!(Json::parse(&off_file).unwrap().get("metrics").is_none());
+    let metrics = Json::parse(&on_file)
+        .unwrap()
+        .get("metrics")
+        .cloned()
+        .expect("instrumented run's result.json file carries a metrics section");
+    assert!(
+        metrics.get("counters").unwrap().get("stage1.sweeps").unwrap().as_f64().unwrap() >= 1.0
+    );
+    assert!(metrics.get("histograms").unwrap().get("span.stage1.sweep_ns").is_some());
 }
 
 #[test]

@@ -766,3 +766,47 @@ fn prop_build_accelerator_respects_n_opt() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_instrumentation_off_byte_identical() {
+    // The observability layer's core contract: flipping instrumentation on
+    // changes NO pipeline output — every counter bump and span lands in
+    // the side registry, never in the data path. Full builds across
+    // backend × move-set combinations must produce Debug-identical
+    // outputs with obs off and on. (Other tests in this binary neither
+    // read nor toggle the flag, so the toggle here cannot perturb them —
+    // which is itself the property under test.)
+    let pool = Pool::new(2);
+    let models = zoo::shidiannao_benchmarks();
+    let cases = [
+        (Spec::ultra96_object_detection(), MoveSetChoice::Legacy),
+        (Spec::ultra96_object_detection(), MoveSetChoice::Full),
+        (Spec::asic_vision(), MoveSetChoice::Legacy),
+        (Spec::asic_vision(), MoveSetChoice::Full),
+    ];
+    for (i, (spec, choice)) in cases.iter().enumerate() {
+        let m = &models[i % models.len()];
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let moves = Arc::new(match choice {
+            MoveSetChoice::Legacy => MoveSet::legacy(),
+            MoveSetChoice::Full => MoveSet::full(m, spec),
+        });
+        let run = |on: bool| {
+            autodnnchip::obs::set_enabled(on);
+            let cache = Arc::new(DseCache::new());
+            let out = build_accelerator_with_moves(m, spec, &grid, 2, 1, &pool, &cache, &moves);
+            autodnnchip::obs::set_enabled(false);
+            match out {
+                Ok(o) => format!("{o:?}"),
+                Err(e) => format!("err: {e:#}"),
+            }
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(
+            off, on,
+            "instrumentation changed the build output (case {i}: {:?} moves on {:?})",
+            choice, spec.backend
+        );
+    }
+}
