@@ -10,6 +10,10 @@
 //! measured samples compare warm serving). The CI bench-smoke job runs
 //! this with `BENCH_QUICK=1 BENCH_ENGINE_TINY=1` and uploads the JSON as
 //! an artifact. Full mode batches the fig13 10-variant SkyNet set.
+//!
+//! This suite measures warm serving *within one process*; the companion
+//! `benches/restart.rs` measures the same cache warm *across restarts* —
+//! real process boundaries with `sweep --cache-dir` persistence.
 
 use std::path::Path;
 
@@ -29,6 +33,7 @@ fn cfg_for(model: &str) -> RunConfig {
         moves: MoveSetChoice::Full,
         out_dir: None,
         rtl_out: None,
+        cache_dir: None,
     }
 }
 

@@ -1,0 +1,123 @@
+//! Warm-across-restarts benchmark: the persistent DSE cache measured with
+//! real process boundaries. Each iteration spawns the actual
+//! `autodnnchip` binary (`CARGO_BIN_EXE_autodnnchip`) running
+//! `sweep --cache-dir DIR`, so the warm leg is a genuine restart — the
+//! process that populated the cache is dead, and the rerun pays shard
+//! load + lookup instead of the cold analytical sweep. Compare
+//! `benches/engine.rs`, which measures warm serving *within* one process.
+//!
+//! Emits `BENCH_restart.json` (override with `BENCH_RESTART_JSON=path`)
+//! and exits non-zero when the warm restart is not faster than the cold
+//! sweep by `BENCH_RESTART_MIN_SPEEDUP` (default 1.0). The CI
+//! `bench-restart` leg runs this with `BENCH_QUICK=1` and uploads the
+//! JSON as an artifact.
+
+use std::path::Path;
+use std::process::Command;
+
+use autodnnchip::util::bench::Bench;
+use autodnnchip::util::json::Json;
+
+const MODEL: &str = "sdn_smile";
+const N2: &str = "2";
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_autodnnchip")
+}
+
+/// Run one `sweep --cache-dir` in a fresh process; returns the parsed
+/// sweep response from stdout.
+fn run_sweep(cache_dir: &Path) -> Json {
+    let out = Command::new(bin())
+        .args(["sweep", "--model", MODEL, "--n2", N2, "--cache-dir"])
+        .arg(cache_dir)
+        .output()
+        .expect("spawn autodnnchip sweep");
+    assert!(
+        out.status.success(),
+        "sweep failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(&String::from_utf8_lossy(&out.stdout)).expect("sweep prints JSON")
+}
+
+fn counter(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("restart");
+
+    let base = std::env::temp_dir().join(format!("adc_restart_{}", std::process::id()));
+    let cold_dir = base.join("cold");
+    let warm_dir = base.join("warm");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // Populate the warm directory once, in its own process — which then
+    // exits. Everything the warm leg reuses crossed a process boundary.
+    let seed = run_sweep(&warm_dir);
+    assert_eq!(counter(&seed, "cache_hits"), 0.0, "seed sweep must start cold");
+
+    // Cold leg: an emptied cache dir every iteration — the restart price
+    // without persistence.
+    let cold_ns = b
+        .run("sweep_cold_restart", || {
+            let _ = std::fs::remove_dir_all(&cold_dir);
+            let j = run_sweep(&cold_dir);
+            counter(&j, "evaluated") as u64
+        })
+        .mean_ns;
+
+    // Warm leg: same sweep, same process boundary, shards present.
+    let mut warm_hits = -1.0;
+    let mut warm_misses = -1.0;
+    let warm_ns = b
+        .run("sweep_warm_restart", || {
+            let j = run_sweep(&warm_dir);
+            warm_hits = counter(&j, "cache_hits");
+            warm_misses = counter(&j, "cache_misses");
+            counter(&j, "evaluated") as u64
+        })
+        .mean_ns;
+    assert!(warm_hits > 0.0, "warm restart reported no cache hits");
+    assert_eq!(warm_misses, 0.0, "warm restart re-predicted {warm_misses} points");
+
+    let speedup = cold_ns / warm_ns.max(1.0);
+    println!(
+        "\n  warm restart vs cold sweep ({MODEL}, separate processes): {:.2}x \
+         ({:.2} ms vs {:.2} ms), {} hits / {} misses",
+        speedup,
+        warm_ns / 1e6,
+        cold_ns / 1e6,
+        warm_hits,
+        warm_misses
+    );
+
+    let path =
+        std::env::var("BENCH_RESTART_JSON").unwrap_or_else(|_| "BENCH_restart.json".to_string());
+    let derived = [
+        ("cold_sweep_ns", cold_ns),
+        ("warm_sweep_ns", warm_ns),
+        ("restart_speedup", speedup),
+        ("warm_cache_hits", warm_hits),
+        ("warm_cache_misses", warm_misses),
+    ];
+    b.write_json(Path::new(&path), "restart", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // Gate: restarting with a persistent cache must beat re-sweeping cold —
+    // the whole point of making the cache durable.
+    let min_speedup: f64 = std::env::var("BENCH_RESTART_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    if speedup < min_speedup {
+        eprintln!(
+            "FAIL: warm restart ({warm_ns:.0} ns) is not >= {min_speedup}x faster than the \
+             cold sweep ({cold_ns:.0} ns)"
+        );
+        std::process::exit(1);
+    }
+}

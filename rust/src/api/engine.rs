@@ -9,7 +9,7 @@
 //! requests) — the crate's batch/serving mode.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -59,6 +59,7 @@ pub struct EngineBuilder {
     workers: Option<usize>,
     cache: CacheChoice,
     batch_width: Option<usize>,
+    cache_dir: Option<PathBuf>,
 }
 
 impl Default for EngineBuilder {
@@ -69,7 +70,12 @@ impl Default for EngineBuilder {
 
 impl EngineBuilder {
     pub fn new() -> EngineBuilder {
-        EngineBuilder { workers: None, cache: CacheChoice::Global, batch_width: None }
+        EngineBuilder {
+            workers: None,
+            cache: CacheChoice::Global,
+            batch_width: None,
+            cache_dir: None,
+        }
     }
 
     /// Worker-pool size (default: machine-sized, see
@@ -99,6 +105,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Persist the DSE cache in `dir`: shards found there are loaded when
+    /// the engine is built (stale or corrupt ones skipped with a warning,
+    /// never an abort), and the cache is saved back when the engine drops
+    /// (plus periodically during `serve`). Multiple machines' directories
+    /// can be pooled — shards merge losslessly, see
+    /// [`DseCache::merge`](crate::builder::DseCache::merge).
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> EngineBuilder {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
     pub fn build(self) -> Engine {
         let pool = match self.workers {
             Some(n) => Pool::new(n),
@@ -110,10 +127,20 @@ impl EngineBuilder {
             CacheChoice::Explicit(c) => c,
         };
         let batch_width = self.batch_width.unwrap_or_else(|| pool.workers()).max(1);
+        if let Some(dir) = &self.cache_dir {
+            cache.load_dir(dir);
+        }
         // The legacy registry is model/spec-independent: resolve it once
         // per engine. The full registry is tailored per (model, spec) at
         // request time.
-        Engine { pool, cache, legacy_moves: Arc::new(MoveSet::legacy()), batch_width }
+        Engine {
+            pool,
+            cache,
+            legacy_moves: Arc::new(MoveSet::legacy()),
+            batch_width,
+            cache_dir: self.cache_dir,
+            last_flush: Mutex::new(Instant::now()),
+        }
     }
 }
 
@@ -125,6 +152,20 @@ pub struct Engine {
     cache: Arc<DseCache>,
     legacy_moves: Arc<MoveSet>,
     batch_width: usize,
+    /// Directory for the persistent cache: loaded at build, saved on drop
+    /// and by the periodic serve-loop flush. `None` = in-memory only.
+    cache_dir: Option<PathBuf>,
+    last_flush: Mutex<Instant>,
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Best-effort save-on-drop: a full disk or unwritable directory
+        // costs warm restarts, never the session's results.
+        if let Err(e) = self.flush_cache() {
+            eprintln!("warning: failed to save DSE cache: {e:#}");
+        }
+    }
 }
 
 impl Engine {
@@ -140,6 +181,41 @@ impl Engine {
     /// The engine's DSE cache.
     pub fn cache(&self) -> &Arc<DseCache> {
         &self.cache
+    }
+
+    /// The persistent cache directory, when one was configured.
+    pub fn cache_dir(&self) -> Option<&Path> {
+        self.cache_dir.as_deref()
+    }
+
+    /// Save the cache to the configured directory now (no-op without one).
+    pub fn flush_cache(&self) -> Result<()> {
+        if let Some(dir) = &self.cache_dir {
+            self.cache.save_dir(dir)?;
+        }
+        Ok(())
+    }
+
+    /// Throttled flush for long-lived serving loops: saves at most once
+    /// per `FLUSH_EVERY`, so a killed `serve` process loses at most a few
+    /// seconds of warm entries. Errors are downgraded to a warning — the
+    /// cache only accelerates.
+    pub(crate) fn maybe_flush_cache(&self) {
+        const FLUSH_EVERY: Duration = Duration::from_secs(5);
+        if self.cache_dir.is_none() {
+            return;
+        }
+        {
+            let mut last =
+                self.last_flush.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            if last.elapsed() < FLUSH_EVERY {
+                return;
+            }
+            *last = Instant::now();
+        }
+        if let Err(e) = self.flush_cache() {
+            eprintln!("warning: periodic DSE cache flush failed: {e:#}");
+        }
     }
 
     /// Route one request to the matching flow.
@@ -205,7 +281,20 @@ impl Engine {
     /// pickup). The serving loop uses this for `serve --verbose` per-line
     /// latencies; a slot that was never served reports `Duration::ZERO`.
     pub fn submit_batch_timed(&self, reqs: Vec<Request>) -> Vec<(Response, Duration)> {
-        self.fan_out_batch(reqs)
+        self.fan_out_batch(reqs, None)
+    }
+
+    /// [`Engine::submit_batch_timed`] that additionally invokes `each` on
+    /// the caller's thread as every request *completes* — in completion
+    /// order, not request order, tagged with the request's index. This is
+    /// the streaming hook `serve` uses to emit responses while the batch
+    /// is still running; the returned vector is still request-ordered.
+    pub fn submit_batch_timed_each(
+        &self,
+        reqs: Vec<Request>,
+        each: &mut dyn FnMut(usize, &Response, Duration),
+    ) -> Vec<(Response, Duration)> {
+        self.fan_out_batch(reqs, Some(each))
     }
 
     fn submit_batch_at(&self, reqs: Vec<Request>, fan_out: bool) -> Vec<Response> {
@@ -218,7 +307,7 @@ impl Engine {
             // and re-counting the parent slot's wait would double-book it.
             return reqs.into_iter().map(|req| self.serve_one(req, false)).collect();
         }
-        self.fan_out_batch(reqs).into_iter().map(|(resp, _)| resp).collect()
+        self.fan_out_batch(reqs, None).into_iter().map(|(resp, _)| resp).collect()
     }
 
     /// The top-level batch fan-out: `batch_width` slot threads pull the
@@ -231,7 +320,15 @@ impl Engine {
     /// wait (batch start → slot pickup, `engine.batch.queue_wait_ns`) and
     /// execute time (`engine.batch.exec_ns`); per-slot busy totals land in
     /// `engine.batch.slot_busy_ns` for occupancy analysis.
-    fn fan_out_batch(&self, reqs: Vec<Request>) -> Vec<(Response, Duration)> {
+    ///
+    /// `each` (when given) fires on the caller's thread as completions
+    /// drain off the channel — while slot threads are still serving later
+    /// requests — which is what lets `serve` stream.
+    fn fan_out_batch(
+        &self,
+        reqs: Vec<Request>,
+        mut each: Option<&mut dyn FnMut(usize, &Response, Duration)>,
+    ) -> Vec<(Response, Duration)> {
         let n = reqs.len();
         let observing = obs::enabled();
         if observing {
@@ -243,6 +340,7 @@ impl Engine {
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, Response, Duration)>();
         let batch_start = Instant::now();
+        let mut out: Vec<Option<(Response, Duration)>> = (0..n).map(|_| None).collect();
         thread::scope(|s| {
             for _ in 0..self.batch_width.min(n).max(1) {
                 let tx = tx.clone();
@@ -288,16 +386,29 @@ impl Engine {
                     }
                 });
             }
+            // Drain completions on the caller's thread while the slot
+            // threads are still serving: dropping the original sender
+            // first means the iterator ends exactly when the last slot
+            // thread hangs up its clone.
+            drop(tx);
+            for (i, resp, took) in rx {
+                if let Some(cb) = each.as_mut() {
+                    cb(i, &resp, took);
+                }
+                out[i] = Some((resp, took));
+            }
         });
-        drop(tx);
-        let mut out: Vec<Option<(Response, Duration)>> = (0..n).map(|_| None).collect();
-        for (i, resp, took) in rx {
-            out[i] = Some((resp, took));
-        }
         out.into_iter()
-            .map(|r| {
+            .enumerate()
+            .map(|(i, r)| {
                 r.unwrap_or_else(|| {
-                    (Response::error("request slot was never served"), Duration::ZERO)
+                    let filler =
+                        (Response::error("request slot was never served"), Duration::ZERO);
+                    // Stream consumers still see every slot exactly once.
+                    if let Some(cb) = each.as_mut() {
+                        cb(i, &filler.0, filler.1);
+                    }
+                    filler
                 })
             })
             .collect()
@@ -322,7 +433,9 @@ impl Engine {
         let _run_span = obs::span("engine.run");
         let model = cfg.resolve_model()?;
         let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        self.load_request_cache_dir(cfg);
         let build = self.build_with(&model, &cfg.spec, &grid, cfg.n2, cfg.n_opt, cfg.moves)?;
+        self.save_request_cache_dir(cfg);
 
         let mut designs = Vec::new();
         for (rank, cand) in build.survivors.iter().enumerate() {
@@ -502,11 +615,32 @@ impl Engine {
         })
     }
 
+    /// Load shards named by a request-level `cache_dir` (the `--cache-dir`
+    /// CLI flag and the `cache_dir` config key both land here). Loading
+    /// into an already-warm cache is a cheap no-clobber union.
+    fn load_request_cache_dir(&self, cfg: &RunConfig) {
+        if let Some(dir) = &cfg.cache_dir {
+            self.cache.load_dir(Path::new(dir));
+        }
+    }
+
+    /// Save back to the request-level `cache_dir`, warn-only: persistence
+    /// failures cost warm restarts, never the run's results.
+    fn save_request_cache_dir(&self, cfg: &RunConfig) {
+        if let Some(dir) = &cfg.cache_dir {
+            if let Err(e) = self.cache.save_dir(Path::new(dir)) {
+                eprintln!("warning: failed to save DSE cache to '{dir}': {e:#}");
+            }
+        }
+    }
+
     fn sweep(&self, s: &SweepRequest) -> Result<SweepResponse> {
         let cfg = &s.0;
         let model = cfg.resolve_model()?;
         let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        self.load_request_cache_dir(cfg);
         let out = self.sweep_with(&model, &cfg.spec, &grid, cfg.n2)?;
+        self.save_request_cache_dir(cfg);
         Ok(SweepResponse {
             model: model.name,
             evaluated: out.evaluated,

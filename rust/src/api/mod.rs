@@ -33,4 +33,7 @@ pub use response::{
     BuildResponse, ErrorResponse, PredictResponse, Response, SimulateFineResponse, StatsResponse,
     SweepResponse, SweepSelection,
 };
-pub use serve::{serve_lines, serve_path, write_jsonl, LineStat, ServeOutcome};
+pub use serve::{
+    serve_lines, serve_lines_with, serve_path, serve_path_with, write_jsonl, LineStat,
+    ServeOutcome,
+};

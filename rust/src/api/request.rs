@@ -280,6 +280,7 @@ mod tests {
             moves: MoveSetChoice::Legacy,
             out_dir: Some("results/x".to_string()),
             rtl_out: None,
+            cache_dir: None,
         }
     }
 

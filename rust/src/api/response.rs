@@ -187,6 +187,11 @@ impl Response {
                         ("entries", s.cache.entries.into()),
                         ("hits", s.cache.hits.into()),
                         ("misses", s.cache.misses.into()),
+                        ("shards_loaded", s.cache.shards_loaded.into()),
+                        ("entries_loaded", s.cache.entries_loaded.into()),
+                        ("load_errors", s.cache.load_errors.into()),
+                        ("stale_shards", s.cache.stale_shards.into()),
+                        ("saves", s.cache.saves.into()),
                     ]),
                 ),
                 ("metrics", s.metrics.to_json()),

@@ -5,6 +5,18 @@
 //! that fails to parse — or a request that errors or panics — becomes an
 //! in-place `{"type":"error",...}` response instead of aborting the
 //! stream, which is what a serving front door must do.
+//!
+//! # Streaming ordering contract
+//!
+//! Serving is *order-preserving via sequence-tagged reassembly*: requests
+//! execute concurrently (completion order is whatever the batch slots
+//! produce), but [`serve_lines_with`]'s sink — and therefore the CLI's
+//! stdout — always emits responses in request order, each line flushed as
+//! soon as every earlier line has finished. A slow `Build` still delays
+//! the lines *behind* it (that is what "in order" means), but everything
+//! already complete ahead of it streams out immediately instead of
+//! waiting for the whole batch, and the emitted byte stream is identical
+//! to the pre-streaming lockstep output.
 
 use std::path::Path;
 
@@ -43,10 +55,82 @@ pub struct ServeOutcome {
 /// [`Engine::submit_batch_timed`], and weave parse failures back in as
 /// in-place error responses.
 pub fn serve_lines(engine: &Engine, text: &str) -> ServeOutcome {
+    serve_lines_with(engine, text, None)
+}
+
+/// Emit the longest fully-finished prefix of lines to the sink — the
+/// sequence-tagged reassembly step of the streaming ordering contract
+/// (see the module docs).
+fn emit_ready(
+    slots: &[Option<(Response, LineStat)>],
+    cursor: &mut usize,
+    sink: &mut Option<&mut dyn FnMut(usize, &Response, &LineStat)>,
+) {
+    while let Some(Some((resp, stat))) = slots.get(*cursor) {
+        if let Some(cb) = sink.as_mut() {
+            cb(*cursor, resp, stat);
+        }
+        *cursor += 1;
+    }
+}
+
+/// [`serve_lines`] with a streaming sink: `sink(line_index, response,
+/// stat)` fires on the caller's thread, in request order, as soon as that
+/// line and every line before it have finished — while later requests are
+/// still executing. The persistent cache (when the engine has a
+/// `cache_dir`) is flushed periodically as completions drain, so a killed
+/// serve process keeps most of its warm entries.
+pub fn serve_lines_with(
+    engine: &Engine,
+    text: &str,
+    mut sink: Option<&mut dyn FnMut(usize, &Response, &LineStat)>,
+) -> ServeOutcome {
     let parsed: Vec<Result<Request, String>> = jsonl_entries(text).collect();
-    let requests: Vec<Request> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
-    let kinds: Vec<&'static str> = requests.iter().map(|r| r.kind()).collect();
-    let mut served = engine.submit_batch_timed(requests).into_iter().zip(kinds);
+    let streaming = sink.is_some();
+
+    // Line slots for reassembly: parse errors are complete immediately;
+    // request lines fill in as batch completions arrive.
+    let mut slots: Vec<Option<(Response, LineStat)>> = Vec::with_capacity(parsed.len());
+    let mut line_of_batch: Vec<usize> = Vec::new();
+    let mut requests: Vec<Request> = Vec::new();
+    let mut kinds: Vec<&'static str> = Vec::new();
+    for (li, r) in parsed.iter().enumerate() {
+        match r {
+            Ok(req) => {
+                line_of_batch.push(li);
+                kinds.push(req.kind());
+                requests.push(req.clone());
+                slots.push(None);
+            }
+            Err(msg) => slots.push(Some((
+                Response::error(msg.clone()),
+                LineStat { kind: "parse_error", latency_ms: 0.0 },
+            ))),
+        }
+    }
+
+    let mut cursor = 0usize;
+    emit_ready(&slots, &mut cursor, &mut sink); // leading parse errors
+    let served = {
+        let slots = &mut slots;
+        let cursor = &mut cursor;
+        let sink = &mut sink;
+        let (line_of_batch, kinds) = (&line_of_batch, &kinds);
+        engine.submit_batch_timed_each(requests, &mut |bi, resp, took| {
+            if streaming {
+                slots[line_of_batch[bi]] = Some((
+                    resp.clone(),
+                    LineStat { kind: kinds[bi], latency_ms: took.as_secs_f64() * 1.0e3 },
+                ));
+                emit_ready(slots, cursor, sink);
+            }
+            engine.maybe_flush_cache();
+        })
+    };
+
+    // Assemble the request-ordered outcome from the batch's own ordered
+    // return (no clones on this path).
+    let mut served = served.into_iter().zip(kinds);
     let mut responses: Vec<Response> = Vec::with_capacity(parsed.len());
     let mut line_stats: Vec<LineStat> = Vec::with_capacity(parsed.len());
     for r in parsed {
@@ -70,9 +154,18 @@ pub fn serve_lines(engine: &Engine, text: &str) -> ServeOutcome {
 
 /// [`serve_lines`] over a JSONL file on disk.
 pub fn serve_path(engine: &Engine, path: &Path) -> Result<ServeOutcome> {
+    serve_path_with(engine, path, None)
+}
+
+/// [`serve_lines_with`] over a JSONL file on disk.
+pub fn serve_path_with(
+    engine: &Engine,
+    path: &Path,
+    sink: Option<&mut dyn FnMut(usize, &Response, &LineStat)>,
+) -> Result<ServeOutcome> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading request stream '{}'", path.display()))?;
-    Ok(serve_lines(engine, &text))
+    Ok(serve_lines_with(engine, &text, sink))
 }
 
 /// Write responses as JSONL (one compact JSON object per line).

@@ -17,15 +17,34 @@
 //! (cached values are immutable once inserted, so a poisoned guard holds
 //! no torn state).
 //!
+//! Persistence: [`DseCache::save_dir`] / [`DseCache::load_dir`] serialize
+//! the table as one JSON file per in-memory shard, content-addressed by
+//! the stable FNV fingerprints the keys already carry plus a
+//! schema/cost-model stamp ([`cache_stamp`]) folding every registered
+//! [`Technology::stable_hash`](crate::ip::Technology::stable_hash), so a
+//! stale or foreign shard is skipped — with a stderr warning and a
+//! counter — never misread. Writes go to a temp file and rename into
+//! place, so concurrent writers and killed processes cannot leave torn
+//! shards; [`DseCache::merge`] unions caches losslessly (commutative and
+//! idempotent on contents — shards from different machines fold in any
+//! order). The cache only ever accelerates: a corrupted shard changes
+//! timing, never results.
+//!
 //! [`Spec`]: super::Spec
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
+use anyhow::{anyhow, bail, Context, Result};
+
 use crate::dnn::Model;
-use crate::predictor::CoarseReport;
+use crate::ip::tech;
+use crate::predictor::{CoarseReport, Resources};
 use crate::templates::{HwConfig, TemplateId};
+use crate::util::hash::Fnv64;
+use crate::util::json::{obj, Json};
 
 /// Shard count (power of two; bounded lock contention at pool sizes ≤ 8).
 const SHARDS: usize = 16;
@@ -97,6 +116,16 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub entries: usize,
+    /// Shard files successfully loaded by [`DseCache::load_dir`].
+    pub shards_loaded: u64,
+    /// Entries those shard files carried.
+    pub entries_loaded: u64,
+    /// Unreadable (corrupt/truncated) shard files skipped during loads.
+    pub load_errors: u64,
+    /// Stamp-mismatched (stale schema or cost model) shard files skipped.
+    pub stale_shards: u64,
+    /// Completed [`DseCache::save_dir`] calls.
+    pub saves: u64,
 }
 
 /// Thread-safe, sharded memo table for coarse predictions.
@@ -104,6 +133,11 @@ pub struct DseCache {
     shards: Vec<Mutex<HashMap<CacheKey, CachedPrediction>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    shards_loaded: AtomicU64,
+    entries_loaded: AtomicU64,
+    load_errors: AtomicU64,
+    stale_shards: AtomicU64,
+    saves: AtomicU64,
 }
 
 impl Default for DseCache {
@@ -118,6 +152,11 @@ impl DseCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            shards_loaded: AtomicU64::new(0),
+            entries_loaded: AtomicU64::new(0),
+            load_errors: AtomicU64::new(0),
+            stale_shards: AtomicU64::new(0),
+            saves: AtomicU64::new(0),
         }
     }
 
@@ -216,16 +255,433 @@ impl DseCache {
         }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.shards_loaded.store(0, Ordering::Relaxed);
+        self.entries_loaded.store(0, Ordering::Relaxed);
+        self.load_errors.store(0, Ordering::Relaxed);
+        self.stale_shards.store(0, Ordering::Relaxed);
+        self.saves.store(0, Ordering::Relaxed);
     }
 
-    /// Cumulative hit/miss counters plus current size.
+    /// Cumulative hit/miss/persistence counters plus current size.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             entries: self.len(),
+            shards_loaded: self.shards_loaded.load(Ordering::Relaxed),
+            entries_loaded: self.entries_loaded.load(Ordering::Relaxed),
+            load_errors: self.load_errors.load(Ordering::Relaxed),
+            stale_shards: self.stale_shards.load(Ordering::Relaxed),
+            saves: self.saves.load(Ordering::Relaxed),
         }
     }
+
+    /// Serialize every non-empty shard to `dir/shard-NN.json`. Each file is
+    /// written to a temp name and renamed into place, so a concurrent
+    /// reader (or a process killed mid-save) never observes a torn shard.
+    /// Entries are sorted by key before serialization, so save → load →
+    /// save is byte-stable (property-tested).
+    pub fn save_dir(&self, dir: &Path) -> Result<SaveReport> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir '{}'", dir.display()))?;
+        let stamp = format!("{:016x}", cache_stamp());
+        let mut report = SaveReport::default();
+        for si in 0..SHARDS {
+            let mut entries: Vec<(CacheKey, CachedPrediction)> =
+                self.lock_shard(si).iter().map(|(k, v)| (*k, v.clone())).collect();
+            if entries.is_empty() {
+                continue;
+            }
+            entries.sort_by_key(|(k, _)| (k.model_fp, k.template.name(), k.cfg_fp));
+            let doc = obj(vec![
+                ("format", SHARD_FORMAT.into()),
+                ("version", CACHE_SCHEMA_VERSION.into()),
+                ("stamp", stamp.as_str().into()),
+                (
+                    "entries",
+                    Json::Arr(entries.iter().map(|(k, v)| entry_to_json(k, v)).collect()),
+                ),
+            ]);
+            let path = dir.join(format!("shard-{si:02}.json"));
+            write_atomic(&path, &(doc.to_string() + "\n"))?;
+            report.shards_written += 1;
+            report.entries_written += entries.len();
+        }
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            crate::obs::metrics::counter("dse_cache.saves", 1);
+            crate::obs::metrics::counter(
+                "dse_cache.entries_saved",
+                report.entries_written as u64,
+            );
+        }
+        Ok(report)
+    }
+
+    /// Load every `*.json` shard in `dir` (any filename — shards shipped
+    /// from other machines merge losslessly), skipping — with a stderr
+    /// warning and a counter, never an abort — files that are unreadable
+    /// (`load_errors`) or carry a mismatched schema/cost-model stamp
+    /// (`stale_shards`). A missing directory is a cold start, not an
+    /// error. Existing in-memory entries win on key collision; the
+    /// hit/miss counters are untouched.
+    pub fn load_dir(&self, dir: &Path) -> LoadReport {
+        let mut report = LoadReport::default();
+        let Ok(rd) = std::fs::read_dir(dir) else {
+            return report;
+        };
+        let mut paths: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+            .collect();
+        paths.sort();
+        for path in paths {
+            match read_shard_file(&path) {
+                Ok(Some(entries)) => {
+                    report.shards_loaded += 1;
+                    report.entries_loaded += entries.len();
+                    for (k, v) in entries {
+                        self.insert_loaded(k, v);
+                    }
+                }
+                Ok(None) => {
+                    report.stale_shards += 1;
+                    eprintln!(
+                        "warning: skipping stale DSE cache shard '{}' \
+                         (schema/cost-model stamp mismatch)",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    report.load_errors += 1;
+                    eprintln!(
+                        "warning: skipping unreadable DSE cache shard '{}': {e:#}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        self.shards_loaded.fetch_add(report.shards_loaded as u64, Ordering::Relaxed);
+        self.entries_loaded.fetch_add(report.entries_loaded as u64, Ordering::Relaxed);
+        self.load_errors.fetch_add(report.load_errors as u64, Ordering::Relaxed);
+        self.stale_shards.fetch_add(report.stale_shards as u64, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            if report.shards_loaded > 0 {
+                crate::obs::metrics::counter(
+                    "dse_cache.shards_loaded",
+                    report.shards_loaded as u64,
+                );
+                crate::obs::metrics::counter(
+                    "dse_cache.entries_loaded",
+                    report.entries_loaded as u64,
+                );
+            }
+            if report.load_errors > 0 {
+                crate::obs::metrics::counter("dse_cache.load_errors", report.load_errors as u64);
+            }
+            if report.stale_shards > 0 {
+                crate::obs::metrics::counter(
+                    "dse_cache.stale_shards",
+                    report.stale_shards as u64,
+                );
+            }
+        }
+        report
+    }
+
+    /// Union another cache's entries into this one. Existing entries win on
+    /// key collision — the predictor is deterministic, so either choice
+    /// yields the same contents — which makes merging commutative and
+    /// idempotent on contents (property-tested): shards gathered from
+    /// different machines fold in any order. Traffic counters (hits,
+    /// misses, loads, saves) are not transferred; they describe each
+    /// cache's own history.
+    pub fn merge(&self, other: &DseCache) {
+        if std::ptr::eq(self, other) {
+            return;
+        }
+        for si in 0..SHARDS {
+            let entries: Vec<(CacheKey, CachedPrediction)> =
+                other.lock_shard(si).iter().map(|(k, v)| (*k, v.clone())).collect();
+            let mut guard = self.lock_shard(si);
+            for (k, v) in entries {
+                if guard.len() >= SHARD_CAP {
+                    break;
+                }
+                guard.entry(k).or_insert(v);
+            }
+        }
+    }
+
+    /// Insert a restored entry without touching hit/miss/insertion
+    /// telemetry: loading shards restores state, it does not record
+    /// predictor work. No-clobber: a resident entry wins.
+    fn insert_loaded(&self, key: CacheKey, value: CachedPrediction) {
+        let mut guard = self.lock_shard(key.shard());
+        if guard.len() >= SHARD_CAP {
+            return;
+        }
+        guard.entry(key).or_insert(value);
+    }
+}
+
+/// On-disk shard format tag; a file without it is foreign, not stale.
+const SHARD_FORMAT: &str = "autodnnchip.dse_cache";
+
+/// Bump when the shard schema (or the meaning of cached values) changes;
+/// folded into [`cache_stamp`], so old shards read as stale, never as
+/// garbage.
+pub const CACHE_SCHEMA_VERSION: u64 = 1;
+
+/// The schema/cost-model stamp every shard file carries: the schema
+/// version plus every registered technology's
+/// [`stable_hash`](crate::ip::Technology::stable_hash). Editing any cost
+/// table (or bumping the schema) changes the stamp, so on-disk shards
+/// written under the old cost model are skipped as stale instead of
+/// serving predictions that no longer match what the predictor would
+/// compute.
+pub fn cache_stamp() -> u64 {
+    static STAMP: OnceLock<u64> = OnceLock::new();
+    *STAMP.get_or_init(|| {
+        let mut h = Fnv64::with_seed(0x4453_4543_4143_4845); // "DSECACHE"
+        h.write_u64(CACHE_SCHEMA_VERSION);
+        for t in tech::all() {
+            t.stable_hash(&mut h);
+        }
+        h.finish()
+    })
+}
+
+/// What [`DseCache::load_dir`] found (also accumulated into
+/// [`CacheStats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    pub shards_loaded: usize,
+    pub entries_loaded: usize,
+    pub load_errors: usize,
+    pub stale_shards: usize,
+}
+
+/// What [`DseCache::save_dir`] wrote.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SaveReport {
+    pub shards_written: usize,
+    pub entries_written: usize,
+}
+
+/// Write via a temp file in the same directory, then rename into place:
+/// a reader never observes a torn shard, and a crash mid-write leaves the
+/// previous shard intact. The temp name carries the pid so concurrent
+/// savers do not clobber each other's staging files.
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+    std::fs::write(&tmp, text).with_context(|| format!("writing '{}'", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming '{}' into place", path.display()))?;
+    Ok(())
+}
+
+/// Parse one shard file. `Ok(None)` means a well-formed shard with a
+/// mismatched stamp (stale); `Err` means unreadable (corrupt, truncated,
+/// or not a shard at all). Strict on purpose: any malformed entry fails
+/// the whole file — a half-trusted shard is worse than a cold one.
+fn read_shard_file(path: &Path) -> Result<Option<Vec<(CacheKey, CachedPrediction)>>> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    if doc.get("format").and_then(|f| f.as_str()) != Some(SHARD_FORMAT) {
+        bail!("not a DSE cache shard (missing '{SHARD_FORMAT}' format tag)");
+    }
+    let stamp =
+        doc.get("stamp").and_then(|s| s.as_str()).ok_or_else(|| anyhow!("missing stamp"))?;
+    if stamp != format!("{:016x}", cache_stamp()) {
+        return Ok(None);
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow!("missing entries array"))?;
+    let mut out = Vec::with_capacity(entries.len());
+    for e in entries {
+        out.push(entry_from_json(e)?);
+    }
+    Ok(Some(out))
+}
+
+/// Fingerprints are full-width FNV digests: serialize as fixed-width hex
+/// strings (a `Json::Num` is an `f64`, exact only to 2^53).
+fn fp_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn fp_from_json(j: Option<&Json>, what: &str) -> Result<u64> {
+    j.and_then(|v| v.as_str())
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| anyhow!("bad or missing {what} fingerprint"))
+}
+
+fn entry_to_json(key: &CacheKey, value: &CachedPrediction) -> Json {
+    obj(vec![
+        ("model_fp", fp_to_json(key.model_fp)),
+        ("template", key.template.name().into()),
+        ("cfg_fp", fp_to_json(key.cfg_fp)),
+        (
+            "prediction",
+            match value {
+                None => Json::Null,
+                Some(r) => report_to_json(r),
+            },
+        ),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Result<(CacheKey, CachedPrediction)> {
+    let template_name = j
+        .get("template")
+        .and_then(|t| t.as_str())
+        .ok_or_else(|| anyhow!("entry missing template"))?;
+    let template = TemplateId::by_name(template_name)
+        .ok_or_else(|| anyhow!("unknown template '{template_name}'"))?;
+    let key = CacheKey {
+        model_fp: fp_from_json(j.get("model_fp"), "model")?,
+        template,
+        cfg_fp: fp_from_json(j.get("cfg_fp"), "config")?,
+    };
+    let value = match j.get("prediction") {
+        Some(Json::Null) => None,
+        Some(p) => Some(report_from_json(p)?),
+        None => bail!("entry missing prediction"),
+    };
+    Ok((key, value))
+}
+
+fn want_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key).and_then(|v| v.as_u64_lossless()).ok_or_else(|| anyhow!("bad or missing '{key}'"))
+}
+
+fn want_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).and_then(|v| v.as_f64_lossless()).ok_or_else(|| anyhow!("bad or missing '{key}'"))
+}
+
+fn want_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(want_u64(j, key)? as usize)
+}
+
+fn u64_arr(j: &Json, key: &str) -> Result<Vec<u64>> {
+    let arr =
+        j.get(key).and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("bad or missing '{key}'"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        out.push(v.as_u64_lossless().ok_or_else(|| anyhow!("bad entry in '{key}'"))?);
+    }
+    Ok(out)
+}
+
+fn f64_arr(j: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr =
+        j.get(key).and_then(|v| v.as_arr()).ok_or_else(|| anyhow!("bad or missing '{key}'"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        out.push(v.as_f64_lossless().ok_or_else(|| anyhow!("bad entry in '{key}'"))?);
+    }
+    Ok(out)
+}
+
+fn report_to_json(r: &CoarseReport) -> Json {
+    obj(vec![
+        ("energy_pj", Json::f64_lossless(r.energy_pj)),
+        ("dynamic_pj", Json::f64_lossless(r.dynamic_pj)),
+        ("leakage_pj", Json::f64_lossless(r.leakage_pj)),
+        ("latency_cycles", Json::u64_lossless(r.latency_cycles)),
+        ("latency_ms", Json::f64_lossless(r.latency_ms)),
+        (
+            "critical_path",
+            Json::Arr(r.critical_path.iter().map(|&n| Json::u64_lossless(n as u64)).collect()),
+        ),
+        (
+            "per_node_energy_pj",
+            Json::Arr(r.per_node_energy_pj.iter().map(|&v| Json::f64_lossless(v)).collect()),
+        ),
+        (
+            "per_node_latency_cycles",
+            Json::Arr(
+                r.per_node_latency_cycles.iter().map(|&v| Json::u64_lossless(v)).collect(),
+            ),
+        ),
+        ("resources", resources_to_json(&r.resources)),
+    ])
+}
+
+fn report_from_json(j: &Json) -> Result<CoarseReport> {
+    Ok(CoarseReport {
+        energy_pj: want_f64(j, "energy_pj")?,
+        dynamic_pj: want_f64(j, "dynamic_pj")?,
+        leakage_pj: want_f64(j, "leakage_pj")?,
+        latency_cycles: want_u64(j, "latency_cycles")?,
+        latency_ms: want_f64(j, "latency_ms")?,
+        critical_path: u64_arr(j, "critical_path")?.into_iter().map(|n| n as usize).collect(),
+        per_node_energy_pj: f64_arr(j, "per_node_energy_pj")?,
+        per_node_latency_cycles: u64_arr(j, "per_node_latency_cycles")?,
+        resources: resources_from_json(
+            j.get("resources").ok_or_else(|| anyhow!("missing 'resources'"))?,
+        )?,
+    })
+}
+
+/// `Resources::mem_bits` keys are `&'static str` interned from a fixed
+/// set; re-intern on load so a foreign key is a parse error (the whole
+/// shard is then skipped as corrupt), never a bogus memory class.
+fn intern_mem_key(s: &str) -> Result<&'static str> {
+    for k in ["dram", "sram", "bram", "regfile"] {
+        if s == k {
+            return Ok(k);
+        }
+    }
+    bail!("unknown memory class '{s}'")
+}
+
+fn resources_to_json(r: &Resources) -> Json {
+    obj(vec![
+        (
+            "mem_bits",
+            Json::Obj(
+                r.mem_bits.iter().map(|(k, v)| (k.to_string(), Json::u64_lossless(*v))).collect(),
+            ),
+        ),
+        ("multipliers", Json::u64_lossless(r.multipliers as u64)),
+        ("decode_multipliers", Json::u64_lossless(r.decode_multipliers as u64)),
+        ("dsp", Json::u64_lossless(r.dsp as u64)),
+        ("bram18k", Json::u64_lossless(r.bram18k as u64)),
+        ("lut", Json::u64_lossless(r.lut as u64)),
+        ("ff", Json::u64_lossless(r.ff as u64)),
+        ("sram_kb", Json::f64_lossless(r.sram_kb)),
+        ("area_mm2", Json::f64_lossless(r.area_mm2)),
+    ])
+}
+
+fn resources_from_json(j: &Json) -> Result<Resources> {
+    let mem = j
+        .get("mem_bits")
+        .and_then(|v| v.as_obj())
+        .ok_or_else(|| anyhow!("bad or missing 'mem_bits'"))?;
+    let mut mem_bits = std::collections::BTreeMap::new();
+    for (k, v) in mem {
+        mem_bits.insert(
+            intern_mem_key(k)?,
+            v.as_u64_lossless().ok_or_else(|| anyhow!("bad mem_bits value for '{k}'"))?,
+        );
+    }
+    Ok(Resources {
+        mem_bits,
+        multipliers: want_usize(j, "multipliers")?,
+        decode_multipliers: want_usize(j, "decode_multipliers")?,
+        dsp: want_usize(j, "dsp")?,
+        bram18k: want_usize(j, "bram18k")?,
+        lut: want_usize(j, "lut")?,
+        ff: want_usize(j, "ff")?,
+        sram_kb: want_f64(j, "sram_kb")?,
+        area_mm2: want_f64(j, "area_mm2")?,
+    })
 }
 
 impl std::fmt::Debug for DseCache {
@@ -315,6 +771,159 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("adc_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn populated_cache() -> DseCache {
+        let cache = DseCache::new();
+        let m = zoo::skynet_tiny();
+        for unroll in [32, 64, 128] {
+            let mut cfg = HwConfig::ultra96_default();
+            cfg.unroll = unroll;
+            let key = CacheKey::for_point(&m, TemplateId::Hetero, &cfg);
+            let value = TemplateId::Hetero
+                .build(&m, &cfg)
+                .ok()
+                .and_then(|g| predict_coarse(&g, &cfg.tech).ok());
+            cache.insert(key, value);
+        }
+        // An explicit infeasible marker must survive the disk trip too.
+        let (key, ..) = sample_key(7);
+        cache.insert(key, None);
+        cache
+    }
+
+    #[test]
+    fn save_load_round_trip_is_bit_exact() {
+        let dir = temp_dir("roundtrip");
+        let cache = populated_cache();
+        let saved = cache.save_dir(&dir).unwrap();
+        assert!(saved.shards_written > 0);
+        assert_eq!(saved.entries_written, cache.len());
+
+        let restored = DseCache::new();
+        let report = restored.load_dir(&dir);
+        assert_eq!(report.load_errors, 0);
+        assert_eq!(report.stale_shards, 0);
+        assert_eq!(report.entries_loaded, cache.len());
+        assert_eq!(restored.len(), cache.len());
+
+        // Every entry comes back bit-identical, including the None marker.
+        for si in 0..SHARDS {
+            let orig = cache.lock_shard(si);
+            for (k, v) in orig.iter() {
+                let got = restored.lookup(k).expect("restored cache must hit");
+                match (v, &got) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+                        assert_eq!(a.latency_cycles, b.latency_cycles);
+                        assert_eq!(a.latency_ms.to_bits(), b.latency_ms.to_bits());
+                        assert_eq!(a.critical_path, b.critical_path);
+                        assert_eq!(a.resources, b.resources);
+                    }
+                    _ => panic!("feasibility flipped across the disk trip"),
+                }
+            }
+        }
+        // Loading restores state without counting predictor traffic.
+        let s = restored.stats();
+        assert_eq!(s.shards_loaded, saved.shards_written as u64);
+        assert_eq!(s.entries_loaded, saved.entries_written as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_and_stale_shards_are_skipped_not_fatal() {
+        let dir = temp_dir("robust");
+        let cache = populated_cache();
+        cache.save_dir(&dir).unwrap();
+
+        // Truncate one real shard mid-byte.
+        let shard = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().map(|e| e == "json").unwrap_or(false))
+            .expect("at least one shard on disk");
+        let bytes = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &bytes[..bytes.len() / 2]).unwrap();
+
+        // Drop in a well-formed shard with a wrong stamp (old cost model)…
+        let stale = obj(vec![
+            ("format", SHARD_FORMAT.into()),
+            ("version", CACHE_SCHEMA_VERSION.into()),
+            ("stamp", "00000000deadbeef".into()),
+            ("entries", Json::Arr(vec![])),
+        ]);
+        std::fs::write(dir.join("zz-stale.json"), stale.to_string()).unwrap();
+        // …and a foreign JSON file that is not a shard at all.
+        std::fs::write(dir.join("zz-foreign.json"), "{\"hello\": 1}").unwrap();
+
+        let restored = DseCache::new();
+        let report = restored.load_dir(&dir);
+        assert_eq!(report.load_errors, 2, "truncated + foreign");
+        assert_eq!(report.stale_shards, 1);
+        assert!(report.shards_loaded > 0, "intact shards still load");
+        assert!(restored.len() < cache.len(), "lost shard's entries are simply cold");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_from_missing_dir_is_cold_start() {
+        let cache = DseCache::new();
+        let report = cache.load_dir(Path::new("/nonexistent/adc_cache_nowhere"));
+        assert_eq!(report, LoadReport::default());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn merge_unions_and_tolerates_self_merge() {
+        let a = populated_cache();
+        let b = DseCache::new();
+        let (key, ..) = sample_key(11);
+        b.insert(key, None);
+
+        let before = a.len();
+        a.merge(&b);
+        assert_eq!(a.len(), before + 1);
+        // Idempotent: merging the same cache again adds nothing.
+        a.merge(&b);
+        assert_eq!(a.len(), before + 1);
+        // Self-merge must not deadlock or change contents.
+        a.merge(&a);
+        assert_eq!(a.len(), before + 1);
+    }
+
+    #[test]
+    fn save_is_byte_stable_across_round_trips() {
+        let dir1 = temp_dir("stable1");
+        let dir2 = temp_dir("stable2");
+        let cache = populated_cache();
+        cache.save_dir(&dir1).unwrap();
+        let restored = DseCache::new();
+        restored.load_dir(&dir1);
+        restored.save_dir(&dir2).unwrap();
+        let mut names: Vec<String> = std::fs::read_dir(&dir1)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".json"))
+            .collect();
+        names.sort();
+        assert!(!names.is_empty());
+        for n in names {
+            let x = std::fs::read(dir1.join(&n)).unwrap();
+            let y = std::fs::read(dir2.join(&n)).unwrap();
+            assert_eq!(x, y, "shard {n} must serialize byte-identically after a round trip");
+        }
+        let _ = std::fs::remove_dir_all(&dir1);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

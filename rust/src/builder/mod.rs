@@ -41,7 +41,7 @@ use crate::dnn::Model;
 use crate::predictor::CoarseReport;
 use crate::templates::{HwConfig, TemplateId};
 
-pub use cache::{CacheKey, CacheStats, DseCache};
+pub use cache::{cache_stamp, CacheKey, CacheStats, DseCache, LoadReport, SaveReport};
 pub use moves::{AppliedMove, BoxedMove, Move, MoveSet};
 pub use pnr::{pnr_check, PnrOutcome};
 pub use spec::{Backend, Objective, Spec, SweepGrid};

@@ -41,6 +41,9 @@ pub struct RunConfig {
     pub moves: MoveSetChoice,
     pub out_dir: Option<String>,
     pub rtl_out: Option<String>,
+    /// Directory of persistent DSE cache shards: loaded before the sweep,
+    /// saved back after it (the `--cache-dir` CLI flag lands here).
+    pub cache_dir: Option<String>,
 }
 
 /// Keys the run-config schema accepts (`"type"` included so the same
@@ -48,7 +51,7 @@ pub struct RunConfig {
 const CONFIG_KEYS: &[&str] = &[
     "type", "model", "model_json", "backend", "dsp", "bram18k", "lut", "ff", "sram_kb", "macs",
     "objective", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves",
-    "out_dir", "rtl_out",
+    "out_dir", "rtl_out", "cache_dir",
 ];
 
 /// A string key with present-but-wrong-typed as an error, never a silent
@@ -150,6 +153,7 @@ impl RunConfig {
             moves,
             out_dir: want_str(j, "out_dir")?.map(|s| s.to_string()),
             rtl_out: want_str(j, "rtl_out")?.map(|s| s.to_string()),
+            cache_dir: want_str(j, "cache_dir")?.map(|s| s.to_string()),
         })
     }
 
@@ -208,6 +212,9 @@ impl RunConfig {
         }
         if let Some(d) = &self.rtl_out {
             pairs.push(("rtl_out", d.as_str().into()));
+        }
+        if let Some(d) = &self.cache_dir {
+            pairs.push(("cache_dir", d.as_str().into()));
         }
         obj(pairs)
     }
@@ -303,6 +310,7 @@ mod tests {
             r#"{"model_json":"examples/models/tinyconv.json","moves":"legacy",
                 "min_precision_bits":9,"out_dir":"results/t","rtl_out":"results/t/rtl"}"#,
             r#"{"model":"SK8","min_fps":27.5,"max_power_mw":8500,"n2":3,"n_opt":2}"#,
+            r#"{"model":"SK","cache_dir":"results/cache"}"#,
         ] {
             let c = RunConfig::from_json(&Json::parse(text).unwrap()).unwrap();
             let back = RunConfig::from_json(&c.to_json()).unwrap();

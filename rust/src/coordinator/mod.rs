@@ -52,6 +52,7 @@ mod tests {
             moves: MoveSetChoice::Full,
             out_dir: Some(dir.to_string_lossy().into_owned()),
             rtl_out: Some(dir.join("rtl").to_string_lossy().into_owned()),
+            cache_dir: None,
         };
         let s = run(&cfg).unwrap();
         assert!(s.build.evaluated > 0);
@@ -79,6 +80,7 @@ mod tests {
             moves: MoveSetChoice::Full,
             out_dir: None,
             rtl_out: None,
+            cache_dir: None,
         };
         assert!(run(&cfg).is_err());
     }
@@ -109,6 +111,7 @@ mod tests {
             moves: MoveSetChoice::Legacy,
             out_dir: None,
             rtl_out: None,
+            cache_dir: None,
         };
         let s = run(&cfg).expect("model_json run");
         assert!(s.build.evaluated > 0);

@@ -348,6 +348,14 @@ pub fn by_name(name: &str) -> Option<Technology> {
     }
 }
 
+/// Every registered technology, in a fixed order. The persistent DSE
+/// cache folds each one's [`Technology::stable_hash`] into its shard
+/// stamp, so editing any cost table silently invalidates on-disk shards
+/// instead of serving predictions from a stale cost model.
+pub fn all() -> Vec<Technology> {
+    vec![fpga_ultra96(), asic_65nm(), asic_65nm_1ghz(), asic_28nm()]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -4,15 +4,22 @@
 //! autodnnchip list-models
 //! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
 //! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
-//!                      [--moves legacy|full]
+//!                      [--moves legacy|full] [--cache-dir DIR]
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
+//! autodnnchip sweep    --model SK [--backend fpga|asic] [--n2 N]
+//!                      [--cache-dir DIR] [--out DIR] [--workers N]
 //! autodnnchip serve    --requests file.jsonl [--out DIR] [--workers N]
-//!                      [--verbose]
+//!                      [--verbose] [--cache-dir DIR]
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
 //!                       fig11|fig12|fig13|fig14|fig15|all> [--seed N]
 //! autodnnchip validate [--artifacts DIR]
 //! ```
+//!
+//! `--cache-dir DIR` makes the DSE cache persistent: shards found in DIR
+//! are loaded before the sweep (stale/corrupt ones skipped with a
+//! warning) and the cache is saved back afterwards, so a rerun — even
+//! after the process died — starts warm.
 //!
 //! `predict` and `build` route through the `api::Engine` facade — the CLI
 //! is one consumer of the same typed request/response surface the JSONL
@@ -130,13 +137,14 @@ fn run_command(args: &Args) -> Result<()> {
         }
         Some("predict") => cmd_predict(args),
         Some("build") => cmd_build(args),
+        Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
         Some("exp") => cmd_exp(args),
         Some("validate") => cmd_validate(args),
         Some(other) => bail!("unknown command '{other}'"),
         None => {
             eprintln!(
-                "usage: autodnnchip <list-models|predict|build|serve|exp|validate> [flags]\n\
+                "usage: autodnnchip <list-models|predict|build|sweep|serve|exp|validate> [flags]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())
@@ -189,6 +197,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 fn cmd_build(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
         "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
+        "cache-dir",
     ]));
     let cfg = if let Some(path) = args.flag("config") {
         // The config file carries the whole run; any other flag on the
@@ -226,6 +235,7 @@ fn cmd_build(args: &Args) -> Result<()> {
             moves,
             out_dir: args.flag("out").map(|s| s.to_string()),
             rtl_out: args.flag("rtl-out").map(|s| s.to_string()),
+            cache_dir: args.flag("cache-dir").map(|s| s.to_string()),
         }
     };
     let summary = Engine::builder().build().run(&cfg)?;
@@ -236,13 +246,66 @@ fn cmd_build(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stage-1-only sweep: evaluate the coarse grid and print the sweep
+/// response as pretty JSON. With `--cache-dir DIR` the sweep loads
+/// persistent shards first and saves back after — the warm-restart path
+/// the `restart` bench and the CI cache gates exercise.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    args.warn_unknown_flags(&with_obs_flags(&[
+        "model", "model-json", "backend", "n2", "cache-dir", "out", "workers",
+    ]));
+    let backend = args.flag_or("backend", "fpga");
+    let spec = match backend.as_str() {
+        "fpga" => Spec::ultra96_object_detection(),
+        "asic" => Spec::asic_vision(),
+        other => bail!("unknown backend '{other}'"),
+    };
+    let cfg = RunConfig {
+        model: args.flag_or("model", "SK"),
+        model_json: args.flag("model-json").map(|s| s.to_string()),
+        spec,
+        n2: numeric_flag(args, "n2").unwrap_or(4),
+        n_opt: 1,
+        moves: MoveSetChoice::Full,
+        out_dir: None,
+        rtl_out: None,
+        cache_dir: args.flag("cache-dir").map(|s| s.to_string()),
+    };
+    let mut builder = Engine::builder();
+    if let Some(w) = numeric_flag::<usize>(args, "workers") {
+        builder = builder.workers(w);
+    }
+    let engine = builder.build();
+    let resp = engine.submit(Request::Sweep(api::SweepRequest(cfg)))?;
+    println!("{}", resp.to_json().pretty());
+    if let Some(dir) = args.flag("out") {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating '{dir}'"))?;
+        let out_path = Path::new(dir).join("sweep.json");
+        std::fs::write(&out_path, resp.to_json().pretty())
+            .with_context(|| format!("writing '{}'", out_path.display()))?;
+        eprintln!("wrote {}", out_path.display());
+    }
+    if resp.is_error() {
+        bail!("sweep failed");
+    }
+    Ok(())
+}
+
 /// Batched serving mode: one JSON request per input line, one JSON
 /// response per output line, in order; failing requests become in-place
-/// `{"type":"error",...}` lines instead of aborting the stream.
+/// `{"type":"error",...}` lines instead of aborting the stream. Response
+/// lines stream: each is printed as soon as it and every line before it
+/// have finished (see `api::serve`'s ordering contract), so one slow
+/// build does not hold back the output of the cheap requests ahead of it.
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["requests", "out", "workers", "verbose"]));
+    args.warn_unknown_flags(&with_obs_flags(&[
+        "requests", "out", "workers", "verbose", "cache-dir",
+    ]));
     let path = args.flag("requests").ok_or_else(|| {
-        anyhow!("usage: serve --requests file.jsonl [--out DIR] [--workers N] [--verbose]")
+        anyhow!(
+            "usage: serve --requests file.jsonl [--out DIR] [--workers N] [--verbose] \
+             [--cache-dir DIR]"
+        )
     })?;
     // Serving mode always records telemetry, so a `{"type":"stats"}` line
     // has per-request-kind latency histograms, cache counters and stage
@@ -253,16 +316,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = numeric_flag::<usize>(args, "workers") {
         builder = builder.workers(w);
     }
+    if let Some(dir) = args.flag("cache-dir") {
+        builder = builder.cache_dir(dir);
+    }
     let engine = builder.build();
-    let outcome = api::serve_path(&engine, Path::new(path))?;
+    // Stream responses in request order as they finish; the same bytes the
+    // old collect-then-print loop produced, just earlier.
+    let mut print_line = |_i: usize, r: &Response, _ls: &api::LineStat| {
+        println!("{}", r.to_json());
+    };
+    let outcome = api::serve_path_with(&engine, Path::new(path), Some(&mut print_line))?;
     if verbose {
         for (i, (ls, r)) in outcome.line_stats.iter().zip(&outcome.responses).enumerate() {
             let status = if r.is_error() { "error" } else { "ok" };
             eprintln!("request {}: {} {:.2} ms -> {status}", i + 1, ls.kind, ls.latency_ms);
         }
-    }
-    for r in &outcome.responses {
-        println!("{}", r.to_json());
     }
     if let Some(dir) = args.flag("out") {
         std::fs::create_dir_all(dir).with_context(|| format!("creating '{dir}'"))?;

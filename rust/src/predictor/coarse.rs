@@ -15,7 +15,7 @@ use crate::ip::{IpClass, MemKind, Technology};
 
 /// Resource consumption summary (paper Eqs. 5–6 plus the FPGA/ASIC
 /// accounting used in Tables 8–9).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Resources {
     /// Total memory volume per memory class, in bits (Eq. 5, per type).
     pub mem_bits: BTreeMap<&'static str, u64>,

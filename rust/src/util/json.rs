@@ -76,6 +76,56 @@ impl Json {
         })
     }
 
+    /// Encode a `u64` losslessly. `Json::Num` is backed by `f64`, which is
+    /// exact only up to 2^53 — full-width values (FNV fingerprints, cycle
+    /// counts of long runs) would silently round. Values above 2^53 are
+    /// emitted as a tagged decimal string instead; [`Json::as_u64_lossless`]
+    /// accepts both forms.
+    pub fn u64_lossless(v: u64) -> Json {
+        if v <= (1u64 << 53) {
+            Json::Num(v as f64)
+        } else {
+            Json::Str(format!("u64:{v}"))
+        }
+    }
+
+    /// Decode a value produced by [`Json::u64_lossless`].
+    pub fn as_u64_lossless(&self) -> Option<u64> {
+        match self {
+            Json::Num(_) => self.as_u64(),
+            Json::Str(s) => s.strip_prefix("u64:").and_then(|d| d.parse().ok()),
+            _ => None,
+        }
+    }
+
+    /// Encode an `f64` so parsing recovers the exact bit pattern. Finite
+    /// values whose textual form round-trips bit-exactly (the common case:
+    /// Rust's float `Display` is shortest-round-trip) print as a plain
+    /// number; the rest — NaN, infinities, and `-0.0` (whose sign the
+    /// integral fast path in the serializer drops) — fall back to a tagged
+    /// hex string of the raw bits.
+    pub fn f64_lossless(v: f64) -> Json {
+        let text = Json::Num(v).to_string();
+        if let Ok(back) = text.parse::<f64>() {
+            if back.to_bits() == v.to_bits() {
+                return Json::Num(v);
+            }
+        }
+        Json::Str(format!("bits:{:016x}", v.to_bits()))
+    }
+
+    /// Decode a value produced by [`Json::f64_lossless`].
+    pub fn as_f64_lossless(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            Json::Str(s) => s
+                .strip_prefix("bits:")
+                .and_then(|h| u64::from_str_radix(h, 16).ok())
+                .map(f64::from_bits),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -470,6 +520,32 @@ mod tests {
     #[test]
     fn get_on_non_object() {
         assert!(Json::Num(1.0).get("x").is_none());
+    }
+
+    #[test]
+    fn u64_lossless_round_trips_full_width() {
+        for v in [0u64, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            let j = Json::u64_lossless(v);
+            let back = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(back.as_u64_lossless(), Some(v), "u64 {v} must survive serialization");
+        }
+        // Small values stay plain numbers (readable, jq-able).
+        assert!(matches!(Json::u64_lossless(42), Json::Num(_)));
+        assert!(matches!(Json::u64_lossless(u64::MAX), Json::Str(_)));
+    }
+
+    #[test]
+    fn f64_lossless_round_trips_bit_exactly() {
+        for v in [0.0, -0.0, 1.5, -2.25e-300, 1e300, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, f64::MIN_POSITIVE, 0.1 + 0.2]
+        {
+            let j = Json::f64_lossless(v);
+            let back = Json::parse(&j.to_string()).unwrap().as_f64_lossless().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "f64 {v} must survive bit-exactly");
+        }
+        // The common case stays a plain number; only the unprintables tag.
+        assert!(matches!(Json::f64_lossless(3.25), Json::Num(_)));
+        assert!(matches!(Json::f64_lossless(-0.0), Json::Str(_)));
+        assert!(matches!(Json::f64_lossless(f64::NAN), Json::Str(_)));
     }
 
     #[test]

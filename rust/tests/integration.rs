@@ -1,7 +1,7 @@
 //! Cross-module integration tests: full Chip-Builder flows, RTL/funcsim
 //! consistency, experiment-harness sanity, CLI-level orchestration.
 
-use autodnnchip::api::{self, Engine};
+use autodnnchip::api::{self, Engine, Request, Response, SweepRequest};
 use autodnnchip::builder::{build_accelerator, Spec};
 use autodnnchip::coordinator::{self, MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo};
@@ -146,6 +146,7 @@ fn examples_model_json_builds_via_coordinator() {
         moves: MoveSetChoice::Full,
         out_dir: None,
         rtl_out: None,
+        cache_dir: None,
     };
     let s = coordinator::run(&cfg).expect("build from model JSON");
     assert!(s.build.evaluated > 100);
@@ -271,6 +272,7 @@ fn result_json_metrics_section_is_file_only() {
         moves: MoveSetChoice::Legacy,
         out_dir: Some(dir.to_string_lossy().into_owned()),
         rtl_out: None,
+        cache_dir: None,
     };
     let run_leg = |on: bool| {
         // Fresh engine + isolated cache per leg, so cold/warm cache
@@ -298,6 +300,179 @@ fn result_json_metrics_section_is_file_only() {
         metrics.get("counters").unwrap().get("stage1.sweeps").unwrap().as_f64().unwrap() >= 1.0
     );
     assert!(metrics.get("histograms").unwrap().get("span.stage1.sweep_ns").is_some());
+}
+
+/// Sweep request used by the persistent-cache session tests below.
+fn sweep_request(model: &str, cache_dir: Option<String>) -> Request {
+    Request::Sweep(SweepRequest(RunConfig {
+        model: model.to_string(),
+        model_json: None,
+        spec: Spec::ultra96_object_detection(),
+        n2: 2,
+        n_opt: 1,
+        moves: MoveSetChoice::Full,
+        out_dir: None,
+        rtl_out: None,
+        cache_dir,
+    }))
+}
+
+#[test]
+fn persistent_cache_shared_across_engine_sessions() {
+    // The tentpole flow, in-process: session one populates an
+    // `EngineBuilder::cache_dir` and persists it when the engine drops;
+    // session two (a separate engine with an isolated cache) loads the
+    // shards and serves the same sweep all-hit with identical results.
+    let dir = std::env::temp_dir().join(format!("adc_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let first = Engine::builder().isolated_cache().cache_dir(&dir).build();
+    let cold = first.submit(sweep_request("sdn_smile", None)).expect("cold sweep").to_json();
+    assert_eq!(cold.get("cache_hits").unwrap().as_f64().unwrap(), 0.0);
+    assert!(cold.get("cache_misses").unwrap().as_f64().unwrap() > 0.0);
+    drop(first); // end of session one: Drop writes the shards
+
+    let shards = std::fs::read_dir(&dir)
+        .expect("cache dir written")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().starts_with("shard-"))
+        .count();
+    assert!(shards > 0, "dropping the first session must write shard files");
+
+    let second = Engine::builder().isolated_cache().cache_dir(&dir).build();
+    let warm = second.submit(sweep_request("sdn_smile", None)).expect("warm sweep").to_json();
+    assert!(warm.get("cache_hits").unwrap().as_f64().unwrap() > 0.0, "no hits after reload");
+    assert_eq!(warm.get("cache_misses").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(
+        warm.get("selected").unwrap().to_string(),
+        cold.get("selected").unwrap().to_string(),
+        "a persistence round trip changed the sweep selection"
+    );
+    assert_eq!(
+        warm.get("evaluated").unwrap().to_string(),
+        cold.get("evaluated").unwrap().to_string()
+    );
+    drop(second); // before the cleanup — its Drop re-saves the shards
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_config_cache_dir_round_trips_builds() {
+    // The config-driven threading of the same mechanism: a `RunConfig`
+    // with `cache_dir` set makes `Engine::run` load the shards before the
+    // build and save them after, so two full builds on fresh engines
+    // share their stage-1 sweep work.
+    let dir = std::env::temp_dir().join(format!("adc_cfgdir_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = RunConfig {
+        model: "sdn_gaze".to_string(),
+        model_json: None,
+        spec: Spec::ultra96_object_detection(),
+        n2: 1,
+        n_opt: 1,
+        moves: MoveSetChoice::Legacy,
+        out_dir: None,
+        rtl_out: None,
+        cache_dir: Some(dir.to_string_lossy().into_owned()),
+    };
+    let cache_counts = |s: &coordinator::RunSummary| {
+        let c = s.result_json.get("dse_cache").expect("dse_cache section");
+        (
+            c.get("hits").unwrap().as_f64().unwrap(),
+            c.get("misses").unwrap().as_f64().unwrap(),
+        )
+    };
+    let cold_engine = Engine::builder().isolated_cache().build();
+    let cold = cold_engine.run(&cfg).expect("cold build");
+    let (cold_hits, cold_misses) = cache_counts(&cold);
+    assert_eq!(cold_hits, 0.0, "first config-driven build must start cold");
+    assert!(cold_misses > 0.0);
+
+    let warm_engine = Engine::builder().isolated_cache().build();
+    let warm = warm_engine.run(&cfg).expect("warm build");
+    let (warm_hits, warm_misses) = cache_counts(&warm);
+    assert!(warm_hits > 0.0, "second build must reuse the persisted sweep");
+    assert_eq!(warm_misses, 0.0);
+    // Outside the cache counters, the warm build is byte-identical.
+    for key in ["survivors", "stage2_improvement_pct", "evaluated"] {
+        assert_eq!(
+            warm.result_json.get(key).map(|v| v.to_string()),
+            cold.result_json.get(key).map(|v| v.to_string()),
+            "warm build diverged from cold in '{key}'"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_shard_degrades_to_cold_not_failure() {
+    // The bugfix satellite, end to end: truncating a shard mid-byte must
+    // not fail the next session or change its results — the unreadable
+    // shard is skipped (re-predicted), never misread.
+    let dir = std::env::temp_dir().join(format!("adc_corrupt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let seed = Engine::builder().isolated_cache().cache_dir(&dir).build();
+    let cold = seed.submit(sweep_request("sdn_ocr", None)).expect("seed sweep").to_json();
+    drop(seed);
+
+    let shard = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.file_name().unwrap().to_string_lossy().starts_with("shard-"))
+        .expect("at least one shard on disk");
+    let bytes = std::fs::read(&shard).unwrap();
+    std::fs::write(&shard, &bytes[..bytes.len() / 2]).unwrap();
+
+    let hurt = Engine::builder().isolated_cache().cache_dir(&dir).build();
+    let degraded =
+        hurt.submit(sweep_request("sdn_ocr", None)).expect("sweep over a torn shard").to_json();
+    // The points the torn shard held are re-predicted (misses), the rest
+    // still hit — and the sweep's answer is byte-identical to cold.
+    assert!(degraded.get("cache_misses").unwrap().as_f64().unwrap() > 0.0);
+    assert!(degraded.get("cache_hits").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        degraded.get("selected").unwrap().to_string(),
+        cold.get("selected").unwrap().to_string(),
+        "a torn shard changed the sweep results"
+    );
+    drop(hurt); // before the cleanup — its Drop re-saves the shards
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_streaming_sink_preserves_line_order() {
+    // The streaming contract: the sink sees every line exactly once, in
+    // request order, and each streamed response serializes identically to
+    // the one in the final outcome — including the in-place error for an
+    // unparseable line.
+    let engine = Engine::builder().isolated_cache().build();
+    let text = "{\"type\":\"predict\",\"model\":\"sdn_smile\"}\n\
+                not json\n\
+                {\"type\":\"predict\",\"model\":\"sdn_gaze\"}\n\
+                {\"type\":\"stats\"}\n";
+    let mut streamed: Vec<(usize, String)> = Vec::new();
+    let mut sink = |i: usize, r: &Response, _ls: &api::LineStat| {
+        streamed.push((i, r.to_json().to_string()));
+    };
+    let outcome = api::serve_lines_with(&engine, text, Some(&mut sink));
+    assert_eq!(outcome.responses.len(), 4);
+    assert_eq!(
+        streamed.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        vec![0, 1, 2, 3],
+        "streamed emission must cover every line in request order"
+    );
+    for ((i, line), resp) in streamed.iter().zip(&outcome.responses) {
+        assert_eq!(
+            line,
+            &resp.to_json().to_string(),
+            "streamed response {i} diverged from the collected outcome"
+        );
+    }
+    assert!(outcome.responses[1].is_error(), "the unparseable line maps to an error response");
+    assert_eq!(outcome.ok, 3);
+    assert_eq!(outcome.failed, 1);
 }
 
 #[test]

@@ -401,6 +401,133 @@ fn prop_cached_stage1_selects_identical_candidates() {
     });
 }
 
+/// Sorted `(file name, bytes)` of every shard file in a cache directory.
+fn shard_bytes(dir: &std::path::Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".json"))
+        .map(|e| (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap()))
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn prop_cache_save_load_round_trip_lossless() {
+    // Persistence is lossless and canonical: a sweep-populated cache
+    // survives save → load with every f64 bit pattern intact (the warm
+    // re-sweep against the loaded copy is all-hit and selects
+    // identically), and saving the loaded copy reproduces the original
+    // shard files byte for byte.
+    check_cfg("cache round trip", Config { cases: 3, seed: 0xD15C }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models);
+        let spec =
+            if rng.bool(0.5) { Spec::ultra96_object_detection() } else { Spec::asic_vision() };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let n2 = rng.range(1, 4);
+        let pool = Pool::new(rng.range(1, 4));
+        let base = std::env::temp_dir()
+            .join(format!("adc_prop_rt_{}_{:x}", std::process::id(), rng.next_u64()));
+        let (dir_a, dir_b) = (base.join("a"), base.join("b"));
+
+        let cache = Arc::new(DseCache::new());
+        let cold = stage1_with(m, &spec, &grid, n2, &pool, &cache).map_err(|e| e.to_string())?;
+        cache.save_dir(&dir_a).map_err(|e| e.to_string())?;
+
+        let loaded = Arc::new(DseCache::new());
+        let report = loaded.load_dir(&dir_a);
+        prop_assert!(
+            report.load_errors == 0 && report.stale_shards == 0,
+            "clean shards misread: {report:?}"
+        );
+        prop_assert!(
+            loaded.len() == cache.len(),
+            "{} of {} entries survived the round trip",
+            loaded.len(),
+            cache.len()
+        );
+
+        let warm = stage1_with(m, &spec, &grid, n2, &pool, &loaded).map_err(|e| e.to_string())?;
+        prop_assert!(
+            warm.cache_hits == grid.len() as u64 && warm.cache_misses == 0,
+            "reloaded sweep must be all-hit: {} hits / {} misses over {} points",
+            warm.cache_hits,
+            warm.cache_misses,
+            grid.len()
+        );
+        prop_assert!(
+            format!("{:?}", warm.selected) == format!("{:?}", cold.selected),
+            "selection diverged after a persistence round trip"
+        );
+
+        loaded.save_dir(&dir_b).map_err(|e| e.to_string())?;
+        prop_assert!(
+            shard_bytes(&dir_a) == shard_bytes(&dir_b),
+            "save → load → save is not byte-stable"
+        );
+        let _ = std::fs::remove_dir_all(&base);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_merge_commutative_idempotent() {
+    // Shard merging is a no-clobber union: folding two sweep-populated
+    // caches in either order serializes byte-identically (commutative),
+    // and re-merging a cache's own persisted copy changes nothing
+    // (idempotent) — so shards gathered from different machines can fold
+    // in any order, any number of times.
+    check_cfg("cache merge", Config { cases: 3, seed: 0x3E26E }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let i = rng.below(models.len());
+        let j = (i + 1 + rng.below(models.len() - 1)) % models.len();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(rng.range(1, 4));
+        let base = std::env::temp_dir()
+            .join(format!("adc_prop_mg_{}_{:x}", std::process::id(), rng.next_u64()));
+
+        let a = Arc::new(DseCache::new());
+        stage1_with(&models[i], &spec, &grid, 2, &pool, &a).map_err(|e| e.to_string())?;
+        let b = Arc::new(DseCache::new());
+        stage1_with(&models[j], &spec, &grid, 2, &pool, &b).map_err(|e| e.to_string())?;
+
+        let ab = DseCache::new();
+        ab.merge(&a);
+        ab.merge(&b);
+        ab.save_dir(&base.join("ab")).map_err(|e| e.to_string())?;
+        let ba = DseCache::new();
+        ba.merge(&b);
+        ba.merge(&a);
+        ba.save_dir(&base.join("ba")).map_err(|e| e.to_string())?;
+        // Distinct models fingerprint distinctly, so the union is disjoint.
+        prop_assert!(
+            ab.len() == a.len() + b.len(),
+            "union lost entries: {} from {} + {}",
+            ab.len(),
+            a.len(),
+            b.len()
+        );
+        prop_assert!(
+            shard_bytes(&base.join("ab")) == shard_bytes(&base.join("ba")),
+            "merge(a, b) and merge(b, a) serialized differently"
+        );
+
+        let copy = DseCache::new();
+        copy.load_dir(&base.join("ab"));
+        ab.merge(&copy);
+        ab.save_dir(&base.join("ab2")).map_err(|e| e.to_string())?;
+        prop_assert!(
+            shard_bytes(&base.join("ab")) == shard_bytes(&base.join("ab2")),
+            "re-merging a cache's own persisted copy changed its contents"
+        );
+        let _ = std::fs::remove_dir_all(&base);
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_parallel_stage2_byte_identical_to_serial() {
     // Stage-2 fan-out must be a pure wall-clock optimization: the whole
@@ -627,6 +754,7 @@ fn run_config(model: &str, spec: Spec, n2: usize, n_opt: usize, moves: MoveSetCh
         moves,
         out_dir: None,
         rtl_out: None,
+        cache_dir: None,
     }
 }
 
