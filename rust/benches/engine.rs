@@ -19,7 +19,7 @@ use std::path::Path;
 
 use autodnnchip::api::{BuildRequest, Engine, Request};
 use autodnnchip::builder::Spec;
-use autodnnchip::coordinator::{self, MoveSetChoice, RunConfig};
+use autodnnchip::coordinator::{self, GridChoice, MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::util::bench::Bench;
 
@@ -31,6 +31,8 @@ fn cfg_for(model: &str) -> RunConfig {
         n2: 2,
         n_opt: 1,
         moves: MoveSetChoice::Full,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: None,
         rtl_out: None,
         cache_dir: None,

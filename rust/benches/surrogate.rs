@@ -1,0 +1,197 @@
+//! Surrogate-guided DSE benchmark: stage-1 sweeps under the exhaustive
+//! and surrogate policies on the same warm cache, on both backends, plus
+//! a dense-grid leg showing the surrogate serving a bigger grid for a
+//! fraction of the exhaustive budget.
+//!
+//! Emits a machine-readable summary to `BENCH_surrogate.json` (override
+//! with `BENCH_SURROGATE_JSON=path`) and exits non-zero when the
+//! surrogate breaks its contract on either backend: it must score the
+//! whole grid, run the analytical predictor on at most a tenth of it, and
+//! select the identical candidate list the exhaustive sweep selects. The
+//! CI bench-smoke job runs this with `BENCH_QUICK=1 BENCH_SURROGATE_TINY=1`
+//! and uploads the JSON as an artifact.
+//!
+//! The gates are on evaluation counts and winner identity, not wall-clock:
+//! on an all-hit cache both legs are lookup-bound, so timing is reported
+//! for context only.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use autodnnchip::builder::{
+    stage1_with, stage1_with_policy, DseCache, DsePolicy, Spec, Stage1Output, SweepGrid,
+    MIN_FIT_POINTS,
+};
+use autodnnchip::coordinator::Pool;
+use autodnnchip::dnn::zoo;
+use autodnnchip::util::bench::Bench;
+
+struct Leg {
+    backend: &'static str,
+    grid_points: usize,
+    evaluated: usize,
+    scored: usize,
+    winner_match: bool,
+}
+
+fn check_leg(
+    backend: &'static str,
+    exhaustive: &Stage1Output,
+    sur: &Stage1Output,
+    grid_points: usize,
+) -> Leg {
+    Leg {
+        backend,
+        grid_points,
+        evaluated: sur.evaluated,
+        scored: sur.scored,
+        winner_match: format!("{:?}", sur.selected) == format!("{:?}", exhaustive.selected),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("surrogate");
+
+    let tiny = std::env::var("BENCH_SURROGATE_TINY").is_ok();
+    let m = if tiny { zoo::skynet_tiny() } else { zoo::by_name("SK8").unwrap() };
+    let spec = Spec::ultra96_object_detection();
+    let grid = SweepGrid::for_backend(&spec.backend);
+    let pool = Pool::default_size();
+    let policy = DsePolicy::surrogate();
+
+    // One exhaustive sweep warms the cache; both timed legs then run over
+    // the same all-hit cache, so they differ only in policy overhead.
+    let cache = Arc::new(DseCache::new());
+    let exhaustive = stage1_with(&m, &spec, &grid, 4, &pool, &cache).unwrap();
+
+    let exhaustive_ns = b
+        .run("stage1_exhaustive_warm/fpga", || {
+            stage1_with(&m, &spec, &grid, 4, &pool, &cache).unwrap().evaluated
+        })
+        .mean_ns;
+    let surrogate_ns = b
+        .run("stage1_surrogate_warm/fpga", || {
+            stage1_with_policy(&m, &spec, &grid, 4, &pool, &cache, &policy).unwrap().evaluated
+        })
+        .mean_ns;
+    let sur = stage1_with_policy(&m, &spec, &grid, 4, &pool, &cache, &policy).unwrap();
+    let fpga = check_leg("fpga", &exhaustive, &sur, grid.len());
+
+    // ASIC leg: same contract on the other backend's grid, single-shot
+    // timed (the counts, not the clock, carry the gate).
+    let asic_spec = Spec::asic_vision();
+    let asic_grid = SweepGrid::for_backend(&asic_spec.backend);
+    let asic_m = zoo::fig15_networks().remove(0);
+    let asic_cache = Arc::new(DseCache::new());
+    let asic_exhaustive =
+        stage1_with(&asic_m, &asic_spec, &asic_grid, 4, &pool, &asic_cache).unwrap();
+    let t0 = Instant::now();
+    let asic_sur = stage1_with_policy(
+        &asic_m,
+        &asic_spec,
+        &asic_grid,
+        4,
+        &pool,
+        &asic_cache,
+        &DsePolicy::surrogate(),
+    )
+    .unwrap();
+    let asic_surrogate_ns = t0.elapsed().as_nanos() as f64;
+    let asic = check_leg("asic", &asic_exhaustive, &asic_sur, asic_grid.len());
+
+    // Dense-grid leg: the standard grid is a strict subset of the dense
+    // tier, so the standard-warm cache already holds enough labels to fit
+    // the surrogate — it prunes a grid it has never exhaustively swept.
+    // Informational (no winner gate: the pruned points are genuinely new
+    // predictions, not cache replays).
+    let dense = SweepGrid::dense_for_backend(&spec.backend);
+    let t0 = Instant::now();
+    let dense_sur = stage1_with_policy(&m, &spec, &dense, 4, &pool, &cache, &policy).unwrap();
+    let dense_surrogate_ns = t0.elapsed().as_nanos() as f64;
+    assert!(
+        dense_sur.fit_points >= MIN_FIT_POINTS,
+        "standard-warm cache must be enough to fit the dense-grid surrogate"
+    );
+
+    println!(
+        "\n  fpga: {} of {} grid points evaluated ({:.1}× cut), winner match: {}",
+        fpga.evaluated,
+        fpga.grid_points,
+        fpga.grid_points as f64 / fpga.evaluated.max(1) as f64,
+        fpga.winner_match
+    );
+    println!(
+        "  asic: {} of {} grid points evaluated ({:.1}× cut), winner match: {}",
+        asic.evaluated,
+        asic.grid_points,
+        asic.grid_points as f64 / asic.evaluated.max(1) as f64,
+        asic.winner_match
+    );
+    println!(
+        "  dense fpga grid: {} of {} points evaluated off a standard-warm cache \
+         ({} fit points)",
+        dense_sur.evaluated,
+        dense.len(),
+        dense_sur.fit_points
+    );
+
+    let path = std::env::var("BENCH_SURROGATE_JSON")
+        .unwrap_or_else(|_| "BENCH_surrogate.json".to_string());
+    let derived = [
+        ("fpga_grid_points", fpga.grid_points as f64),
+        ("fpga_surrogate_evaluated", fpga.evaluated as f64),
+        ("fpga_surrogate_scored", fpga.scored as f64),
+        ("fpga_eval_reduction", fpga.grid_points as f64 / fpga.evaluated.max(1) as f64),
+        ("fpga_winner_match", if fpga.winner_match { 1.0 } else { 0.0 }),
+        ("fpga_exhaustive_warm_ns", exhaustive_ns),
+        ("fpga_surrogate_warm_ns", surrogate_ns),
+        ("asic_grid_points", asic.grid_points as f64),
+        ("asic_surrogate_evaluated", asic.evaluated as f64),
+        ("asic_surrogate_scored", asic.scored as f64),
+        ("asic_eval_reduction", asic.grid_points as f64 / asic.evaluated.max(1) as f64),
+        ("asic_winner_match", if asic.winner_match { 1.0 } else { 0.0 }),
+        ("asic_surrogate_ns", asic_surrogate_ns),
+        ("dense_grid_points", dense.len() as f64),
+        ("dense_surrogate_evaluated", dense_sur.evaluated as f64),
+        ("dense_surrogate_fit_points", dense_sur.fit_points as f64),
+        ("dense_surrogate_ns", dense_surrogate_ns),
+    ];
+    b.write_json(Path::new(&path), "surrogate", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+
+    // Gates: the surrogate must actually be engaged (score the whole
+    // grid), cut predictor evaluations ≥10×, and preserve the winner on
+    // both backends — anything less and the pruning is either off or
+    // wrong.
+    let mut failed = false;
+    for leg in [&fpga, &asic] {
+        if leg.scored != leg.grid_points {
+            eprintln!(
+                "FAIL: {} surrogate scored {} of {} grid points (policy not engaged)",
+                leg.backend, leg.scored, leg.grid_points
+            );
+            failed = true;
+        }
+        if leg.evaluated * 10 > leg.grid_points {
+            eprintln!(
+                "FAIL: {} surrogate ran {} predictor evaluations on a {}-point grid \
+                 (needs a ≥10× cut)",
+                leg.backend, leg.evaluated, leg.grid_points
+            );
+            failed = true;
+        }
+        if !leg.winner_match {
+            eprintln!(
+                "FAIL: {} surrogate selected a different candidate list than the \
+                 exhaustive sweep",
+                leg.backend
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -18,11 +18,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::builder::{
-    build_accelerator_with_moves, pnr_check, stage1_with, BuildOutput, DseCache, MoveSet,
-    PnrOutcome, Spec, Stage1Output, SweepGrid,
+    build_accelerator_with_policy, pnr_check, stage1_with_policy, BuildOutput, DseCache,
+    DsePolicy, MoveSet, PnrOutcome, Spec, Stage1Output, SweepGrid,
 };
 use crate::coordinator::pool::panic_message;
-use crate::coordinator::{MoveSetChoice, Pool, RunConfig, RunSummary};
+use crate::coordinator::{DseChoice, GridChoice, MoveSetChoice, Pool, RunConfig, RunSummary};
 use crate::dnn::{zoo, Model};
 use crate::ip::tech;
 use crate::obs;
@@ -60,6 +60,7 @@ pub struct EngineBuilder {
     cache: CacheChoice,
     batch_width: Option<usize>,
     cache_dir: Option<PathBuf>,
+    dse_policy: DsePolicy,
 }
 
 impl Default for EngineBuilder {
@@ -75,6 +76,7 @@ impl EngineBuilder {
             cache: CacheChoice::Global,
             batch_width: None,
             cache_dir: None,
+            dse_policy: DsePolicy::Exhaustive,
         }
     }
 
@@ -116,6 +118,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Default stage-1 DSE policy for runs that don't pin one in their
+    /// config (default: [`DsePolicy::Exhaustive`]). A request's explicit
+    /// `"dse"` key always wins over this.
+    pub fn dse_policy(mut self, policy: DsePolicy) -> EngineBuilder {
+        self.dse_policy = policy;
+        self
+    }
+
     pub fn build(self) -> Engine {
         let pool = match self.workers {
             Some(n) => Pool::new(n),
@@ -140,6 +150,7 @@ impl EngineBuilder {
             batch_width,
             cache_dir: self.cache_dir,
             last_flush: Mutex::new(Instant::now()),
+            dse_policy: self.dse_policy,
         }
     }
 }
@@ -156,6 +167,8 @@ pub struct Engine {
     /// and by the periodic serve-loop flush. `None` = in-memory only.
     cache_dir: Option<PathBuf>,
     last_flush: Mutex<Instant>,
+    /// Stage-1 policy for runs whose config leaves `dse` unset.
+    dse_policy: DsePolicy,
 }
 
 impl Drop for Engine {
@@ -432,9 +445,18 @@ impl Engine {
     pub fn run(&self, cfg: &RunConfig) -> Result<RunSummary> {
         let _run_span = obs::span("engine.run");
         let model = cfg.resolve_model()?;
-        let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        let grid = self.grid_for(cfg);
+        let policy = self.resolve_policy(cfg.dse);
         self.load_request_cache_dir(cfg);
-        let build = self.build_with(&model, &cfg.spec, &grid, cfg.n2, cfg.n_opt, cfg.moves)?;
+        let build = self.build_with_policy(
+            &model,
+            &cfg.spec,
+            &grid,
+            cfg.n2,
+            cfg.n_opt,
+            cfg.moves,
+            &policy,
+        )?;
         self.save_request_cache_dir(cfg);
 
         let mut designs = Vec::new();
@@ -477,7 +499,10 @@ impl Engine {
                     MoveSetChoice::Full => "full".into(),
                 },
             ),
+            ("dse", policy.name().into()),
             ("evaluated", build.evaluated.into()),
+            ("scored", build.scored.into()),
+            ("pruned", build.pruned.into()),
             (
                 "dse_cache",
                 obj(vec![
@@ -536,8 +561,33 @@ impl Engine {
         n_opt: usize,
         moves: MoveSetChoice,
     ) -> Result<BuildOutput> {
+        self.build_with_policy(model, spec, grid, n2, n_opt, moves, &self.dse_policy)
+    }
+
+    /// [`Engine::build_with`] with an explicit stage-1 DSE policy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_policy(
+        &self,
+        model: &Model,
+        spec: &Spec,
+        grid: &SweepGrid,
+        n2: usize,
+        n_opt: usize,
+        moves: MoveSetChoice,
+        policy: &DsePolicy,
+    ) -> Result<BuildOutput> {
         let moves = self.resolve_moves(model, spec, moves);
-        build_accelerator_with_moves(model, spec, grid, n2, n_opt, &self.pool, &self.cache, &moves)
+        build_accelerator_with_policy(
+            model,
+            spec,
+            grid,
+            n2,
+            n_opt,
+            &self.pool,
+            &self.cache,
+            &moves,
+            policy,
+        )
     }
 
     /// Stage-1-only sweep over this engine's pool and cache (the `Sweep`
@@ -549,7 +599,42 @@ impl Engine {
         grid: &SweepGrid,
         n2: usize,
     ) -> Result<Stage1Output> {
-        stage1_with(model, spec, grid, n2, &self.pool, &self.cache)
+        self.sweep_with_policy(model, spec, grid, n2, &self.dse_policy)
+    }
+
+    /// [`Engine::sweep_with`] with an explicit stage-1 DSE policy.
+    pub fn sweep_with_policy(
+        &self,
+        model: &Model,
+        spec: &Spec,
+        grid: &SweepGrid,
+        n2: usize,
+        policy: &DsePolicy,
+    ) -> Result<Stage1Output> {
+        stage1_with_policy(model, spec, grid, n2, &self.pool, &self.cache, policy)
+    }
+
+    /// The grid tier a run's config names ("grid": standard | dense).
+    pub fn grid_for(&self, cfg: &RunConfig) -> SweepGrid {
+        match cfg.grid {
+            GridChoice::Standard => SweepGrid::for_backend(&cfg.spec.backend),
+            GridChoice::Dense => SweepGrid::dense_for_backend(&cfg.spec.backend),
+        }
+    }
+
+    /// Resolve a config-level DSE choice against this engine's default:
+    /// an unset key defers to the engine, an explicit key always wins.
+    /// `"surrogate"` reuses the engine's tuned surrogate parameters when
+    /// the engine default is already a surrogate policy.
+    pub fn resolve_policy(&self, choice: Option<DseChoice>) -> DsePolicy {
+        match choice {
+            None => self.dse_policy,
+            Some(DseChoice::Exhaustive) => DsePolicy::Exhaustive,
+            Some(DseChoice::Surrogate) => match self.dse_policy {
+                s @ DsePolicy::Surrogate { .. } => s,
+                DsePolicy::Exhaustive => DsePolicy::surrogate(),
+            },
+        }
     }
 
     fn resolve_moves(&self, model: &Model, spec: &Spec, choice: MoveSetChoice) -> Arc<MoveSet> {
@@ -637,13 +722,16 @@ impl Engine {
     fn sweep(&self, s: &SweepRequest) -> Result<SweepResponse> {
         let cfg = &s.0;
         let model = cfg.resolve_model()?;
-        let grid = SweepGrid::for_backend(&cfg.spec.backend);
+        let grid = self.grid_for(cfg);
+        let policy = self.resolve_policy(cfg.dse);
         self.load_request_cache_dir(cfg);
-        let out = self.sweep_with(&model, &cfg.spec, &grid, cfg.n2)?;
+        let out = self.sweep_with_policy(&model, &cfg.spec, &grid, cfg.n2, &policy)?;
         self.save_request_cache_dir(cfg);
         Ok(SweepResponse {
             model: model.name,
             evaluated: out.evaluated,
+            scored: out.scored,
+            pruned: out.pruned,
             feasible: out.feasible,
             cache_hits: out.cache_hits,
             cache_misses: out.cache_misses,
@@ -742,6 +830,32 @@ mod tests {
         let Response::Batch(deep) = &inner[1] else { panic!("expected a nested batch response") };
         assert_eq!(deep.len(), 1);
         assert!(deep[0].is_error());
+    }
+
+    #[test]
+    fn dse_policy_resolution_prefers_explicit_request_choice() {
+        let exhaustive = Engine::builder().workers(1).isolated_cache().build();
+        assert_eq!(exhaustive.resolve_policy(None), DsePolicy::Exhaustive);
+        assert_eq!(
+            exhaustive.resolve_policy(Some(DseChoice::Surrogate)),
+            DsePolicy::surrogate(),
+            "surrogate request on an exhaustive-default engine uses the stock parameters"
+        );
+
+        let tuned = DsePolicy::Surrogate { top_frac: 0.2, min_evals: 5 };
+        let sur = Engine::builder().workers(1).isolated_cache().dse_policy(tuned).build();
+        assert_eq!(sur.resolve_policy(None), tuned);
+        assert_eq!(
+            sur.resolve_policy(Some(DseChoice::Surrogate)),
+            tuned,
+            "surrogate request keeps the engine's tuned parameters"
+        );
+        assert_eq!(sur.resolve_policy(Some(DseChoice::Exhaustive)), DsePolicy::Exhaustive);
+
+        let j = Json::parse(r#"{"model":"SK","grid":"dense"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        let standard = SweepGrid::for_backend(&cfg.spec.backend);
+        assert!(sur.grid_for(&cfg).len() > standard.len());
     }
 
     #[test]

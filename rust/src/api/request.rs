@@ -268,7 +268,7 @@ pub fn parse_jsonl(text: &str) -> Result<Vec<Request>> {
 mod tests {
     use super::*;
     use crate::builder::Spec;
-    use crate::coordinator::MoveSetChoice;
+    use crate::coordinator::{DseChoice, GridChoice, MoveSetChoice};
 
     fn sample_cfg() -> RunConfig {
         RunConfig {
@@ -278,6 +278,8 @@ mod tests {
             n2: 2,
             n_opt: 1,
             moves: MoveSetChoice::Legacy,
+            dse: None,
+            grid: GridChoice::Standard,
             out_dir: Some("results/x".to_string()),
             rtl_out: None,
             cache_dir: None,
@@ -289,6 +291,8 @@ mod tests {
         asic.spec = Spec::asic_vision();
         asic.moves = MoveSetChoice::Full;
         asic.out_dir = None;
+        asic.dse = Some(DseChoice::Surrogate);
+        asic.grid = GridChoice::Dense;
         let mut with_json = sample_cfg();
         with_json.model = String::new();
         with_json.model_json = Some("examples/models/tinyconv.json".to_string());

@@ -82,7 +82,12 @@ pub struct SweepSelection {
 #[derive(Debug, Clone)]
 pub struct SweepResponse {
     pub model: String,
+    /// Grid points the analytical predictor evaluated.
     pub evaluated: usize,
+    /// Grid points the surrogate ranked (0 for exhaustive sweeps).
+    pub scored: usize,
+    /// Surrogate-skipped points (`scored - evaluated`).
+    pub pruned: usize,
     pub feasible: usize,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -154,6 +159,8 @@ impl Response {
                 ("type", "sweep".into()),
                 ("model", s.model.as_str().into()),
                 ("evaluated", s.evaluated.into()),
+                ("scored", s.scored.into()),
+                ("pruned", s.pruned.into()),
                 ("feasible", s.feasible.into()),
                 ("cache_hits", s.cache_hits.into()),
                 ("cache_misses", s.cache_misses.into()),

@@ -206,6 +206,14 @@ impl DseCache {
         }
     }
 
+    /// Look a key up WITHOUT counting a hit or miss — the surrogate's
+    /// fit-time label harvest reads the table wholesale, and booking those
+    /// reads as sweep traffic would corrupt the cold/warm accounting the
+    /// benches and CI gates assert on.
+    pub fn peek(&self, key: &CacheKey) -> Option<CachedPrediction> {
+        self.lock_shard(key.shard()).get(key).cloned()
+    }
+
     /// Insert (or overwrite — idempotent for deterministic predictors) a
     /// prediction.
     pub fn insert(&self, key: CacheKey, value: CachedPrediction) {

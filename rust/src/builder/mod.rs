@@ -31,6 +31,7 @@ pub mod pnr;
 pub mod spec;
 pub mod stage1;
 pub mod stage2;
+pub mod surrogate;
 
 use std::sync::Arc;
 
@@ -45,8 +46,9 @@ pub use cache::{cache_stamp, CacheKey, CacheStats, DseCache, LoadReport, SaveRep
 pub use moves::{AppliedMove, BoxedMove, Move, MoveSet};
 pub use pnr::{pnr_check, PnrOutcome};
 pub use spec::{Backend, Objective, Spec, SweepGrid};
-pub use stage1::{stage1, stage1_with, Stage1Output, TracePoint};
+pub use stage1::{stage1, stage1_with, stage1_with_policy, Stage1Output, TracePoint};
 pub use stage2::{stage2, stage2_with_moves, Stage2Report, Stage2Step};
+pub use surrogate::{DsePolicy, SurrogatePlan, MIN_FIT_POINTS};
 
 /// One design point carried between the builder's stages: a template
 /// instantiation, its configuration, the coarse prediction, and the best
@@ -62,8 +64,12 @@ pub struct Candidate {
 /// End-to-end Chip-Builder result.
 #[derive(Debug, Clone)]
 pub struct BuildOutput {
-    /// Stage-1 design points evaluated.
+    /// Stage-1 design points the analytical predictor evaluated.
     pub evaluated: usize,
+    /// Stage-1 points the surrogate scored (0 for exhaustive sweeps).
+    pub scored: usize,
+    /// Stage-1 points the surrogate pruned (`scored - evaluated`).
+    pub pruned: usize,
     /// Optimized designs that passed the final feasibility re-check and
     /// the PnR gate, best first by the spec's objective, at most N_opt.
     pub survivors: Vec<Candidate>,
@@ -114,8 +120,8 @@ pub fn build_accelerator_with(
     build_accelerator_with_moves(model, spec, grid, n2, n_opt, pool, cache, &moves)
 }
 
-/// The most general entry point: the full flow over an explicit pool,
-/// cache *and* stage-2 move registry (`MoveSet::legacy()` reproduces the
+/// The full flow over an explicit pool, cache and stage-2 move registry,
+/// with the exhaustive stage-1 policy (`MoveSet::legacy()` reproduces the
 /// PR-2 behavior; ablations compare registries through this).
 #[allow(clippy::too_many_arguments)]
 pub fn build_accelerator_with_moves(
@@ -128,7 +134,36 @@ pub fn build_accelerator_with_moves(
     cache: &Arc<DseCache>,
     moves: &Arc<MoveSet>,
 ) -> Result<BuildOutput> {
-    let s1 = stage1_with(model, spec, grid, n2, pool, cache)?;
+    build_accelerator_with_policy(
+        model,
+        spec,
+        grid,
+        n2,
+        n_opt,
+        pool,
+        cache,
+        moves,
+        &DsePolicy::Exhaustive,
+    )
+}
+
+/// The most general entry point: the full flow over an explicit pool,
+/// cache, stage-2 move registry *and* stage-1 [`DsePolicy`] — surrogate
+/// mode prunes the sweep to the planned slice, everything downstream
+/// (stage 2, ranking, PnR gate) is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn build_accelerator_with_policy(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    n_opt: usize,
+    pool: &Pool,
+    cache: &Arc<DseCache>,
+    moves: &Arc<MoveSet>,
+    policy: &DsePolicy,
+) -> Result<BuildOutput> {
+    let s1 = stage1_with_policy(model, spec, grid, n2, pool, cache, policy)?;
     let (cache_hits, cache_misses) = (s1.cache_hits, s1.cache_misses);
 
     // The N₂ stage-2 refinements are independent of each other: fan them
@@ -167,7 +202,15 @@ pub fn build_accelerator_with_moves(
             survivors.push(best.clone());
         }
     }
-    Ok(BuildOutput { evaluated: s1.evaluated, survivors, stage2_reports, cache_hits, cache_misses })
+    Ok(BuildOutput {
+        evaluated: s1.evaluated,
+        scored: s1.scored,
+        pruned: s1.pruned,
+        survivors,
+        stage2_reports,
+        cache_hits,
+        cache_misses,
+    })
 }
 
 #[cfg(test)]
@@ -259,5 +302,40 @@ mod tests {
         assert_eq!(warm.cache_hits, grid.len() as u64);
         assert_eq!(format!("{:?}", warm.survivors), format!("{:?}", cold.survivors));
         assert_eq!(format!("{:?}", warm.stage2_reports), format!("{:?}", cold.stage2_reports));
+    }
+
+    #[test]
+    fn surrogate_build_matches_exhaustive_on_warm_cache() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(2);
+        let cache = Arc::new(DseCache::new());
+        let moves = Arc::new(MoveSet::full(&m, &spec));
+        let exhaustive =
+            build_accelerator_with_moves(&m, &spec, &grid, 2, 1, &pool, &cache, &moves).unwrap();
+        assert_eq!(exhaustive.scored, 0);
+        assert_eq!(exhaustive.pruned, 0);
+
+        let sur = build_accelerator_with_policy(
+            &m,
+            &spec,
+            &grid,
+            2,
+            1,
+            &pool,
+            &cache,
+            &moves,
+            &DsePolicy::surrogate(),
+        )
+        .unwrap();
+        assert_eq!(sur.scored, grid.len());
+        assert!(sur.evaluated * 10 <= grid.len(), "{} evals", sur.evaluated);
+        assert_eq!(sur.pruned, sur.scored - sur.evaluated);
+        // Same stage-1 selection feeds the same stage-2 refinements: the
+        // surviving designs are identical.
+        assert_eq!(format!("{:?}", sur.survivors), format!("{:?}", exhaustive.survivors));
+        let reports = format!("{:?}", exhaustive.stage2_reports);
+        assert_eq!(format!("{:?}", sur.stage2_reports), reports);
     }
 }

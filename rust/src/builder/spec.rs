@@ -160,6 +160,32 @@ impl SweepGrid {
         }
     }
 
+    /// The dense grid tier: a strict superset of [`SweepGrid::for_backend`]
+    /// with intermediate unroll and buffer steps that exhaustive search
+    /// cannot afford but surrogate-guided stage 1 can — the surrogate
+    /// scores every point for microseconds and hands the predictor only
+    /// the top slice. Because the standard axes are contained verbatim, a
+    /// cache warmed by a standard sweep already holds enough labeled
+    /// points to fit the surrogate for a dense sweep of the same model.
+    pub fn dense_for_backend(backend: &Backend) -> SweepGrid {
+        let mut grid = SweepGrid::for_backend(backend);
+        match backend {
+            Backend::Fpga { .. } => {
+                grid.unrolls = vec![64, 96, 128, 192, 256, 320];
+                grid.act_buf_bits = vec![1 << 20, 3 << 19, 2 << 20];
+                grid.w_buf_bits = vec![1 << 20, 3 << 19, 2 << 20];
+            }
+            Backend::Asic { .. } => {
+                grid.unrolls = vec![8, 16, 24, 32, 40, 48, 56];
+                grid.act_buf_bits =
+                    vec![16 * 8 * 1024, 24 * 8 * 1024, 32 * 8 * 1024, 48 * 8 * 1024];
+                grid.w_buf_bits =
+                    vec![16 * 8 * 1024, 24 * 8 * 1024, 32 * 8 * 1024, 48 * 8 * 1024];
+            }
+        }
+        grid
+    }
+
     /// Number of design points the grid enumerates.
     pub fn len(&self) -> usize {
         self.templates.len()
@@ -274,6 +300,37 @@ mod tests {
             assert_eq!(grid.len(), grid.points().len());
             assert!(grid.len() > 100, "grid too small: {}", grid.len());
             assert!(!grid.is_empty());
+        }
+    }
+
+    #[test]
+    fn dense_grid_is_a_strict_superset_of_standard() {
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let std_grid = SweepGrid::for_backend(&spec.backend);
+            let dense = SweepGrid::dense_for_backend(&spec.backend);
+            assert!(
+                dense.len() >= std_grid.len() * 3,
+                "dense tier too small: {} vs {}",
+                dense.len(),
+                std_grid.len()
+            );
+            // Every standard axis value appears in the dense axis, so the
+            // standard points (and their cache entries) are contained
+            // verbatim — the surrogate's warm-start guarantee.
+            for u in &std_grid.unrolls {
+                assert!(dense.unrolls.contains(u));
+            }
+            for b in &std_grid.act_buf_bits {
+                assert!(dense.act_buf_bits.contains(b));
+            }
+            for b in &std_grid.w_buf_bits {
+                assert!(dense.w_buf_bits.contains(b));
+            }
+            assert_eq!(dense.templates, std_grid.templates);
+            assert_eq!(dense.precisions, std_grid.precisions);
+            assert_eq!(dense.bus_bits, std_grid.bus_bits);
+            assert_eq!(dense.pipelines, std_grid.pipelines);
+            assert_eq!(dense.len(), dense.points().len());
         }
     }
 

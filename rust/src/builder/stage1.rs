@@ -10,6 +10,13 @@
 //! the cache bypasses only the build-and-predict step, never the
 //! spec-dependent filtering or selection, so cached and uncached sweeps
 //! select identical candidates (a property test enforces this).
+//!
+//! Under [`DsePolicy::Surrogate`] the sweep first scores the whole grid
+//! with the ridge surrogate fitted on cache contents
+//! ([`super::surrogate`]) and hands only the planned slice to the
+//! predictor; `scored`/`pruned` in [`Stage1Output`] account for the
+//! skipped points so the Fig. 11/14 trace cloud stays honest in both
+//! modes. A cache too cold to fit falls back to the exhaustive sweep.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -23,6 +30,7 @@ use crate::templates::{HwConfig, TemplateId};
 
 use super::cache::{CacheKey, DseCache};
 use super::spec::{Spec, SweepGrid};
+use super::surrogate::{self, DsePolicy};
 use super::Candidate;
 
 /// One evaluated grid point, kept for the Fig. 11/14 design-cloud scatter.
@@ -37,11 +45,23 @@ pub struct TracePoint {
 /// Stage-1 sweep result.
 #[derive(Debug, Clone)]
 pub struct Stage1Output {
-    /// Grid points evaluated (paper's N₁).
+    /// Grid points the analytical predictor actually evaluated (paper's
+    /// N₁ in exhaustive mode; the planned slice in surrogate mode).
     pub evaluated: usize,
-    /// Points that met every constraint.
+    /// Grid points the surrogate scored before pruning — 0 when the sweep
+    /// was exhaustive (including a surrogate run that fell back cold),
+    /// the full grid size when the surrogate engaged.
+    pub scored: usize,
+    /// Surrogate-skipped points (`scored - evaluated`; 0 when exhaustive).
+    pub pruned: usize,
+    /// Labeled cache points the surrogate was fitted on (0 when
+    /// exhaustive).
+    pub fit_points: usize,
+    /// Evaluated points that met every constraint.
     pub feasible: usize,
-    /// One point per evaluation, in grid order.
+    /// One point per *evaluated* grid point, in grid order (surrogate
+    /// mode traces only what the predictor ran, keeping the design-cloud
+    /// scatter honest).
     pub trace: Vec<TracePoint>,
     /// Top-N₂ feasible candidates by the spec's objective, best first.
     pub selected: Vec<Candidate>,
@@ -72,7 +92,8 @@ pub fn stage1(model: &Model, spec: &Spec, grid: &SweepGrid, n2: usize) -> Result
 
 /// Run the stage-1 sweep over an explicit worker pool and cache: build each
 /// grid point's graph (or recall its memoized prediction), predict it with
-/// the coarse mode, filter, and select the top `n2` by objective.
+/// the coarse mode, filter, and select the top `n2` by objective. Always
+/// exhaustive; [`stage1_with_policy`] is the policy-aware entry point.
 pub fn stage1_with(
     model: &Model,
     spec: &Spec,
@@ -81,14 +102,64 @@ pub fn stage1_with(
     pool: &Pool,
     cache: &Arc<DseCache>,
 ) -> Result<Stage1Output> {
+    stage1_with_policy(model, spec, grid, n2, pool, cache, &DsePolicy::Exhaustive)
+}
+
+/// [`stage1_with`] under an explicit [`DsePolicy`]: exhaustive mode
+/// evaluates every grid point; surrogate mode scores the grid with the
+/// ridge model fitted on cache contents and evaluates only the planned
+/// slice (falling back to exhaustive when the cache is too cold to fit).
+/// Selection and filtering are identical in both modes — only the set of
+/// points handed to the predictor differs.
+#[allow(clippy::too_many_arguments)]
+pub fn stage1_with_policy(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    n2: usize,
+    pool: &Pool,
+    cache: &Arc<DseCache>,
+    policy: &DsePolicy,
+) -> Result<Stage1Output> {
     // Validate the model once up front so per-point failures can only mean
     // "this configuration cannot realize the model", not "bad model".
     model.stats()?;
     let _sweep_span = crate::obs::span("stage1.sweep");
 
-    let points = grid.points();
-    let evaluated = points.len();
+    let mut points = grid.points();
     let model_fp = model.fingerprint();
+
+    // Under the surrogate policy, shrink the point list to the planned
+    // evaluation slice. The plan keeps ascending grid order, so the
+    // selection sort below tie-breaks exactly like the exhaustive sweep.
+    let (scored, fit_points, surrogate_engaged) = match policy {
+        DsePolicy::Exhaustive => (0, 0, false),
+        DsePolicy::Surrogate { top_frac, min_evals } => {
+            match surrogate::plan(model, spec, &points, cache, n2, *top_frac, *min_evals) {
+                Some(p) => {
+                    let mut keep = p.eval_indices.iter().copied().peekable();
+                    points = points
+                        .into_iter()
+                        .enumerate()
+                        .filter(|(i, _)| {
+                            if keep.peek() == Some(i) {
+                                keep.next();
+                                true
+                            } else {
+                                false
+                            }
+                        })
+                        .map(|(_, pt)| pt)
+                        .collect();
+                    (p.scored, p.fit_points, true)
+                }
+                // Too few labeled cache points to fit: evaluate the whole
+                // grid (and thereby label it for the next sweep).
+                None => (0, 0, false),
+            }
+        }
+    };
+    let evaluated = points.len();
     let shared_model = Arc::new(model.clone());
     let shared_spec = spec.clone();
     let shared_cache = Arc::clone(cache);
@@ -140,6 +211,7 @@ pub fn stage1_with(
         .context("stage-1 sweep failed")?;
 
     let feasible = evals.iter().filter(|e| e.feasible).count();
+    let pruned = scored.saturating_sub(evaluated);
     let (cache_hits, cache_misses) =
         (hits.load(Ordering::Relaxed), misses.load(Ordering::Relaxed));
     if crate::obs::enabled() {
@@ -149,6 +221,16 @@ pub fn stage1_with(
         counter("stage1.cache_served", cache_hits);
         counter("stage1.predicted", cache_misses);
         counter("stage1.feasible", feasible as u64);
+        if matches!(policy, DsePolicy::Surrogate { .. }) {
+            if surrogate_engaged {
+                counter("surrogate.fit_points", fit_points as u64);
+                counter("surrogate.scored", scored as u64);
+                counter("surrogate.evaluated", evaluated as u64);
+                counter("surrogate.skipped", pruned as u64);
+            } else {
+                counter("surrogate.fallbacks", 1);
+            }
+        }
     }
     let trace: Vec<TracePoint> = evals
         .iter()
@@ -181,7 +263,17 @@ pub fn stage1_with(
     });
     selected.truncate(n2);
 
-    Ok(Stage1Output { evaluated, feasible, trace, selected, cache_hits, cache_misses })
+    Ok(Stage1Output {
+        evaluated,
+        scored,
+        pruned,
+        fit_points,
+        feasible,
+        trace,
+        selected,
+        cache_hits,
+        cache_misses,
+    })
 }
 
 #[cfg(test)]
@@ -197,6 +289,8 @@ mod tests {
         let grid = SweepGrid::for_backend(&spec.backend);
         let s1 = stage1(&m, &spec, &grid, 3).unwrap();
         assert_eq!(s1.evaluated, grid.len());
+        assert_eq!(s1.scored, 0, "exhaustive sweeps do not score");
+        assert_eq!(s1.pruned, 0);
         assert_eq!(s1.trace.len(), s1.evaluated);
         assert!(s1.feasible <= s1.evaluated);
         assert_eq!(s1.trace.iter().filter(|p| p.feasible).count(), s1.feasible);
@@ -273,5 +367,61 @@ mod tests {
         let filtered = stage1_with(&m, &tight, &grid, 3, &pool, &cache).unwrap();
         assert_eq!(filtered.cache_hits, grid.len() as u64);
         assert_eq!(filtered.feasible, 0);
+    }
+
+    /// The cold-cache fallback: a surrogate sweep with nothing to fit on
+    /// degrades to the exhaustive sweep — identical trace and selection,
+    /// `scored == 0` marking that the surrogate never engaged.
+    #[test]
+    fn surrogate_cold_cache_falls_back_to_exhaustive() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(2);
+
+        let sur_cache = Arc::new(DseCache::new());
+        let policy = DsePolicy::surrogate();
+        let sur = stage1_with_policy(&m, &spec, &grid, 3, &pool, &sur_cache, &policy).unwrap();
+        assert_eq!(sur.evaluated, grid.len(), "cold fallback must cover the grid");
+        assert_eq!(sur.scored, 0);
+        assert_eq!(sur.pruned, 0);
+        assert_eq!(sur.fit_points, 0);
+
+        let ex_cache = Arc::new(DseCache::new());
+        let ex = stage1_with(&m, &spec, &grid, 3, &pool, &ex_cache).unwrap();
+        assert_eq!(format!("{:?}", sur.selected), format!("{:?}", ex.selected));
+        assert_eq!(format!("{:?}", sur.trace), format!("{:?}", ex.trace));
+    }
+
+    /// The headline claim on one model: with a warm cache, surrogate mode
+    /// selects the exact same candidates as exhaustive with ≥10× fewer
+    /// predictor evaluations, and the accounting pair covers the grid.
+    #[test]
+    fn surrogate_warm_cache_matches_exhaustive_with_10x_fewer_evals() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let pool = Pool::new(3);
+        let cache = Arc::new(DseCache::new());
+        let exhaustive = stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap();
+
+        let policy = DsePolicy::surrogate();
+        let sur = stage1_with_policy(&m, &spec, &grid, 3, &pool, &cache, &policy).unwrap();
+        assert_eq!(sur.scored, grid.len(), "warm cache must engage the surrogate");
+        assert!(
+            sur.evaluated * 10 <= grid.len(),
+            "pruning below 10x: {} evals on a {}-point grid",
+            sur.evaluated,
+            grid.len()
+        );
+        assert_eq!(sur.pruned + sur.evaluated, sur.scored);
+        assert!(sur.fit_points >= crate::builder::surrogate::MIN_FIT_POINTS);
+        assert_eq!(sur.trace.len(), sur.evaluated, "trace covers evaluated points only");
+        assert_eq!(sur.cache_hits + sur.cache_misses, sur.evaluated as u64);
+        assert_eq!(
+            format!("{:?}", sur.selected),
+            format!("{:?}", exhaustive.selected),
+            "surrogate must select exactly the exhaustive candidates on a warm cache"
+        );
     }
 }

@@ -1,0 +1,691 @@
+//! Surrogate-guided stage-1 DSE: a zero-dependency ridge-regression model
+//! fitted on [`DseCache`] contents ranks the sweep grid so the analytical
+//! predictor only runs on the most promising slice.
+//!
+//! The cache is already a labeled dataset — every memoized entry pairs a
+//! (model, template, configuration) point with its [`CoarseReport`] (or
+//! `None` for configurations the template cannot realize). The surrogate
+//! featurizes each grid point (template one-hot, precision bits, log2 of
+//! the unroll/buffer/bus/pipeline axes, plus cheap model aggregates) and
+//! fits three linear models via closed-form normal equations over
+//! [`crate::util::stats`]: log-latency, log-energy and a 0/1 feasibility
+//! score. Scoring the whole grid is a dot product per point — microseconds
+//! against the milliseconds a build-and-predict costs — so surrogate mode
+//! can afford grids exhaustive search cannot (see
+//! [`SweepGrid::dense_for_backend`](super::SweepGrid::dense_for_backend)).
+//!
+//! Determinism: the only randomness is the exploration tail, drawn from a
+//! [`crate::util::rng::Rng`] seeded by the model fingerprint and the grid
+//! size — two runs over the same cache state plan the same evaluations.
+//!
+//! Winner preservation: the plan always includes the top
+//! `max(n2, ELITE_FLOOR)` *labeled* feasible points ranked by their TRUE
+//! cached objective (not the surrogate's estimate). On a fully warm cache
+//! the evaluated subset therefore contains the exhaustive sweep's entire
+//! top-N₂, and because the plan keeps grid order, the stable selection
+//! sort breaks ties exactly as the exhaustive sweep does — same winner,
+//! same `selected` list, ≥10× fewer predictor evaluations (property-tested
+//! and CI-gated via `benches/surrogate.rs`).
+
+use anyhow::Result;
+
+use crate::dnn::Model;
+use crate::obs::Snapshot;
+use crate::templates::{HwConfig, TemplateId};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::cache::{CacheKey, DseCache};
+use super::spec::{Backend, Objective, Spec, SweepGrid};
+
+/// How stage 1 walks the sweep grid.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum DsePolicy {
+    /// Run the analytical predictor on every grid point (the classic
+    /// Table-1 sweep; the default).
+    #[default]
+    Exhaustive,
+    /// Score the whole grid with the ridge surrogate fitted on cache
+    /// contents, then run the predictor only on the top `top_frac` slice
+    /// (never fewer than `min_evals` points) plus a small seeded
+    /// exploration tail that keeps feeding the cache fresh labels. Falls
+    /// back to exhaustive when the cache holds fewer than
+    /// [`MIN_FIT_POINTS`] labeled points for this (model, grid).
+    Surrogate {
+        /// Fraction of the grid the predictor evaluates (0 < f ≤ 1).
+        top_frac: f64,
+        /// Lower bound on evaluated points, so tiny grids stay covered.
+        min_evals: usize,
+    },
+}
+
+impl DsePolicy {
+    /// The default surrogate policy: evaluate the top 8% of the grid,
+    /// never fewer than 32 points — under the ≥10× pruning gate on both
+    /// default backend grids while leaving slack for the elites and the
+    /// exploration tail.
+    pub fn surrogate() -> DsePolicy {
+        DsePolicy::Surrogate { top_frac: 0.08, min_evals: 32 }
+    }
+
+    /// Short name for logs and result JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DsePolicy::Exhaustive => "exhaustive",
+            DsePolicy::Surrogate { .. } => "surrogate",
+        }
+    }
+}
+
+/// Feature vector width: one-hot over the 5-template pool, 2 precision
+/// operands, 5 log2 configuration axes, 3 model aggregates.
+pub const FEATURE_DIM: usize = 15;
+
+/// Column names of [`featurize`]'s output, in order (the training-dump
+/// schema and the README both reference these).
+pub const FEATURE_NAMES: [&str; FEATURE_DIM] = [
+    "tpl_adder_tree",
+    "tpl_hetero_dw_pw",
+    "tpl_systolic",
+    "tpl_eyeriss_rs",
+    "tpl_shidiannao",
+    "w_bits",
+    "a_bits",
+    "log2_unroll",
+    "log2_act_buf_bits",
+    "log2_w_buf_bits",
+    "log2_bus_bits",
+    "log2_pipeline",
+    "log2_model_macs",
+    "log2_model_weight_bits",
+    "log2_model_layers",
+];
+
+/// Fewest labeled cache points the ridge fit accepts; below this the
+/// normal equations are too underdetermined to trust and stage 1 falls
+/// back to the exhaustive sweep.
+pub const MIN_FIT_POINTS: usize = 48;
+
+/// Fewest rows a per-template sub-model needs before it outranks the
+/// pooled model (≥ FEATURE_DIM so the fit is not trivially singular).
+const MIN_TEMPLATE_FIT: usize = 20;
+
+/// Ridge regularizer λ (scaled by the row count in the normal equations).
+const RIDGE_LAMBDA: f64 = 1e-4;
+
+/// Multiplier applied to a point's predicted objective when the
+/// feasibility model votes infeasible — demoted, not discarded, so a
+/// miscalibrated classifier cannot hide the true winner.
+const INFEASIBLE_DEMOTION: f64 = 8.0;
+
+/// The plan always carries at least this many true-best labeled feasible
+/// points (more when n2 is larger), so a warm cache guarantees the
+/// exhaustive winner is in the evaluated subset.
+const ELITE_FLOOR: usize = 8;
+
+/// Cheap whole-model aggregates appended to every grid-point feature
+/// vector, so one fitted model generalizes across workloads sharing a
+/// cache.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelFeatures {
+    pub log2_macs: f64,
+    pub log2_weight_bits: f64,
+    pub log2_layers: f64,
+}
+
+impl ModelFeatures {
+    pub fn for_model(model: &Model) -> Result<ModelFeatures> {
+        let s = model.stats()?;
+        Ok(ModelFeatures {
+            log2_macs: (s.total_macs.max(1) as f64).log2(),
+            log2_weight_bits: ((s.model_size_bytes.max(1) * 8) as f64).log2(),
+            log2_layers: (model.layers.len().max(1) as f64).log2(),
+        })
+    }
+}
+
+/// Index of a template in the full [`TemplateId::pool`] (the one-hot
+/// position; stable across backends).
+fn template_index(template: TemplateId) -> usize {
+    TemplateId::pool().iter().position(|&t| t == template).unwrap_or(0)
+}
+
+/// Featurize one grid point. Log2 on the multiplicative axes linearizes
+/// the cost model's dominant power laws; the model aggregates are constant
+/// within one sweep (their column standardizes to zero and drops out of a
+/// single-model fit) but differentiate workloads in a shared cache.
+pub fn featurize(template: TemplateId, cfg: &HwConfig, mf: &ModelFeatures) -> [f64; FEATURE_DIM] {
+    let mut x = [0.0; FEATURE_DIM];
+    x[template_index(template)] = 1.0;
+    x[5] = cfg.prec.w_bits as f64;
+    x[6] = cfg.prec.a_bits as f64;
+    x[7] = (cfg.unroll.max(1) as f64).log2();
+    x[8] = (cfg.act_buf_bits.max(1) as f64).log2();
+    x[9] = (cfg.w_buf_bits.max(1) as f64).log2();
+    x[10] = (cfg.bus_bits.max(1) as f64).log2();
+    x[11] = (cfg.pipeline.max(1) as f64).log2();
+    x[12] = mf.log2_macs;
+    x[13] = mf.log2_weight_bits;
+    x[14] = mf.log2_layers;
+    x
+}
+
+/// Closed-form ridge regression over standardized features and a centered
+/// target: solve (ZᵀZ + λnI)θ = Zᵀy by Gaussian elimination. Constant
+/// columns (one-hots inside a per-template fit, model aggregates inside a
+/// single sweep) standardize to zero and are neutralized by the ridge
+/// term instead of blowing up the solve.
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    mean_x: Vec<f64>,
+    scale_x: Vec<f64>,
+    mean_y: f64,
+    theta: Vec<f64>,
+}
+
+impl Ridge {
+    pub fn fit(xs: &[[f64; FEATURE_DIM]], ys: &[f64], lambda: f64) -> Ridge {
+        let d = FEATURE_DIM;
+        let n = xs.len();
+        let mut mean_x = vec![0.0; d];
+        let mut scale_x = vec![1.0; d];
+        let mut col = vec![0.0; n];
+        for j in 0..d {
+            for (i, x) in xs.iter().enumerate() {
+                col[i] = x[j];
+            }
+            mean_x[j] = stats::mean(&col);
+            let s = stats::stddev(&col);
+            if s > 1e-12 {
+                scale_x[j] = s;
+            }
+        }
+        let mean_y = stats::mean(ys);
+
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        let mut z = vec![0.0; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            for j in 0..d {
+                z[j] = (x[j] - mean_x[j]) / scale_x[j];
+            }
+            let yc = y - mean_y;
+            for j in 0..d {
+                xty[j] += z[j] * yc;
+                for k in j..d {
+                    xtx[j][k] += z[j] * z[k];
+                }
+            }
+        }
+        for j in 0..d {
+            for k in 0..j {
+                xtx[j][k] = xtx[k][j];
+            }
+            xtx[j][j] += lambda * n.max(1) as f64;
+        }
+        // λ > 0 makes the system positive definite, so the solve cannot
+        // fail for real inputs; a degenerate fit degrades to the mean.
+        let theta = solve(xtx, xty).unwrap_or_else(|| vec![0.0; d]);
+        Ridge { mean_x, scale_x, mean_y, theta }
+    }
+
+    pub fn predict(&self, x: &[f64; FEATURE_DIM]) -> f64 {
+        let mut y = self.mean_y;
+        for j in 0..FEATURE_DIM {
+            y += self.theta[j] * (x[j] - self.mean_x[j]) / self.scale_x[j];
+        }
+        y
+    }
+}
+
+/// Gauss–Jordan elimination with partial pivoting; `None` on a (numerically)
+/// singular system.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / d;
+            if f != 0.0 {
+                for c in col..n {
+                    a[r][c] -= f * a[col][c];
+                }
+                b[r] -= f * b[col];
+            }
+        }
+    }
+    Some((0..n).map(|i| b[i] / a[i][i]).collect())
+}
+
+/// One labeled (realizable) cache row used by the fit.
+struct LabeledPoint {
+    /// Index into the grid's `points()` ordering.
+    idx: usize,
+    latency_ms: f64,
+    energy_uj: f64,
+    feasible: bool,
+}
+
+/// A per-objective model: one pooled ridge plus per-template sub-models
+/// that take over once a template has enough labeled rows (per-template
+/// fits capture dataflow-specific slopes the pooled one-hot offsets miss).
+struct ObjectiveModel {
+    pooled: Ridge,
+    per_template: Vec<Option<Ridge>>,
+}
+
+impl ObjectiveModel {
+    fn fit(feats: &[[f64; FEATURE_DIM]], rows: &[(usize, f64)]) -> ObjectiveModel {
+        let xs: Vec<[f64; FEATURE_DIM]> = rows.iter().map(|&(i, _)| feats[i]).collect();
+        let ys: Vec<f64> = rows.iter().map(|&(_, y)| y).collect();
+        let pooled = Ridge::fit(&xs, &ys, RIDGE_LAMBDA);
+        let n_templates = TemplateId::pool().len();
+        let mut per_template = Vec::with_capacity(n_templates);
+        for t in 0..n_templates {
+            let sub: Vec<usize> =
+                (0..rows.len()).filter(|&r| feats[rows[r].0][t] == 1.0).collect();
+            per_template.push(if sub.len() >= MIN_TEMPLATE_FIT {
+                let sxs: Vec<[f64; FEATURE_DIM]> = sub.iter().map(|&r| xs[r]).collect();
+                let sys: Vec<f64> = sub.iter().map(|&r| ys[r]).collect();
+                Some(Ridge::fit(&sxs, &sys, RIDGE_LAMBDA))
+            } else {
+                None
+            });
+        }
+        ObjectiveModel { pooled, per_template }
+    }
+
+    fn predict(&self, template: TemplateId, x: &[f64; FEATURE_DIM]) -> f64 {
+        self.per_template[template_index(template)].as_ref().unwrap_or(&self.pooled).predict(x)
+    }
+}
+
+/// The fitted surrogate: log-latency, log-energy and feasibility models.
+pub struct SurrogateModel {
+    latency: ObjectiveModel,
+    energy: ObjectiveModel,
+    feasibility: ObjectiveModel,
+}
+
+impl SurrogateModel {
+    fn fit(feats: &[[f64; FEATURE_DIM]], labeled: &[LabeledPoint]) -> SurrogateModel {
+        let lat: Vec<(usize, f64)> =
+            labeled.iter().map(|p| (p.idx, p.latency_ms.max(1e-12).ln())).collect();
+        let en: Vec<(usize, f64)> =
+            labeled.iter().map(|p| (p.idx, p.energy_uj.max(1e-12).ln())).collect();
+        let feas: Vec<(usize, f64)> =
+            labeled.iter().map(|p| (p.idx, if p.feasible { 1.0 } else { 0.0 })).collect();
+        SurrogateModel {
+            latency: ObjectiveModel::fit(feats, &lat),
+            energy: ObjectiveModel::fit(feats, &en),
+            feasibility: ObjectiveModel::fit(feats, &feas),
+        }
+    }
+
+    /// Predicted objective score of one point under `spec` — lower is
+    /// better, demoted ×[`INFEASIBLE_DEMOTION`] when the feasibility model
+    /// votes it out of budget.
+    pub fn score(&self, spec: &Spec, template: TemplateId, x: &[f64; FEATURE_DIM]) -> f64 {
+        let lat = self.latency.predict(template, x).exp();
+        let en = self.energy.predict(template, x).exp();
+        let mut s = spec.objective_score(lat, en);
+        if self.feasibility.predict(template, x) < 0.5 {
+            s *= INFEASIBLE_DEMOTION;
+        }
+        s
+    }
+}
+
+/// Which grid points surrogate mode hands to the analytical predictor.
+#[derive(Debug, Clone)]
+pub struct SurrogatePlan {
+    /// Indices into the grid's `points()` ordering, strictly ascending —
+    /// keeping grid order preserves the exhaustive sweep's stable-sort
+    /// tie-breaking in the selection step.
+    pub eval_indices: Vec<usize>,
+    /// Labeled cache points the ridge models were fitted on.
+    pub fit_points: usize,
+    /// Grid points the surrogate scored (the whole grid).
+    pub scored: usize,
+}
+
+/// Build the evaluation plan for one sweep, or `None` when the cache
+/// holds fewer than [`MIN_FIT_POINTS`] labeled points for this (model,
+/// grid) — the caller then falls back to the exhaustive sweep.
+///
+/// The evaluated subset is the union of three deterministic slices:
+/// 1. **Elites** — the top `max(n2, ELITE_FLOOR)` labeled feasible points
+///    by their true cached objective (winner preservation).
+/// 2. **Top slice** — the best surrogate-scored points up to the budget
+///    minus the exploration tail.
+/// 3. **Exploration tail** — `budget/8` points drawn uniformly (seeded by
+///    the model fingerprint and grid size) from the remainder, so a serve
+///    session keeps labeling regions the model is unsure about.
+pub fn plan(
+    model: &Model,
+    spec: &Spec,
+    points: &[(TemplateId, HwConfig)],
+    cache: &DseCache,
+    n2: usize,
+    top_frac: f64,
+    min_evals: usize,
+) -> Option<SurrogatePlan> {
+    let n = points.len();
+    if n == 0 {
+        return None;
+    }
+    let mf = ModelFeatures::for_model(model).ok()?;
+    let model_fp = model.fingerprint();
+    let feats: Vec<[f64; FEATURE_DIM]> =
+        points.iter().map(|(t, cfg)| featurize(*t, cfg, &mf)).collect();
+
+    // Harvest labels without touching the hit/miss counters — this is a
+    // fit-time read, not a sweep lookup.
+    let mut labeled: Vec<LabeledPoint> = Vec::new();
+    for (i, (t, cfg)) in points.iter().enumerate() {
+        if let Some(Some(report)) = cache.peek(&CacheKey::new(model_fp, *t, cfg)) {
+            labeled.push(LabeledPoint {
+                idx: i,
+                latency_ms: report.latency_ms,
+                energy_uj: report.energy_uj(),
+                feasible: spec.feasible(&report),
+            });
+        }
+    }
+    if labeled.len() < MIN_FIT_POINTS {
+        return None;
+    }
+    let fit_points = labeled.len();
+    let model_fit = SurrogateModel::fit(&feats, &labeled);
+
+    let scores: Vec<f64> = points
+        .iter()
+        .zip(&feats)
+        .map(|((t, _), x)| model_fit.score(spec, *t, x))
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+
+    let budget = ((top_frac.max(0.0) * n as f64).ceil() as usize).max(min_evals.max(1)).min(n);
+    let mut chosen = std::collections::BTreeSet::new();
+
+    // 1. Elites by TRUE cached objective (ties broken by grid order, the
+    //    same ordering the exhaustive selection sort produces).
+    let mut elites: Vec<&LabeledPoint> = labeled.iter().filter(|p| p.feasible).collect();
+    elites.sort_by(|a, b| {
+        let sa = spec.objective_score(a.latency_ms, a.energy_uj);
+        let sb = spec.objective_score(b.latency_ms, b.energy_uj);
+        sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal).then(a.idx.cmp(&b.idx))
+    });
+    for p in elites.iter().take(n2.max(ELITE_FLOOR).min(budget)) {
+        chosen.insert(p.idx);
+    }
+
+    // 2. Surrogate top slice, leaving room for the exploration tail.
+    let explore = (budget / 8).max(2).min(budget.saturating_sub(chosen.len()));
+    let top_quota = budget - explore;
+    for &i in &order {
+        if chosen.len() >= top_quota {
+            break;
+        }
+        chosen.insert(i);
+    }
+
+    // 3. Seeded exploration tail from the unchosen remainder.
+    let mut rng = Rng::new(0x5E_AC4E ^ model_fp ^ (n as u64).rotate_left(17));
+    let mut rest: Vec<usize> = (0..n).filter(|i| !chosen.contains(i)).collect();
+    rng.shuffle(&mut rest);
+    for &i in &rest {
+        if chosen.len() >= budget {
+            break;
+        }
+        chosen.insert(i);
+    }
+
+    Some(SurrogatePlan { eval_indices: chosen.into_iter().collect(), fit_points, scored: n })
+}
+
+/// Serialize the grid's featurized training rows (labels read from the
+/// cache) plus the stage-2 move accept/reject counters of an
+/// [`Snapshot`] — the `sweep --dump-training FILE` payload, so a long
+/// `serve` session's telemetry is harvestable offline.
+pub fn training_dump(
+    model: &Model,
+    spec: &Spec,
+    grid: &SweepGrid,
+    cache: &DseCache,
+    snapshot: &Snapshot,
+) -> Result<Json> {
+    let mf = ModelFeatures::for_model(model)?;
+    let model_fp = model.fingerprint();
+    let points = grid.points();
+    let mut rows: Vec<Json> = Vec::new();
+    let (mut unrealizable, mut unlabeled) = (0usize, 0usize);
+    for (t, cfg) in &points {
+        match cache.peek(&CacheKey::new(model_fp, *t, cfg)) {
+            Some(Some(c)) => {
+                let x = featurize(*t, cfg, &mf);
+                rows.push(obj(vec![
+                    ("template", t.name().into()),
+                    ("features", Json::Arr(x.iter().map(|&v| Json::Num(v)).collect())),
+                    ("latency_ms", c.latency_ms.into()),
+                    ("energy_uj", c.energy_uj().into()),
+                    ("objective_score", spec.objective_score(c.latency_ms, c.energy_uj()).into()),
+                    ("feasible", spec.feasible(&c).into()),
+                ]));
+            }
+            Some(None) => unrealizable += 1,
+            None => unlabeled += 1,
+        }
+    }
+
+    // stage2.move.<name>.{proposed,accepted,rejected} counters, regrouped
+    // per move (empty unless the snapshot was taken with obs enabled).
+    let mut moves: std::collections::BTreeMap<String, [u64; 3]> = Default::default();
+    for (name, &v) in &snapshot.counters {
+        if let Some(rest) = name.strip_prefix("stage2.move.") {
+            if let Some((mv, kind)) = rest.rsplit_once('.') {
+                let slot = match kind {
+                    "proposed" => 0,
+                    "accepted" => 1,
+                    "rejected" => 2,
+                    _ => continue,
+                };
+                moves.entry(mv.to_string()).or_default()[slot] = v;
+            }
+        }
+    }
+    let moves_json: std::collections::BTreeMap<String, Json> = moves
+        .into_iter()
+        .map(|(mv, [p, a, r])| {
+            (
+                mv,
+                obj(vec![
+                    ("proposed", p.into()),
+                    ("accepted", a.into()),
+                    ("rejected", r.into()),
+                ]),
+            )
+        })
+        .collect();
+
+    Ok(obj(vec![
+        ("type", "training_dump".into()),
+        ("model", model.name.as_str().into()),
+        ("model_fp", format!("{model_fp:016x}").into()),
+        (
+            "backend",
+            match spec.backend {
+                Backend::Fpga { .. } => "fpga",
+                Backend::Asic { .. } => "asic",
+            }
+            .into(),
+        ),
+        (
+            "objective",
+            match spec.objective {
+                Objective::Latency => "latency",
+                Objective::Energy => "energy",
+                Objective::Edp => "edp",
+            }
+            .into(),
+        ),
+        ("grid_points", points.len().into()),
+        ("unlabeled", unlabeled.into()),
+        ("unrealizable", unrealizable.into()),
+        ("feature_names", Json::Arr(FEATURE_NAMES.iter().map(|&s| s.into()).collect())),
+        ("rows", Json::Arr(rows)),
+        ("moves", Json::Obj(moves_json)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::builder::stage1_with;
+    use crate::coordinator::Pool;
+    use crate::dnn::zoo;
+    use std::sync::Arc;
+
+    #[test]
+    fn ridge_recovers_a_linear_relation() {
+        // y = 3 + 2*x7 - 0.5*x8 over a deterministic cloud: the fit must
+        // reproduce it to numerical precision (λ is tiny).
+        let mut rng = Rng::new(42);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let mut x = [0.0; FEATURE_DIM];
+            x[7] = rng.range_f64(1.0, 10.0);
+            x[8] = rng.range_f64(5.0, 25.0);
+            x[0] = 1.0;
+            xs.push(x);
+            ys.push(3.0 + 2.0 * x[7] - 0.5 * x[8]);
+        }
+        let r = Ridge::fit(&xs, &ys, 1e-9);
+        let mut probe = [0.0; FEATURE_DIM];
+        probe[7] = 4.2;
+        probe[8] = 11.0;
+        probe[0] = 1.0;
+        let want = 3.0 + 2.0 * 4.2 - 0.5 * 11.0;
+        assert!((r.predict(&probe) - want).abs() < 1e-6, "{} vs {want}", r.predict(&probe));
+    }
+
+    #[test]
+    fn featurize_is_one_hot_and_log2() {
+        let spec = crate::builder::Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let mf = ModelFeatures::for_model(&zoo::skynet_tiny()).unwrap();
+        let (t, cfg) = grid.points().remove(0);
+        let x = featurize(t, &cfg, &mf);
+        assert_eq!(x.iter().take(5).sum::<f64>(), 1.0, "exactly one template bit set");
+        assert_eq!(x[template_index(t)], 1.0);
+        assert_eq!(x[7], (cfg.unroll as f64).log2());
+        assert!(x[12] > 0.0 && x[13] > 0.0 && x[14] >= 0.0);
+        assert_eq!(FEATURE_NAMES.len(), FEATURE_DIM);
+    }
+
+    #[test]
+    fn plan_needs_a_warm_cache() {
+        let m = zoo::skynet_tiny();
+        let spec = crate::builder::Spec::ultra96_object_detection();
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let cold = DseCache::new();
+        assert!(plan(&m, &spec, &grid.points(), &cold, 3, 0.08, 32).is_none());
+    }
+
+    /// A small pinned grid, warmed end to end, yields a plan that keeps
+    /// the true best labeled point, stays within budget and is sorted.
+    #[test]
+    fn plan_preserves_elites_and_budget() {
+        let m = zoo::skynet_tiny();
+        let spec = crate::builder::Spec::ultra96_object_detection();
+        let mut grid = SweepGrid::for_backend(&spec.backend);
+        grid.precisions = vec![crate::ip::Precision::new(8, 8)];
+        grid.unrolls = vec![64, 128];
+        let pool = Pool::new(2);
+        let cache = Arc::new(DseCache::new());
+        let cold = stage1_with(&m, &spec, &grid, 3, &pool, &cache).unwrap();
+        assert!(grid.len() >= MIN_FIT_POINTS, "test grid too small: {}", grid.len());
+
+        let points = grid.points();
+        let p = plan(&m, &spec, &points, &cache, 3, 0.25, 10).expect("warm cache must fit");
+        assert_eq!(p.scored, grid.len());
+        assert!(p.fit_points >= MIN_FIT_POINTS);
+        let budget = ((0.25 * grid.len() as f64).ceil() as usize).max(10);
+        assert!(p.eval_indices.len() <= budget);
+        assert!(p.eval_indices.windows(2).all(|w| w[0] < w[1]), "ascending grid order");
+        assert!(p.eval_indices.iter().all(|&i| i < points.len()));
+
+        // The exhaustive winner's grid point must be in the plan.
+        let best = &cold.selected[0];
+        let winner_idx = points
+            .iter()
+            .position(|(t, c)| {
+                *t == best.template
+                    && CacheKey::new(m.fingerprint(), *t, c)
+                        == CacheKey::new(m.fingerprint(), best.template, &best.cfg)
+            })
+            .expect("winner must be a grid point");
+        assert!(p.eval_indices.contains(&winner_idx), "elite preservation lost the winner");
+
+        // Deterministic: same cache state, same plan.
+        let p2 = plan(&m, &spec, &points, &cache, 3, 0.25, 10).unwrap();
+        assert_eq!(p.eval_indices, p2.eval_indices);
+    }
+
+    #[test]
+    fn training_dump_shape() {
+        let m = zoo::skynet_tiny();
+        let spec = crate::builder::Spec::ultra96_object_detection();
+        let mut grid = SweepGrid::for_backend(&spec.backend);
+        grid.precisions = vec![crate::ip::Precision::new(8, 8)];
+        grid.unrolls = vec![64];
+        let pool = Pool::new(2);
+        let cache = Arc::new(DseCache::new());
+        stage1_with(&m, &spec, &grid, 2, &pool, &cache).unwrap();
+
+        let mut snap = Snapshot::default();
+        snap.counters.insert("stage2.move.wider_bus.proposed".into(), 5);
+        snap.counters.insert("stage2.move.wider_bus.accepted".into(), 2);
+        snap.counters.insert("stage2.move.wider_bus.rejected".into(), 3);
+        snap.counters.insert("unrelated.counter".into(), 9);
+
+        let dump = training_dump(&m, &spec, &grid, &cache, &snap).unwrap();
+        assert_eq!(dump.get("type").unwrap().as_str().unwrap(), "training_dump");
+        assert_eq!(dump.get("grid_points").unwrap().as_usize().unwrap(), grid.len());
+        assert_eq!(dump.get("unlabeled").unwrap().as_usize().unwrap(), 0, "sweep labeled all");
+        let rows = dump.get("rows").unwrap().as_arr().unwrap();
+        let unrealizable = dump.get("unrealizable").unwrap().as_usize().unwrap();
+        assert_eq!(rows.len() + unrealizable, grid.len());
+        let row = rows[0].as_obj().unwrap();
+        assert_eq!(row["features"].as_arr().unwrap().len(), FEATURE_DIM);
+        assert!(row["latency_ms"].as_f64().unwrap() > 0.0);
+        let mv = dump.get("moves").unwrap().get("wider_bus").unwrap();
+        assert_eq!(mv.get("proposed").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(mv.get("accepted").unwrap().as_u64().unwrap(), 2);
+        assert!(dump.get("moves").unwrap().get("unrelated.counter").is_none());
+        // The dump parses back from its serialized form (the JSONL path).
+        assert!(Json::parse(&dump.to_string()).is_ok());
+    }
+}

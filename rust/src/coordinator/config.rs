@@ -24,6 +24,36 @@ pub enum MoveSetChoice {
     Full,
 }
 
+/// Which stage-1 DSE policy a run sweeps with ("dse" config key).
+///
+/// Absent from the config means "whatever the engine defaults to" —
+/// distinct from an explicit `"dse": "exhaustive"`, which pins the full
+/// sweep even on an engine built with a surrogate default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DseChoice {
+    /// Run the analytical predictor on every grid point.
+    Exhaustive,
+    /// Rank the grid with the ridge surrogate fitted on the DSE cache and
+    /// evaluate only the top slice (falls back to exhaustive until the
+    /// cache holds enough labeled points).
+    Surrogate,
+}
+
+/// Which stage-1 enumeration grid a run sweeps ("grid" config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GridChoice {
+    /// [`SweepGrid::for_backend`] — the PR-1 axes (the default).
+    ///
+    /// [`SweepGrid::for_backend`]: crate::builder::SweepGrid::for_backend
+    #[default]
+    Standard,
+    /// [`SweepGrid::dense_for_backend`] — a strict superset with denser
+    /// unroll and buffer axes, sized for surrogate-pruned sweeps.
+    ///
+    /// [`SweepGrid::dense_for_backend`]: crate::builder::SweepGrid::dense_for_backend
+    Dense,
+}
+
 /// One Chip-Builder run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -39,6 +69,11 @@ pub struct RunConfig {
     pub n_opt: usize,
     /// Stage-2 move set ("moves": "legacy" | "full").
     pub moves: MoveSetChoice,
+    /// Stage-1 DSE policy ("dse": "exhaustive" | "surrogate"); `None`
+    /// defers to the engine's default policy.
+    pub dse: Option<DseChoice>,
+    /// Stage-1 grid tier ("grid": "standard" | "dense").
+    pub grid: GridChoice,
     pub out_dir: Option<String>,
     pub rtl_out: Option<String>,
     /// Directory of persistent DSE cache shards: loaded before the sweep,
@@ -50,8 +85,8 @@ pub struct RunConfig {
 /// object can carry the `api` request tag).
 const CONFIG_KEYS: &[&str] = &[
     "type", "model", "model_json", "backend", "dsp", "bram18k", "lut", "ff", "sram_kb", "macs",
-    "objective", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves",
-    "out_dir", "rtl_out", "cache_dir",
+    "objective", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves", "dse",
+    "grid", "out_dir", "rtl_out", "cache_dir",
 ];
 
 /// A string key with present-but-wrong-typed as an error, never a silent
@@ -144,6 +179,17 @@ impl RunConfig {
             "full" => MoveSetChoice::Full,
             other => return Err(anyhow!("config: unknown move set '{other}'")),
         };
+        let dse = match want_str(j, "dse")? {
+            None => None,
+            Some("exhaustive") => Some(DseChoice::Exhaustive),
+            Some("surrogate") => Some(DseChoice::Surrogate),
+            Some(other) => return Err(anyhow!("config: unknown dse policy '{other}'")),
+        };
+        let grid = match want_str(j, "grid")?.unwrap_or("standard") {
+            "standard" => GridChoice::Standard,
+            "dense" => GridChoice::Dense,
+            other => return Err(anyhow!("config: unknown grid tier '{other}'")),
+        };
         Ok(RunConfig {
             model,
             model_json,
@@ -151,6 +197,8 @@ impl RunConfig {
             n2: want_usize(j, "n2")?.unwrap_or(4),
             n_opt: want_usize(j, "n_opt")?.unwrap_or(2),
             moves,
+            dse,
+            grid,
             out_dir: want_str(j, "out_dir")?.map(|s| s.to_string()),
             rtl_out: want_str(j, "rtl_out")?.map(|s| s.to_string()),
             cache_dir: want_str(j, "cache_dir")?.map(|s| s.to_string()),
@@ -207,6 +255,19 @@ impl RunConfig {
             }
             .into(),
         ));
+        if let Some(dse) = self.dse {
+            pairs.push((
+                "dse",
+                match dse {
+                    DseChoice::Exhaustive => "exhaustive",
+                    DseChoice::Surrogate => "surrogate",
+                }
+                .into(),
+            ));
+        }
+        if self.grid == GridChoice::Dense {
+            pairs.push(("grid", "dense".into()));
+        }
         if let Some(d) = &self.out_dir {
             pairs.push(("out_dir", d.as_str().into()));
         }
@@ -247,6 +308,24 @@ mod tests {
         assert_eq!(c.spec.min_precision_bits, 8);
         assert_eq!(c.moves, MoveSetChoice::Full);
         assert!(c.model_json.is_none());
+        assert_eq!(c.dse, None);
+        assert_eq!(c.grid, GridChoice::Standard);
+    }
+
+    #[test]
+    fn parses_dse_and_grid_and_rejects_unknown_values() {
+        let j = Json::parse(r#"{"model":"SK","dse":"surrogate","grid":"dense"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.dse, Some(DseChoice::Surrogate));
+        assert_eq!(c.grid, GridChoice::Dense);
+        let j = Json::parse(r#"{"model":"SK","dse":"exhaustive"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().dse, Some(DseChoice::Exhaustive));
+        for bad in [r#"{"model":"SK","dse":"random"}"#, r#"{"model":"SK","grid":"hyperfine"}"#] {
+            assert!(
+                RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject: {bad}"
+            );
+        }
     }
 
     #[test]
@@ -311,6 +390,8 @@ mod tests {
                 "min_precision_bits":9,"out_dir":"results/t","rtl_out":"results/t/rtl"}"#,
             r#"{"model":"SK8","min_fps":27.5,"max_power_mw":8500,"n2":3,"n_opt":2}"#,
             r#"{"model":"SK","cache_dir":"results/cache"}"#,
+            r#"{"model":"SK","dse":"surrogate","grid":"dense"}"#,
+            r#"{"model":"SK","dse":"exhaustive"}"#,
         ] {
             let c = RunConfig::from_json(&Json::parse(text).unwrap()).unwrap();
             let back = RunConfig::from_json(&c.to_json()).unwrap();

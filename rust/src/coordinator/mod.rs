@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::builder::BuildOutput;
 use crate::util::json::Json;
 
-pub use config::{MoveSetChoice, RunConfig};
+pub use config::{DseChoice, GridChoice, MoveSetChoice, RunConfig};
 pub use pool::Pool;
 
 /// Outcome summary written to `<out_dir>/result.json`.
@@ -50,6 +50,8 @@ mod tests {
             n2: 2,
             n_opt: 1,
             moves: MoveSetChoice::Full,
+            dse: None,
+            grid: GridChoice::Standard,
             out_dir: Some(dir.to_string_lossy().into_owned()),
             rtl_out: Some(dir.join("rtl").to_string_lossy().into_owned()),
             cache_dir: None,
@@ -78,6 +80,8 @@ mod tests {
             n2: 1,
             n_opt: 1,
             moves: MoveSetChoice::Full,
+            dse: None,
+            grid: GridChoice::Standard,
             out_dir: None,
             rtl_out: None,
             cache_dir: None,
@@ -109,6 +113,8 @@ mod tests {
             n2: 1,
             n_opt: 1,
             moves: MoveSetChoice::Legacy,
+            dse: None,
+            grid: GridChoice::Standard,
             out_dir: None,
             rtl_out: None,
             cache_dir: None,

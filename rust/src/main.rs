@@ -5,10 +5,13 @@
 //! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
 //! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
 //!                      [--moves legacy|full] [--cache-dir DIR]
+//!                      [--dse exhaustive|surrogate] [--grid standard|dense]
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
 //! autodnnchip sweep    --model SK [--backend fpga|asic] [--n2 N]
 //!                      [--cache-dir DIR] [--out DIR] [--workers N]
+//!                      [--dse exhaustive|surrogate] [--grid standard|dense]
+//!                      [--dump-training FILE]
 //! autodnnchip serve    --requests file.jsonl [--out DIR] [--workers N]
 //!                      [--verbose] [--cache-dir DIR]
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
@@ -20,6 +23,13 @@
 //! are loaded before the sweep (stale/corrupt ones skipped with a
 //! warning) and the cache is saved back afterwards, so a rerun — even
 //! after the process died — starts warm.
+//!
+//! `--dse surrogate` prunes the stage-1 sweep with a ridge surrogate
+//! fitted on the DSE cache (falls back to exhaustive until the cache is
+//! warm enough); `--grid dense` sweeps the denser grid tier sized for
+//! surrogate runs. `sweep --dump-training FILE` serializes the featurized
+//! (features, objective) training rows plus stage-2 move accept/reject
+//! counters for offline surrogate studies.
 //!
 //! `predict` and `build` route through the `api::Engine` facade — the CLI
 //! is one consumer of the same typed request/response surface the JSONL
@@ -36,8 +46,8 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 use autodnnchip::api::{self, Engine, PredictRequest, Request, Response};
-use autodnnchip::builder::Spec;
-use autodnnchip::coordinator::{MoveSetChoice, RunConfig};
+use autodnnchip::builder::{surrogate, Spec};
+use autodnnchip::coordinator::{DseChoice, GridChoice, MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::util::cli::Args;
 use autodnnchip::util::table::{f, Table};
@@ -164,6 +174,26 @@ fn numeric_flag<T: std::str::FromStr>(args: &Args, name: &str) -> Option<T> {
     })
 }
 
+/// Parse the shared `--dse` / `--grid` flags (build and sweep).
+fn dse_flag(args: &Args) -> Result<Option<DseChoice>> {
+    match args.flag("dse") {
+        None => Ok(None),
+        Some("exhaustive") => Ok(Some(DseChoice::Exhaustive)),
+        Some("surrogate") => Ok(Some(DseChoice::Surrogate)),
+        Some(other) => {
+            bail!("unknown dse policy '{other}' (expected 'exhaustive' or 'surrogate')")
+        }
+    }
+}
+
+fn grid_flag(args: &Args) -> Result<GridChoice> {
+    match args.flag("grid").unwrap_or("standard") {
+        "standard" => Ok(GridChoice::Standard),
+        "dense" => Ok(GridChoice::Dense),
+        other => bail!("unknown grid tier '{other}' (expected 'standard' or 'dense')"),
+    }
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&["model", "template", "tech", "unroll", "pipeline"]));
     let req = PredictRequest {
@@ -197,7 +227,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 fn cmd_build(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
         "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
-        "cache-dir",
+        "cache-dir", "dse", "grid",
     ]));
     let cfg = if let Some(path) = args.flag("config") {
         // The config file carries the whole run; any other flag on the
@@ -233,6 +263,8 @@ fn cmd_build(args: &Args) -> Result<()> {
             n2: numeric_flag(args, "n2").unwrap_or(4),
             n_opt: numeric_flag(args, "n-opt").unwrap_or(2),
             moves,
+            dse: dse_flag(args)?,
+            grid: grid_flag(args)?,
             out_dir: args.flag("out").map(|s| s.to_string()),
             rtl_out: args.flag("rtl-out").map(|s| s.to_string()),
             cache_dir: args.flag("cache-dir").map(|s| s.to_string()),
@@ -249,10 +281,15 @@ fn cmd_build(args: &Args) -> Result<()> {
 /// Stage-1-only sweep: evaluate the coarse grid and print the sweep
 /// response as pretty JSON. With `--cache-dir DIR` the sweep loads
 /// persistent shards first and saves back after — the warm-restart path
-/// the `restart` bench and the CI cache gates exercise.
+/// the `restart` bench and the CI cache gates exercise. With
+/// `--dump-training FILE` the featurized (features, objective) training
+/// rows the surrogate fits on — every cache-labeled grid point — plus the
+/// stage-2 move accept/reject counters are written to FILE after the
+/// sweep.
 fn cmd_sweep(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
-        "model", "model-json", "backend", "n2", "cache-dir", "out", "workers",
+        "model", "model-json", "backend", "n2", "cache-dir", "out", "workers", "dse", "grid",
+        "dump-training",
     ]));
     let backend = args.flag_or("backend", "fpga");
     let spec = match backend.as_str() {
@@ -267,6 +304,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         n2: numeric_flag(args, "n2").unwrap_or(4),
         n_opt: 1,
         moves: MoveSetChoice::Full,
+        dse: dse_flag(args)?,
+        grid: grid_flag(args)?,
         out_dir: None,
         rtl_out: None,
         cache_dir: args.flag("cache-dir").map(|s| s.to_string()),
@@ -276,7 +315,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         builder = builder.workers(w);
     }
     let engine = builder.build();
-    let resp = engine.submit(Request::Sweep(api::SweepRequest(cfg)))?;
+    let resp = engine.submit(Request::Sweep(api::SweepRequest(cfg.clone())))?;
     println!("{}", resp.to_json().pretty());
     if let Some(dir) = args.flag("out") {
         std::fs::create_dir_all(dir).with_context(|| format!("creating '{dir}'"))?;
@@ -287,6 +326,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if resp.is_error() {
         bail!("sweep failed");
+    }
+    if let Some(file) = args.flag("dump-training") {
+        // The sweep above has just labeled (at least) this grid's points
+        // in the cache, so the dump reflects the freshest predictions.
+        let model = cfg.resolve_model()?;
+        let grid = engine.grid_for(&cfg);
+        let dump = surrogate::training_dump(
+            &model,
+            &cfg.spec,
+            &grid,
+            engine.cache(),
+            &obs::metrics::global_snapshot(),
+        )?;
+        if let Some(parent) = Path::new(file).parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating '{}'", parent.display()))?;
+        }
+        std::fs::write(file, dump.pretty()).with_context(|| format!("writing '{file}'"))?;
+        eprintln!("wrote {file}");
     }
     Ok(())
 }

@@ -3,7 +3,7 @@
 
 use autodnnchip::api::{self, Engine, Request, Response, SweepRequest};
 use autodnnchip::builder::{build_accelerator, Spec};
-use autodnnchip::coordinator::{self, MoveSetChoice, Pool, RunConfig};
+use autodnnchip::coordinator::{self, GridChoice, MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo};
 use autodnnchip::experiments;
 use autodnnchip::funcsim::{self, Mode, Tensor};
@@ -144,6 +144,8 @@ fn examples_model_json_builds_via_coordinator() {
         n2: 2,
         n_opt: 1,
         moves: MoveSetChoice::Full,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: None,
         rtl_out: None,
         cache_dir: None,
@@ -270,6 +272,8 @@ fn result_json_metrics_section_is_file_only() {
         n2: 1,
         n_opt: 1,
         moves: MoveSetChoice::Legacy,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: Some(dir.to_string_lossy().into_owned()),
         rtl_out: None,
         cache_dir: None,
@@ -311,6 +315,8 @@ fn sweep_request(model: &str, cache_dir: Option<String>) -> Request {
         n2: 2,
         n_opt: 1,
         moves: MoveSetChoice::Full,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: None,
         rtl_out: None,
         cache_dir,
@@ -371,6 +377,8 @@ fn run_config_cache_dir_round_trips_builds() {
         n2: 1,
         n_opt: 1,
         moves: MoveSetChoice::Legacy,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: None,
         rtl_out: None,
         cache_dir: Some(dir.to_string_lossy().into_owned()),
@@ -473,6 +481,41 @@ fn serve_streaming_sink_preserves_line_order() {
     assert!(outcome.responses[1].is_error(), "the unparseable line maps to an error response");
     assert_eq!(outcome.ok, 3);
     assert_eq!(outcome.failed, 1);
+}
+
+#[test]
+fn surrogate_sweep_request_matches_exhaustive_through_engine() {
+    // The surrogate policy end to end through the JSON request surface: an
+    // exhaustive sweep warms the engine's isolated cache, then the same
+    // sweep with `"dse":"surrogate"` must pick the identical selection
+    // while running the analytical predictor on ≤ 1/10 of the grid.
+    let engine = Engine::builder().isolated_cache().build();
+    let parse = |line: &str| Request::from_json(&Json::parse(line).unwrap()).expect("parses");
+    let warm = engine
+        .submit(parse(r#"{"type":"sweep","model":"sdn_smile","n2":2}"#))
+        .expect("exhaustive sweep")
+        .to_json();
+    assert_eq!(warm.get("scored").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(warm.get("pruned").unwrap().as_f64().unwrap(), 0.0);
+    let grid_points = warm.get("evaluated").unwrap().as_f64().unwrap();
+    assert!(grid_points > 100.0);
+
+    let sur = engine
+        .submit(parse(r#"{"type":"sweep","model":"sdn_smile","n2":2,"dse":"surrogate"}"#))
+        .expect("surrogate sweep")
+        .to_json();
+    assert_eq!(sur.get("scored").unwrap().as_f64().unwrap(), grid_points);
+    let evaluated = sur.get("evaluated").unwrap().as_f64().unwrap();
+    assert!(
+        evaluated * 10.0 <= grid_points,
+        "surrogate ran {evaluated} of {grid_points} predictor evaluations"
+    );
+    assert_eq!(sur.get("pruned").unwrap().as_f64().unwrap(), grid_points - evaluated);
+    assert_eq!(
+        sur.get("selected").unwrap().to_string(),
+        warm.get("selected").unwrap().to_string(),
+        "surrogate pruning changed the sweep selection"
+    );
 }
 
 #[test]

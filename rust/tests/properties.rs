@@ -8,10 +8,10 @@ use std::sync::Arc;
 use autodnnchip::api::{BuildRequest, Engine, PredictRequest, Request, Response, SweepRequest};
 use autodnnchip::builder::{
     build_accelerator, build_accelerator_with, build_accelerator_with_moves, pnr_check, stage1,
-    stage1_with, stage2, stage2_with_moves, Backend, Candidate, DseCache, MoveSet, PnrOutcome,
-    Spec, SweepGrid,
+    stage1_with, stage1_with_policy, stage2, stage2_with_moves, Backend, Candidate, DseCache,
+    DsePolicy, MoveSet, PnrOutcome, Spec, SweepGrid, MIN_FIT_POINTS,
 };
-use autodnnchip::coordinator::{MoveSetChoice, Pool, RunConfig};
+use autodnnchip::coordinator::{GridChoice, MoveSetChoice, Pool, RunConfig};
 use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
@@ -752,6 +752,8 @@ fn run_config(model: &str, spec: Spec, n2: usize, n_opt: usize, moves: MoveSetCh
         n2,
         n_opt,
         moves,
+        dse: None,
+        grid: GridChoice::Standard,
         out_dir: None,
         rtl_out: None,
         cache_dir: None,
@@ -803,6 +805,72 @@ fn prop_engine_build_byte_identical_to_build_accelerator_with_moves() {
             m.name
         );
         prop_assert!(via_engine.model == m.name, "response mislabeled: {}", via_engine.model);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_surrogate_same_winner_as_exhaustive() {
+    // The surrogate policy is a pure evaluation-count optimization on a
+    // warm cache: for any zoo model on either backend, an exhaustive
+    // sweep to warm a fresh cache followed by a surrogate sweep over the
+    // same cache must select the identical candidate list (Debug equality
+    // — every f64 bit pattern) while running the analytical predictor on
+    // at most a tenth of the grid.
+    check_cfg("surrogate matches exhaustive", Config { cases: 4, seed: 0x50CA7E }, |rng, _| {
+        let models = zoo::shidiannao_benchmarks();
+        let m = rng.choose(&models).clone();
+        let (spec, backend) = if rng.bool(0.5) {
+            (Spec::ultra96_object_detection(), "fpga")
+        } else {
+            (Spec::asic_vision(), "asic")
+        };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let n2 = rng.range(1, 4);
+        let pool = Pool::new(rng.range(1, 4));
+        let cache = Arc::new(DseCache::new());
+
+        let exhaustive =
+            stage1_with(&m, &spec, &grid, n2, &pool, &cache).map_err(|e| e.to_string())?;
+        prop_assert!(
+            exhaustive.evaluated == grid.len() && exhaustive.scored == 0,
+            "exhaustive accounting broken for {} × {backend}",
+            m.name
+        );
+
+        let policy = DsePolicy::surrogate();
+        let sur = stage1_with_policy(&m, &spec, &grid, n2, &pool, &cache, &policy)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            sur.scored == grid.len(),
+            "{} × {backend}: surrogate scored {} of {} points",
+            m.name,
+            sur.scored,
+            grid.len()
+        );
+        prop_assert!(
+            sur.evaluated * 10 <= grid.len(),
+            "{} × {backend}: {} predictor evaluations is not a ≥10× cut of {}",
+            m.name,
+            sur.evaluated,
+            grid.len()
+        );
+        prop_assert!(
+            sur.pruned + sur.evaluated == sur.scored,
+            "{} × {backend}: pruned/evaluated don't partition the scored set",
+            m.name
+        );
+        prop_assert!(
+            sur.fit_points >= MIN_FIT_POINTS,
+            "{} × {backend}: engaged surrogate reported only {} fit points",
+            m.name,
+            sur.fit_points
+        );
+        prop_assert!(
+            format!("{:?}", sur.selected) == format!("{:?}", exhaustive.selected),
+            "{} × {backend} (n2={n2}): surrogate pruning changed the selection",
+            m.name
+        );
         Ok(())
     });
 }
