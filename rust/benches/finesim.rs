@@ -1,0 +1,210 @@
+//! Batched fine-simulation benchmark: steady-state extrapolation cost and
+//! the throughput-objective payoff.
+//!
+//! Two gates, both machine-checked (the bench exits non-zero on failure)
+//! and exported to `BENCH_finesim.json` (override with
+//! `BENCH_FINESIM_JSON=path`) for the CI bench-smoke job:
+//!
+//! 1. **O(period) cost** — `simulate_batched(g, 64)` on a deep
+//!    feed-forward pipeline must cost at most `BENCH_FINESIM_MAX_RATIO`
+//!    (default 2×) the wall-time of a single-inference `simulate(g)`.
+//!    Steady-state detection fires after the first inter-round boundary,
+//!    so the batched run walks ~2 rounds of events regardless of batch —
+//!    a literal 64-inference unroll would walk 64. The same run is
+//!    cross-checked cycle-exact against that literal unroll once.
+//! 2. **Objective payoff** — ranking a (template × pipeline × unroll)
+//!    candidate set by batched makespan must pick a different winner than
+//!    ranking by single-shot latency on at least one zoo model: if the
+//!    two orderings never diverge, `Objective::Throughput` buys nothing.
+
+use std::path::Path;
+
+use autodnnchip::dnn::zoo;
+use autodnnchip::graph::{bare_node, Graph, State};
+use autodnnchip::ip::{tech, ComputeKind, DataPathKind, IpClass, MemKind, Precision};
+use autodnnchip::predictor::{simulate, simulate_batched};
+use autodnnchip::templates::{HwConfig, TemplateId};
+use autodnnchip::util::bench::Bench;
+
+/// A feed-forward chain (memory → buses → compute) with `states` states
+/// per stage and no sync loops: every stage runs at the same per-round
+/// rate, so batched simulation reaches its provable steady-state floor at
+/// the first round boundary — the best case the ratio gate pins.
+fn deep_pipeline(stages: usize, states: u64) -> Graph {
+    let mut g = Graph::new("bench_pipe", 200.0);
+    let mut ids = Vec::with_capacity(stages);
+    for s in 0..stages {
+        let class = if s == 0 {
+            IpClass::Memory { kind: MemKind::Bram, volume_bits: 1 << 20, port_bits: 72 }
+        } else if s + 1 == stages {
+            IpClass::Compute {
+                kind: ComputeKind::AdderTree,
+                unroll: 64,
+                prec: Precision::new(8, 8),
+            }
+        } else {
+            IpClass::DataPath { kind: DataPathKind::Bus, width_bits: 64 }
+        };
+        ids.push(g.add_node(bare_node(&format!("s{s}"), class)));
+    }
+    let edges: Vec<_> = (1..stages).map(|s| g.connect(ids[s - 1], ids[s])).collect();
+    for s in 0..stages {
+        let mut st = State::new(4);
+        if s > 0 {
+            st = st.needing(edges[s - 1], 64);
+        }
+        if s + 1 < stages {
+            st = st.emitting(edges[s], 64);
+        }
+        g.nodes[ids[s]].sm.repeat(states, st.with_bits(64));
+    }
+    g
+}
+
+/// Index of the smallest value (first wins ties — the same tie-break a
+/// stable selection sort gives).
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn main() {
+    let mut b = Bench::new();
+    b.header("finesim");
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let batch = 64usize;
+
+    // ---- Gate 1: batched wall-time vs single-shot on the deep pipeline.
+    let g = deep_pipeline(6, if quick { 2048 } else { 8192 });
+    let single_ns = b
+        .run("simulate_b1/pipeline", || simulate(&g, 0.0, false).unwrap().cycles)
+        .mean_ns;
+    let batched_ns = b
+        .run("simulate_batched_b64/pipeline", || {
+            simulate_batched(&g, batch, 0.0, false).unwrap().cycles
+        })
+        .mean_ns;
+    let ratio = batched_ns / single_ns.max(1e-9);
+
+    // One-shot cross-check against the literal unroll: same cycles, and
+    // the extrapolation (not the fallback) must have produced them.
+    let fast = simulate_batched(&g, batch, 0.0, false).unwrap();
+    let reference = simulate(&g.unrolled_batch(batch as u64), 0.0, false).unwrap();
+    let reference_match = fast.cycles == reference.cycles;
+    let steady_engaged = fast.steady_period_cycles < fast.cycles;
+    println!(
+        "\n  B={batch} wall ratio: {ratio:.2}x (cycles {} vs literal unroll {}, \
+         fill {}, period {})",
+        fast.cycles, reference.cycles, fast.fill_cycles, fast.steady_period_cycles
+    );
+
+    // ---- Gate 2: the throughput objective must change at least one
+    // zoo model's winner. Candidate set: FPGA template pool × pipeline
+    // depth × unroll; rank once by single-shot latency, once by batched
+    // makespan (at fixed batch that is the steady-throughput ordering).
+    let techno = tech::fpga_ultra96();
+    let mut diff_model = String::new();
+    let mut scanned = 0usize;
+    'models: for name in zoo::all_names() {
+        let Some(m) = zoo::by_name(&name) else { continue };
+        let mut latency = Vec::new();
+        let mut makespan = Vec::new();
+        let mut labels = Vec::new();
+        for t in TemplateId::fpga_pool() {
+            for pl in [1u64, 2, 4] {
+                for unroll in [64usize, 320] {
+                    let mut cfg = HwConfig::default_for_tech(&techno);
+                    cfg.unroll = unroll;
+                    cfg.pipeline = pl;
+                    let Ok(gr) = t.build(&m, &cfg) else { continue };
+                    let leak = cfg.tech.costs.leakage_mw;
+                    let Ok(one) = simulate(&gr, leak, false) else { continue };
+                    let Ok(many) = simulate_batched(&gr, batch, leak, false) else {
+                        continue;
+                    };
+                    latency.push(one.latency_ms);
+                    makespan.push(many.latency_ms);
+                    labels.push(format!("{}/pipe{pl}/u{unroll}", t.name()));
+                }
+            }
+        }
+        scanned += 1;
+        if latency.is_empty() {
+            continue;
+        }
+        let lat_winner = argmin(&latency);
+        let thr_winner = argmin(&makespan);
+        if lat_winner != thr_winner {
+            println!(
+                "  {name}: latency winner {} != throughput@{batch} winner {}",
+                labels[lat_winner], labels[thr_winner]
+            );
+            diff_model = name;
+            break 'models;
+        }
+    }
+    let winner_differs = !diff_model.is_empty();
+    if !winner_differs {
+        println!("  no zoo model's winner changed under throughput@{batch} ({scanned} scanned)");
+    }
+
+    let max_ratio: f64 = std::env::var("BENCH_FINESIM_MAX_RATIO")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    let ratio_ok = ratio <= max_ratio;
+
+    let path = std::env::var("BENCH_FINESIM_JSON")
+        .unwrap_or_else(|_| "BENCH_finesim.json".to_string());
+    let derived = [
+        ("batch", batch as f64),
+        ("single_ns", single_ns),
+        ("batched_ns", batched_ns),
+        ("wall_ratio_b64_over_b1", ratio),
+        ("max_ratio", max_ratio),
+        ("ratio_ok", if ratio_ok { 1.0 } else { 0.0 }),
+        ("reference_match", if reference_match { 1.0 } else { 0.0 }),
+        ("steady_engaged", if steady_engaged { 1.0 } else { 0.0 }),
+        ("winner_differs", if winner_differs { 1.0 } else { 0.0 }),
+        ("winner_scanned_models", scanned as f64),
+        ("fill_cycles", fast.fill_cycles as f64),
+        ("steady_period_cycles", fast.steady_period_cycles as f64),
+    ];
+    b.write_json(Path::new(&path), "finesim", &derived).expect("write bench JSON");
+    println!("  wrote {path}");
+
+    let mut failed = false;
+    if !ratio_ok {
+        eprintln!(
+            "FAIL: simulate_batched(B={batch}) took {ratio:.2}x a single simulate \
+             (max {max_ratio}x) — steady-state extrapolation is not O(period)"
+        );
+        failed = true;
+    }
+    if !reference_match {
+        eprintln!(
+            "FAIL: batched cycles {} != literal {batch}-unroll cycles {}",
+            fast.cycles, reference.cycles
+        );
+        failed = true;
+    }
+    if !steady_engaged {
+        eprintln!("FAIL: steady-state extrapolation never engaged on the pipeline graph");
+        failed = true;
+    }
+    if !winner_differs {
+        eprintln!(
+            "FAIL: throughput@{batch} picked the same winner as latency on all \
+             {scanned} zoo models — the batched objective is inert"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -26,7 +26,7 @@ use crate::coordinator::{DseChoice, GridChoice, MoveSetChoice, Pool, RunConfig, 
 use crate::dnn::{zoo, Model};
 use crate::ip::tech;
 use crate::obs;
-use crate::predictor::{predict_coarse, simulate};
+use crate::predictor::{predict_coarse, simulate_batched};
 use crate::rtlgen;
 use crate::templates::{HwConfig, TemplateId};
 use crate::util::json::{obj, Json};
@@ -500,6 +500,7 @@ impl Engine {
                 },
             ),
             ("dse", policy.name().into()),
+            ("batch", cfg.spec.batch().into()),
             ("evaluated", build.evaluated.into()),
             ("scored", build.scored.into()),
             ("pruned", build.pruned.into()),
@@ -523,6 +524,24 @@ impl Engine {
                                     / r.initial_latency_ms
                                     * 100.0,
                             )
+                        })
+                        .collect(),
+                ),
+            ),
+            // Batched steady-state data per survivor (batch 1 degenerates
+            // to fill == period == makespan).
+            (
+                "steady_state",
+                Json::Arr(
+                    build
+                        .stage2_reports
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("fill_cycles", r.fill_cycles.into()),
+                                ("steady_period_cycles", r.steady_period_cycles.into()),
+                                ("steady_fps", r.steady_fps.into()),
+                            ])
                         })
                         .collect(),
                 ),
@@ -668,7 +687,9 @@ impl Engine {
         let (model, template, cfg) = self.resolve_point(p)?;
         let g = template.build(&model, &cfg)?;
         let coarse = predict_coarse(&g, &cfg.tech)?;
-        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+        // batch 1 routes through the exact single-shot path (bit-identical
+        // to `simulate`); batch > 1 reports the batched makespan.
+        let fine = simulate_batched(&g, p.batch.unwrap_or(1), cfg.tech.costs.leakage_mw, false)?;
         Ok(PredictResponse {
             model: model.name,
             template: template.name().to_string(),
@@ -688,7 +709,9 @@ impl Engine {
     fn simulate_fine(&self, p: &PredictRequest) -> Result<SimulateFineResponse> {
         let (model, template, cfg) = self.resolve_point(p)?;
         let g = template.build(&model, &cfg)?;
-        let fine = simulate(&g, cfg.tech.costs.leakage_mw, false)?;
+        // batch 1 routes through the exact single-shot path, so an
+        // unbatched request stays byte-identical to `simulate`.
+        let fine = simulate_batched(&g, p.batch.unwrap_or(1), cfg.tech.costs.leakage_mw, false)?;
         Ok(SimulateFineResponse {
             model: model.name,
             template: template.name().to_string(),
@@ -697,6 +720,10 @@ impl Engine {
             energy_pj: fine.energy_pj,
             bottleneck: g.nodes[fine.bottleneck].name.clone(),
             bottleneck_idle_cycles: fine.bottleneck_idle(),
+            batch: fine.batch,
+            fill_cycles: fine.fill_cycles,
+            steady_period_cycles: fine.steady_period_cycles,
+            steady_fps: fine.steady_fps(),
         })
     }
 
@@ -753,6 +780,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::api::request::SimulateFineRequest;
+    use crate::predictor::simulate;
 
     #[test]
     fn predict_matches_direct_predictors_bit_for_bit() {
@@ -791,6 +819,32 @@ mod tests {
         assert!(s.cycles > 0);
         assert!(s.latency_ms > 0.0);
         assert!(!s.bottleneck.is_empty());
+        // Single-shot semantics: batch 1, fill == period == makespan.
+        assert_eq!(s.batch, 1);
+        assert_eq!(s.fill_cycles, s.cycles);
+        assert_eq!(s.steady_period_cycles, s.cycles);
+    }
+
+    #[test]
+    fn simulate_fine_batched_reports_steady_state() {
+        let engine = Engine::builder().workers(1).isolated_cache().build();
+        let resp = engine
+            .submit(Request::SimulateFine(SimulateFineRequest(PredictRequest {
+                batch: Some(8),
+                ..PredictRequest::for_model("sdn_gaze")
+            })))
+            .expect("batched fine sim");
+        let j = resp.to_json();
+        let Response::SimulateFine(s) = resp else { panic!("wrong response variant") };
+        assert_eq!(s.batch, 8);
+        assert!(s.fill_cycles > 0 && s.fill_cycles <= s.cycles);
+        assert!(s.steady_period_cycles > 0);
+        assert!(s.steady_fps > 0.0);
+        // The steady-state fields ride along on the JSONL response line.
+        assert_eq!(j.get("batch").unwrap().as_u64().unwrap(), 8);
+        assert!(j.get("fill_cycles").is_some());
+        assert!(j.get("steady_period_cycles").is_some());
+        assert!(j.get("steady_fps").is_some());
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct PredictRequest {
     pub unroll: Option<usize>,
     /// Override of the tech default configuration's pipeline depth.
     pub pipeline: Option<u64>,
+    /// Inferences in flight for the fine simulation (steady-state
+    /// batched run, [`crate::predictor::simulate_batched`]); absent means
+    /// single-shot semantics (batch 1).
+    pub batch: Option<usize>,
 }
 
 impl Default for PredictRequest {
@@ -64,6 +68,7 @@ impl Default for PredictRequest {
             tech: "ultra96".to_string(),
             unroll: None,
             pipeline: None,
+            batch: None,
         }
     }
 }
@@ -102,7 +107,7 @@ pub(crate) fn with_type(j: &Json, t: &str) -> Json {
 }
 
 /// Allowed keys of `predict`/`simulate_fine` requests.
-const POINT_KEYS: &[&str] = &["type", "model", "template", "tech", "unroll", "pipeline"];
+const POINT_KEYS: &[&str] = &["type", "model", "template", "tech", "unroll", "pipeline", "batch"];
 
 /// Reject keys outside `allowed`: a misspelled key (`"modle"`) must be an
 /// error, not a silent fall-through to the defaults — the JSONL mirror of
@@ -147,12 +152,20 @@ fn point_from_json(j: &Json) -> Result<PredictRequest> {
         None => None,
         Some(v) => Some(v.as_u64().ok_or_else(|| bad_uint("pipeline"))?),
     };
+    let batch = match j.get("batch") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(b) if b >= 1 => Some(b),
+            _ => return Err(anyhow!("request key 'batch' must be an integer >= 1")),
+        },
+    };
     Ok(PredictRequest {
         model: str_or(j, "model", &d.model)?,
         template: str_or(j, "template", &d.template)?,
         tech: str_or(j, "tech", &d.tech)?,
         unroll,
         pipeline,
+        batch,
     })
 }
 
@@ -168,6 +181,9 @@ fn point_to_json(p: &PredictRequest, t: &str) -> Json {
     }
     if let Some(pl) = p.pipeline {
         pairs.push(("pipeline", pl.into()));
+    }
+    if let Some(b) = p.batch {
+        pairs.push(("batch", b.into()));
     }
     obj(pairs)
 }
@@ -304,6 +320,10 @@ mod tests {
             }),
             Request::Predict(PredictRequest::default()),
             Request::SimulateFine(SimulateFineRequest(PredictRequest::for_model("sdn_gaze"))),
+            Request::SimulateFine(SimulateFineRequest(PredictRequest {
+                batch: Some(16),
+                ..PredictRequest::for_model("SK")
+            })),
             Request::Build(BuildRequest(sample_cfg())),
             Request::Build(BuildRequest(with_json)),
             Request::Sweep(SweepRequest(asic)),
@@ -366,6 +386,8 @@ mod tests {
             r#"{"type":"predict","modle":"SK8"}"#,
             r#"{"type":"predict","model":123}"#,
             r#"{"type":"predict","pipeline":2.5}"#,
+            r#"{"type":"simulate_fine","batch":0}"#,
+            r#"{"type":"simulate_fine","batch":"8"}"#,
             r#"{"type":"simulate_fine","templte":"systolic"}"#,
             r#"{"type":"build","model":"SK","mvoes":"full"}"#,
             r#"{"type":"build","model":"SK","n2":"3","moves":3}"#,

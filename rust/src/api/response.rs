@@ -54,6 +54,15 @@ pub struct SimulateFineResponse {
     /// Name of the bottleneck IP (Algorithm 1 line 22).
     pub bottleneck: String,
     pub bottleneck_idle_cycles: u64,
+    /// Inferences simulated in flight (1 = single-shot semantics).
+    pub batch: u64,
+    /// Cycles until the first inference completes (pipeline fill).
+    pub fill_cycles: u64,
+    /// Steady-state inter-completion period in cycles (== `cycles` when
+    /// `batch` is 1).
+    pub steady_period_cycles: u64,
+    /// Sustained throughput at this batch depth, in frames/s.
+    pub steady_fps: f64,
 }
 
 /// Full Chip-Builder run result.
@@ -153,6 +162,10 @@ impl Response {
                 ("energy_pj", s.energy_pj.into()),
                 ("bottleneck", s.bottleneck.as_str().into()),
                 ("bottleneck_idle_cycles", s.bottleneck_idle_cycles.into()),
+                ("batch", s.batch.into()),
+                ("fill_cycles", s.fill_cycles.into()),
+                ("steady_period_cycles", s.steady_period_cycles.into()),
+                ("steady_fps", s.steady_fps.into()),
             ]),
             Response::Build(b) => with_type(&b.result_json, "build"),
             Response::Sweep(s) => obj(vec![

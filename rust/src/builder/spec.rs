@@ -45,6 +45,14 @@ pub enum Objective {
     Energy,
     /// Energy-delay product.
     Edp,
+    /// Steady-state throughput with `batch` inferences in flight: designs
+    /// are evaluated with the batched fine simulation (`simulate_batched`)
+    /// and ranked by batched makespan — at fixed `batch` that is exactly
+    /// the throughput ordering, while keeping scores comparable
+    /// (lower-is-better ms) with the other objectives. Layer-pipelined
+    /// designs whose *fill* latency loses to a monolithic design can still
+    /// win here, which is the point.
+    Throughput { batch: usize },
 }
 
 /// One Chip-Builder target: back-end budget, application constraints and
@@ -90,21 +98,38 @@ impl Spec {
         }
     }
 
+    /// Inferences in flight the objective asks for: `batch` under
+    /// [`Objective::Throughput`], otherwise 1 (single-shot semantics).
+    pub fn batch(&self) -> usize {
+        match self.objective {
+            Objective::Throughput { batch } => batch.max(1),
+            _ => 1,
+        }
+    }
+
     /// Stage-1 feasibility filter: the coarse prediction must fit the
     /// resource budget and meet the throughput and power constraints.
+    /// Under a batch objective the `min_fps` floor reads *steady-state*
+    /// throughput (one completion per pipeline period), not 1/latency —
+    /// the whole reason to serve batched.
     pub fn feasible(&self, c: &CoarseReport) -> bool {
-        self.backend.fits(&c.resources)
-            && c.fps() >= self.min_fps
-            && c.avg_power_mw() <= self.max_power_mw
+        let fps_ok = match self.objective {
+            Objective::Throughput { .. } => c.steady_fps() >= self.min_fps,
+            _ => c.fps() >= self.min_fps,
+        };
+        self.backend.fits(&c.resources) && fps_ok && c.avg_power_mw() <= self.max_power_mw
     }
 
     /// Scalar score of a design under this spec's objective — lower is
-    /// better.
+    /// better. For [`Objective::Throughput`] pass the *batched* makespan
+    /// as `latency_ms`: at fixed batch, minimizing it maximizes sustained
+    /// throughput.
     pub fn objective_score(&self, latency_ms: f64, energy_uj: f64) -> f64 {
         match self.objective {
             Objective::Latency => latency_ms,
             Objective::Energy => energy_uj,
             Objective::Edp => energy_uj * latency_ms,
+            Objective::Throughput { .. } => latency_ms,
         }
     }
 }
@@ -282,6 +307,31 @@ mod tests {
         let mut fast = Spec::ultra96_object_detection();
         fast.min_fps = 1.0e9;
         assert!(!fast.feasible(&c));
+    }
+
+    #[test]
+    fn min_fps_reads_steady_throughput_under_batch_objective() {
+        let m = zoo::by_name("SK8").unwrap();
+        let cfg = HwConfig::ultra96_default();
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let c = predict_coarse(&g, &cfg.tech).unwrap();
+        assert!(
+            c.steady_fps() > c.fps(),
+            "pipelined steady rate {} must beat 1/latency {}",
+            c.steady_fps(),
+            c.fps()
+        );
+        // Pin a throughput floor between the two rates: the single-shot
+        // path must reject it, the batch-objective path must accept it.
+        let floor = (c.fps() + c.steady_fps()) / 2.0;
+        let mut single = Spec::ultra96_object_detection();
+        single.min_fps = floor;
+        assert!(!single.feasible(&c), "single-shot fps path must read 1/latency");
+        let mut batched = single.clone();
+        batched.objective = Objective::Throughput { batch: 8 };
+        assert!(batched.feasible(&c), "batch objective must read steady-state fps");
+        assert_eq!(batched.batch(), 8);
+        assert_eq!(single.batch(), 1);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::predictor::{predict_coarse, CoarseReport};
 use crate::templates::{HwConfig, TemplateId};
 
 use super::cache::{CacheKey, DseCache};
-use super::spec::{Spec, SweepGrid};
+use super::spec::{Objective, Spec, SweepGrid};
 use super::surrogate::{self, DsePolicy};
 use super::Candidate;
 
@@ -80,6 +80,26 @@ struct Eval {
     energy_uj: f64,
     latency_ms: f64,
     feasible: bool,
+}
+
+/// Coarse ranking score for candidate selection — lower is better. Legacy
+/// objectives score exactly as before; under a batch objective candidates
+/// are ranked by the coarse steady-state period (ms per inference at the
+/// slowest stage), so a layer-pipelined design with a long fill but a
+/// short period outranks a marginally-lower-latency monolith — stage 2's
+/// batched fine simulation then settles the order exactly.
+fn stage1_score(spec: &Spec, c: &CoarseReport) -> f64 {
+    match spec.objective {
+        Objective::Throughput { .. } => {
+            let fps = c.steady_fps();
+            if fps <= 0.0 {
+                f64::INFINITY
+            } else {
+                1000.0 / fps
+            }
+        }
+        _ => spec.objective_score(c.latency_ms, c.energy_uj()),
+    }
 }
 
 /// Run the stage-1 sweep with a machine-sized pool and the process-wide
@@ -257,8 +277,8 @@ pub fn stage1_with_policy(
         })
         .collect();
     selected.sort_by(|a, b| {
-        let sa = spec.objective_score(a.coarse.latency_ms, a.coarse.energy_uj());
-        let sb = spec.objective_score(b.coarse.latency_ms, b.coarse.energy_uj());
+        let sa = stage1_score(spec, &a.coarse);
+        let sb = stage1_score(spec, &b.coarse);
         sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
     });
     selected.truncate(n2);
@@ -304,6 +324,23 @@ mod tests {
             let a = spec.objective_score(w[0].coarse.latency_ms, w[0].coarse.energy_uj());
             let b = spec.objective_score(w[1].coarse.latency_ms, w[1].coarse.energy_uj());
             assert!(a <= b, "selected not sorted: {a} > {b}");
+        }
+    }
+
+    #[test]
+    fn throughput_objective_ranks_by_coarse_steady_period() {
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective = Objective::Throughput { batch: 16 };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let s1 = stage1(&m, &spec, &grid, 5).unwrap();
+        assert!(!s1.selected.is_empty(), "Ultra96 must fit skynet_tiny under batching");
+        // Best-first by steady throughput, not single-shot latency.
+        for w in s1.selected.windows(2) {
+            assert!(
+                w[0].coarse.steady_fps() >= w[1].coarse.steady_fps() - 1e-12,
+                "selection not sorted by steady fps"
+            );
         }
     }
 

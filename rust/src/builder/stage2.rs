@@ -32,7 +32,7 @@ use anyhow::Result;
 
 use crate::dnn::Model;
 use crate::graph::{Graph, NodeId};
-use crate::predictor::{predict_coarse, simulate_prevalidated, CoarseReport, FineReport};
+use crate::predictor::{predict_coarse, simulate_batched_prevalidated, CoarseReport, FineReport};
 use crate::templates::{HwConfig, TemplateId};
 
 use super::moves::MoveSet;
@@ -82,6 +82,16 @@ pub struct Stage2Report {
     pub bottleneck_idle_before: u64,
     pub bottleneck_busy_after: u64,
     pub bottleneck_idle_after: u64,
+    /// Inferences in flight the refinement optimized for (`spec.batch()`;
+    /// 1 for the single-shot objectives).
+    pub batch: u64,
+    /// Pipeline fill transient of the final design's fine simulation.
+    pub fill_cycles: u64,
+    /// Steady-state inter-completion period of the final design.
+    pub steady_period_cycles: u64,
+    /// Sustained steady-state throughput of the final design (equals
+    /// `1000 / fine_latency_ms` when `batch == 1`).
+    pub steady_fps: f64,
 }
 
 /// A fully evaluated design point: graph plus both predictor modes.
@@ -114,21 +124,36 @@ fn assert_move_loop_state_is_send() {
 /// the initial candidate (`validate = true`); move evaluations skip it —
 /// template output validity does not depend on the configuration, and
 /// `simulate_prevalidated` still detects deadlocks rather than hanging.
-fn evaluate(model: &Model, template: TemplateId, cfg: &HwConfig, validate: bool) -> Result<EvalPoint> {
+fn evaluate(
+    model: &Model,
+    template: TemplateId,
+    cfg: &HwConfig,
+    batch: usize,
+    validate: bool,
+) -> Result<EvalPoint> {
     let graph = template.build(model, cfg)?;
     if validate {
         graph.validate()?;
     }
     let coarse = predict_coarse(&graph, &cfg.tech)?;
-    let fine = simulate_prevalidated(&graph, cfg.tech.costs.leakage_mw, false)?;
+    // `batch == 1` is byte-identical to the plain `simulate_prevalidated`
+    // (property-tested), so legacy objectives are untouched.
+    let fine = simulate_batched_prevalidated(&graph, batch, cfg.tech.costs.leakage_mw, false)?;
     Ok(EvalPoint { graph, coarse, fine })
 }
 
-/// The throughput-limiting IP: the computation IP with the most busy
-/// cycles (its idle cycles are what the co-optimization squeezes out).
-/// Falls back to the fine report's min-idle node for graphs without
-/// computation IPs.
+/// The throughput-limiting IP. Single-shot: the computation IP with the
+/// most busy cycles (its idle cycles are what the co-optimization squeezes
+/// out), falling back to the fine report's min-idle node for graphs
+/// without computation IPs. Batched: Algorithm 1's own rule applied to the
+/// steady-state accounting — the IP with the least idle slack (highest
+/// occupancy) sets the inter-completion period, and batching can move that
+/// label onto a different stage than the single-shot heuristic picks,
+/// which redirects the whole move loop.
 fn throughput_bottleneck(g: &Graph, fine: &FineReport) -> NodeId {
+    if fine.batch > 1 {
+        return fine.bottleneck;
+    }
     g.nodes
         .iter()
         .enumerate()
@@ -218,7 +243,7 @@ fn run_phase(
             }
             let eval = {
                 let _mv_span = crate::obs::span_with(|| format!("stage2.move.{}", mv.name()));
-                match evaluate(model, template, &applied.cfg, false) {
+                match evaluate(model, template, &applied.cfg, spec.batch(), false) {
                     Ok(e) if spec.feasible(&e.coarse)
                         && phase_gate(accept, template, spec, &applied.cfg, &e) =>
                     {
@@ -314,7 +339,7 @@ pub fn stage2_with_moves(
         }
     }
     let template = cand.template;
-    let initial = evaluate(model, template, &cand.cfg, true)?;
+    let initial = evaluate(model, template, &cand.cfg, spec.batch(), true)?;
     let bn = throughput_bottleneck(&initial.graph, &initial.fine);
     let bottleneck_busy_before = initial.fine.per_node[bn].busy_cycles;
     let bottleneck_idle_before = initial.fine.per_node[bn].idle_cycles;
@@ -354,6 +379,10 @@ pub fn stage2_with_moves(
 
     let bottleneck_busy_after = best.fine.per_node[bn].busy_cycles;
     let bottleneck_idle_after = best.fine.per_node[bn].idle_cycles;
+    let batch = best.fine.batch;
+    let fill_cycles = best.fine.fill_cycles;
+    let steady_period_cycles = best.fine.steady_period_cycles;
+    let steady_fps = best.fine.steady_fps();
     let feasible = spec.feasible(&best.coarse);
     let best = Candidate {
         template,
@@ -376,6 +405,10 @@ pub fn stage2_with_moves(
         bottleneck_idle_before,
         bottleneck_busy_after,
         bottleneck_idle_after,
+        batch,
+        fill_cycles,
+        steady_period_cycles,
+        steady_fps,
     })
 }
 
@@ -507,6 +540,25 @@ mod tests {
             format!("{:?}", &full.steps[..legacy.steps.len()]),
             format!("{:?}", &legacy.steps[..]),
         );
+    }
+
+    #[test]
+    fn throughput_objective_runs_batched_and_reports_steady_state() {
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective = Objective::Throughput { batch: 8 };
+        let rep = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        assert_eq!(rep.batch, 8);
+        assert!(rep.fill_cycles > 0);
+        assert!(rep.steady_period_cycles > 0);
+        assert!(rep.steady_fps > 0.0);
+        // Fill is a one-off; the steady period is at most one inference's
+        // worth of the batched makespan.
+        assert!(rep.steady_period_cycles <= rep.fill_cycles);
+        // Legacy objectives stay single-shot with degenerate fill/period.
+        let legacy = stage2(&m, &Spec::ultra96_object_detection(), unpipelined_candidate(&m)).unwrap();
+        assert_eq!(legacy.batch, 1);
+        assert_eq!(legacy.fill_cycles, legacy.steady_period_cycles);
     }
 
     #[test]

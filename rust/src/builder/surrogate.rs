@@ -544,11 +544,11 @@ pub fn training_dump(
         (
             "objective",
             match spec.objective {
-                Objective::Latency => "latency",
-                Objective::Energy => "energy",
-                Objective::Edp => "edp",
-            }
-            .into(),
+                Objective::Latency => "latency".into(),
+                Objective::Energy => "energy".into(),
+                Objective::Edp => "edp".into(),
+                Objective::Throughput { batch } => Json::Str(format!("throughput@{batch}")),
+            },
         ),
         ("grid_points", points.len().into()),
         ("unlabeled", unlabeled.into()),

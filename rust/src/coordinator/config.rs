@@ -85,8 +85,8 @@ pub struct RunConfig {
 /// object can carry the `api` request tag).
 const CONFIG_KEYS: &[&str] = &[
     "type", "model", "model_json", "backend", "dsp", "bram18k", "lut", "ff", "sram_kb", "macs",
-    "objective", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves", "dse",
-    "grid", "out_dir", "rtl_out", "cache_dir",
+    "objective", "batch", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves",
+    "dse", "grid", "out_dir", "rtl_out", "cache_dir",
 ];
 
 /// A string key with present-but-wrong-typed as an error, never a silent
@@ -161,12 +161,24 @@ impl RunConfig {
             },
             other => return Err(anyhow!("config: unknown backend '{other}'")),
         };
+        let batch = want_usize(j, "batch")?;
         let objective = match want_str(j, "objective")?.unwrap_or("latency") {
             "latency" => Objective::Latency,
             "energy" => Objective::Energy,
             "edp" => Objective::Edp,
+            "throughput" => {
+                let b = batch
+                    .ok_or_else(|| anyhow!("config: objective 'throughput' requires 'batch'"))?;
+                if b == 0 {
+                    return Err(anyhow!("config: 'batch' must be >= 1"));
+                }
+                Objective::Throughput { batch: b }
+            }
             other => return Err(anyhow!("config: unknown objective '{other}'")),
         };
+        if batch.is_some() && !matches!(objective, Objective::Throughput { .. }) {
+            return Err(anyhow!("config: 'batch' requires \"objective\": \"throughput\""));
+        }
         let spec = Spec {
             backend,
             min_fps: want_f64(j, "min_fps")?.unwrap_or(20.0),
@@ -233,15 +245,15 @@ impl RunConfig {
                 pairs.push(("macs", (*macs).into()));
             }
         }
-        pairs.push((
-            "objective",
-            match self.spec.objective {
-                Objective::Latency => "latency",
-                Objective::Energy => "energy",
-                Objective::Edp => "edp",
+        match self.spec.objective {
+            Objective::Latency => pairs.push(("objective", "latency".into())),
+            Objective::Energy => pairs.push(("objective", "energy".into())),
+            Objective::Edp => pairs.push(("objective", "edp".into())),
+            Objective::Throughput { batch } => {
+                pairs.push(("objective", "throughput".into()));
+                pairs.push(("batch", batch.into()));
             }
-            .into(),
-        ));
+        }
         pairs.push(("min_fps", self.spec.min_fps.into()));
         pairs.push(("max_power_mw", self.spec.max_power_mw.into()));
         pairs.push(("min_precision_bits", self.spec.min_precision_bits.into()));
@@ -355,6 +367,28 @@ mod tests {
     }
 
     #[test]
+    fn parses_throughput_objective_with_strict_batch() {
+        let j = Json::parse(r#"{"model":"SK","objective":"throughput","batch":8}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.spec.objective, Objective::Throughput { batch: 8 });
+        assert_eq!(c.spec.batch(), 8);
+        // 'batch' is strict both ways: required by "throughput", rejected
+        // without it, and wrong-typed / zero values are errors.
+        for bad in [
+            r#"{"model":"SK","objective":"throughput"}"#,
+            r#"{"model":"SK","objective":"latency","batch":8}"#,
+            r#"{"model":"SK","batch":8}"#,
+            r#"{"model":"SK","objective":"throughput","batch":0}"#,
+            r#"{"model":"SK","objective":"throughput","batch":"8"}"#,
+        ] {
+            assert!(
+                RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
     fn rejects_unknown_backend() {
         let j = Json::parse(r#"{"model":"SK","backend":"quantum"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
@@ -392,6 +426,7 @@ mod tests {
             r#"{"model":"SK","cache_dir":"results/cache"}"#,
             r#"{"model":"SK","dse":"surrogate","grid":"dense"}"#,
             r#"{"model":"SK","dse":"exhaustive"}"#,
+            r#"{"model":"SK","objective":"throughput","batch":16}"#,
         ] {
             let c = RunConfig::from_json(&Json::parse(text).unwrap()).unwrap();
             let back = RunConfig::from_json(&c.to_json()).unwrap();

@@ -260,6 +260,18 @@ impl Graph {
     pub fn node_by_name(&self, name: &str) -> Option<NodeId> {
         self.nodes.iter().position(|n| n.name == name)
     }
+
+    /// A copy of this graph with every state machine unrolled `batch`
+    /// times — the literal reference model of `batch` back-to-back
+    /// inferences that `predictor::fine::simulate_batched` reproduces in
+    /// O(fill + period) instead of O(batch · states).
+    pub fn unrolled_batch(&self, batch: u64) -> Graph {
+        let mut g = self.clone();
+        for node in &mut g.nodes {
+            node.sm = node.sm.unrolled(batch);
+        }
+        g
+    }
 }
 
 /// Builder helper producing a node with zeroed cost coefficients (tests,

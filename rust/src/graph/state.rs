@@ -161,6 +161,21 @@ impl StateMachine {
         // identical; totals are preserved exactly (tested).
         out
     }
+
+    /// The whole state sequence repeated `times` back-to-back — one IP
+    /// processing `times` inferences in a row. This is the literal
+    /// reference the batched fine simulator is cross-checked against
+    /// (`simulate_batched(g, B)` ≡ `simulate` on a graph whose machines
+    /// are all `unrolled(B)`).
+    pub fn unrolled(&self, times: u64) -> StateMachine {
+        let mut out = StateMachine::new();
+        for _ in 0..times {
+            for p in &self.phases {
+                out.repeat(p.count, p.proto.clone());
+            }
+        }
+        out
+    }
 }
 
 /// Divide one state into `factor` smaller states preserving totals.

@@ -3,9 +3,11 @@
 //! ```text
 //! autodnnchip list-models
 //! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
+//!                      [--batch N]
 //! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
 //!                      [--moves legacy|full] [--cache-dir DIR]
 //!                      [--dse exhaustive|surrogate] [--grid standard|dense]
+//!                      [--batch N]
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
 //! autodnnchip sweep    --model SK [--backend fpga|asic] [--n2 N]
@@ -31,6 +33,11 @@
 //! (features, objective) training rows plus stage-2 move accept/reject
 //! counters for offline surrogate studies.
 //!
+//! `--batch N` switches a run to steady-state throughput semantics: the
+//! fine simulator models N inferences in flight (`predict`'s fine column
+//! becomes the batched makespan) and `build`/`sweep` optimize the
+//! `throughput` objective at that depth instead of single-shot latency.
+//!
 //! `predict` and `build` route through the `api::Engine` facade — the CLI
 //! is one consumer of the same typed request/response surface the JSONL
 //! serving mode (`serve`) exposes.
@@ -46,7 +53,7 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 use autodnnchip::api::{self, Engine, PredictRequest, Request, Response};
-use autodnnchip::builder::{surrogate, Spec};
+use autodnnchip::builder::{surrogate, Objective, Spec};
 use autodnnchip::coordinator::{DseChoice, GridChoice, MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::util::cli::Args;
@@ -130,7 +137,7 @@ fn with_obs_flags<'a>(known: &[&'a str]) -> Vec<&'a str> {
 fn run_command(args: &Args) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("list-models") => {
-            args.warn_unknown_flags(&OBS_FLAGS);
+            args.warn_unknown_flags(&with_obs_flags(&["batch"]));
             let mut t = Table::new("model zoo", &["name", "layers", "params (M)", "MACs (M)"]);
             for name in zoo::all_names() {
                 let m = zoo::by_name(&name).unwrap();
@@ -194,14 +201,29 @@ fn grid_flag(args: &Args) -> Result<GridChoice> {
     }
 }
 
+/// The shared `--batch N` flag (build and sweep): optimize steady-state
+/// throughput with N inferences in flight instead of single-shot latency.
+fn apply_batch_flag(args: &Args, spec: &mut Spec) -> Result<()> {
+    if let Some(b) = numeric_flag::<usize>(args, "batch") {
+        if b == 0 {
+            bail!("--batch must be >= 1");
+        }
+        spec.objective = Objective::Throughput { batch: b };
+    }
+    Ok(())
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["model", "template", "tech", "unroll", "pipeline"]));
+    args.warn_unknown_flags(&with_obs_flags(&[
+        "model", "template", "tech", "unroll", "pipeline", "batch",
+    ]));
     let req = PredictRequest {
         model: args.flag_or("model", "SK"),
         template: args.flag_or("template", "hetero_dw_pw"),
         tech: args.flag_or("tech", "ultra96"),
         unroll: numeric_flag(args, "unroll"),
         pipeline: numeric_flag(args, "pipeline"),
+        batch: numeric_flag(args, "batch"),
     };
     // Predict runs on the calling thread, so a single-worker engine avoids
     // spawning a machine-sized pool for the most common CLI command.
@@ -227,7 +249,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 fn cmd_build(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
         "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
-        "cache-dir", "dse", "grid",
+        "cache-dir", "dse", "grid", "batch",
     ]));
     let cfg = if let Some(path) = args.flag("config") {
         // The config file carries the whole run; any other flag on the
@@ -244,11 +266,12 @@ fn cmd_build(args: &Args) -> Result<()> {
         RunConfig::from_file(path)?
     } else {
         let backend = args.flag_or("backend", "fpga");
-        let spec = match backend.as_str() {
+        let mut spec = match backend.as_str() {
             "fpga" => Spec::ultra96_object_detection(),
             "asic" => Spec::asic_vision(),
             other => bail!("unknown backend '{other}'"),
         };
+        apply_batch_flag(args, &mut spec)?;
         let moves = match args.flag_or("moves", "full").as_str() {
             "legacy" => MoveSetChoice::Legacy,
             "full" => MoveSetChoice::Full,
@@ -289,14 +312,15 @@ fn cmd_build(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
         "model", "model-json", "backend", "n2", "cache-dir", "out", "workers", "dse", "grid",
-        "dump-training",
+        "dump-training", "batch",
     ]));
     let backend = args.flag_or("backend", "fpga");
-    let spec = match backend.as_str() {
+    let mut spec = match backend.as_str() {
         "fpga" => Spec::ultra96_object_detection(),
         "asic" => Spec::asic_vision(),
         other => bail!("unknown backend '{other}'"),
     };
+    apply_batch_flag(args, &mut spec)?;
     let cfg = RunConfig {
         model: args.flag_or("model", "SK"),
         model_json: args.flag("model-json").map(|s| s.to_string()),
@@ -357,7 +381,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// build does not hold back the output of the cheap requests ahead of it.
 fn cmd_serve(args: &Args) -> Result<()> {
     args.warn_unknown_flags(&with_obs_flags(&[
-        "requests", "out", "workers", "verbose", "cache-dir",
+        "requests", "out", "workers", "verbose", "cache-dir", "batch",
     ]));
     let path = args.flag("requests").ok_or_else(|| {
         anyhow!(
@@ -409,7 +433,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["seed", "results"]));
+    args.warn_unknown_flags(&with_obs_flags(&["seed", "results", "batch"]));
     let id = args
         .subcommand
         .get(1)
@@ -429,7 +453,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["artifacts"]));
+    args.warn_unknown_flags(&with_obs_flags(&["artifacts", "batch"]));
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());

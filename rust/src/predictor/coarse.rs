@@ -70,6 +70,22 @@ impl CoarseReport {
         }
         1000.0 / self.latency_ms
     }
+
+    /// Coarse steady-state throughput proxy for batched serving: with
+    /// inferences pipelined across IPs, the inter-completion period is
+    /// bounded below by the *slowest single stage*, not the critical-path
+    /// sum — so fps ≈ 1 / max per-IP latency. The fine simulator's
+    /// `steady_fps` refines this with real inter-IP blocking; stage 1 only
+    /// needs the optimistic screen (it never rejects a design the fine
+    /// model would accept).
+    pub fn steady_fps(&self) -> f64 {
+        let stage = self.per_node_latency_cycles.iter().copied().max().unwrap_or(0);
+        if stage == 0 || self.latency_cycles == 0 || self.latency_ms <= 0.0 {
+            return self.fps();
+        }
+        let ms_per_cycle = self.latency_ms / self.latency_cycles as f64;
+        1000.0 / (stage as f64 * ms_per_cycle)
+    }
 }
 
 /// Accumulate resource consumption over the graph's IPs.

@@ -20,4 +20,7 @@ pub mod coarse;
 pub mod fine;
 
 pub use coarse::{predict_coarse, CoarseReport, Resources};
-pub use fine::{simulate, simulate_prevalidated, FineReport, NodeSim};
+pub use fine::{
+    simulate, simulate_batched, simulate_batched_prevalidated, simulate_prevalidated, FineReport,
+    NodeSim,
+};

@@ -16,7 +16,7 @@ use autodnnchip::dnn::{parser, zoo, LayerKind, Model, PoolKind, TensorShape};
 use autodnnchip::graph::{bare_node, Graph, State, StateMachine};
 use autodnnchip::ip::{tech, ComputeKind, IpClass, Precision};
 use autodnnchip::predictor::{
-    predict_coarse, simulate, simulate_prevalidated, CoarseReport, FineReport,
+    predict_coarse, simulate, simulate_batched, simulate_prevalidated, CoarseReport, FineReport,
 };
 use autodnnchip::prop_assert;
 use autodnnchip::templates::{HwConfig, TemplateId};
@@ -68,6 +68,100 @@ fn random_graph(rng: &mut Rng, size: usize) -> Graph {
         g.nodes[i].sm = m;
     }
     g
+}
+
+#[test]
+fn prop_simulate_batched_one_byte_identical_on_zoo_both_backends() {
+    // A batch of one must be *the same computation* as the plain fine sim
+    // — pinned by Debug-string equality over the full zoo on both
+    // back-ends, so the batched entry point can sit in every call site
+    // without perturbing legacy results.
+    let mut checked = 0usize;
+    for name in zoo::all_names() {
+        let m = zoo::by_name(&name).unwrap();
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let (template, cfg) = match spec.backend {
+                Backend::Fpga { .. } => (TemplateId::Hetero, HwConfig::ultra96_default()),
+                Backend::Asic { .. } => {
+                    let mut c = HwConfig::asic_default();
+                    c.unroll = 48;
+                    c.act_buf_bits = 48 * 8 * 1024;
+                    c.w_buf_bits = 48 * 8 * 1024;
+                    (TemplateId::Systolic, c)
+                }
+            };
+            let Ok(g) = template.build(&m, &cfg) else { continue };
+            if g.validate().is_err() {
+                continue;
+            }
+            let leak = cfg.tech.costs.leakage_mw;
+            let plain = simulate(&g, leak, false).unwrap();
+            let batched = simulate_batched(&g, 1, leak, false).unwrap();
+            assert_eq!(
+                format!("{plain:?}"),
+                format!("{batched:?}"),
+                "{name} × {:?}: batch=1 diverged from simulate",
+                spec.backend
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= zoo::all_names().len(), "too few zoo graphs exercised: {checked}");
+}
+
+#[test]
+fn prop_batched_extrapolation_matches_literal_unrolled_reference() {
+    // The O(fill + period) steady-state extrapolation must be cycle-exact
+    // against the literal B-unrolled graph run through the plain engine —
+    // same methodology as `cycle_accurate_vs_reference`, here at the round
+    // level: makespan, per-node busy/idle/finish/states and the bottleneck
+    // all byte-equal for B ∈ {2, 4, 16}.
+    check("batched==unrolled", |rng, size| {
+        let g = random_graph(rng, size);
+        if g.validate().is_err() {
+            return Ok(());
+        }
+        for batch in [2u64, 4, 16] {
+            let fast =
+                simulate_batched(&g, batch as usize, 0.0, false).map_err(|e| e.to_string())?;
+            let lit = simulate(&g.unrolled_batch(batch), 0.0, false).map_err(|e| e.to_string())?;
+            prop_assert!(
+                fast.cycles == lit.cycles,
+                "B={batch}: extrapolated {} vs literal {}",
+                fast.cycles,
+                lit.cycles
+            );
+            prop_assert!(
+                format!("{:?}", fast.per_node) == format!("{:?}", lit.per_node),
+                "B={batch}: per-node stats diverge from the unrolled reference"
+            );
+            prop_assert!(fast.bottleneck == lit.bottleneck, "B={batch}: bottleneck diverges");
+            prop_assert!(fast.batch == batch, "batch field");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_template_sync_loops_match_unrolled_reference() {
+    // Template graphs carry sync-token feedback loops (layer-serial
+    // folding), the case the structural rate bound cannot predict —
+    // detection must either observe the loop period or fall back, staying
+    // cycle-exact against the literal unrolled reference either way.
+    let m = zoo::skynet_tiny();
+    let cfg = HwConfig::ultra96_default();
+    let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+    g.validate().unwrap();
+    for batch in [2u64, 4, 16] {
+        let fast = simulate_batched(&g, batch as usize, 0.0, false).unwrap();
+        let lit = simulate(&g.unrolled_batch(batch), 0.0, false).unwrap();
+        assert_eq!(fast.cycles, lit.cycles, "B={batch}");
+        assert_eq!(
+            format!("{:?}", fast.per_node),
+            format!("{:?}", lit.per_node),
+            "B={batch}: per-node stats diverge"
+        );
+    }
 }
 
 #[test]
