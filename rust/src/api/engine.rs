@@ -30,11 +30,12 @@ use crate::predictor::{predict_coarse, simulate_batched};
 use crate::rtlgen;
 use crate::templates::{HwConfig, TemplateId};
 use crate::util::json::{obj, Json};
+use crate::workload::{self, Workload, WorkloadSpec};
 
-use super::request::{PredictRequest, Request, SweepRequest};
+use super::request::{PredictRequest, Request, SimulateWorkloadRequest, SweepRequest};
 use super::response::{
     BuildResponse, PredictResponse, Response, SimulateFineResponse, StatsResponse, SweepResponse,
-    SweepSelection,
+    SweepSelection, WorkloadResponse,
 };
 
 enum CacheChoice {
@@ -249,6 +250,9 @@ impl Engine {
         match req {
             Request::Predict(p) => self.predict(&p).map(Response::Predict),
             Request::SimulateFine(s) => self.simulate_fine(&s.0).map(Response::SimulateFine),
+            Request::SimulateWorkload(w) => {
+                self.simulate_workload(&w).map(Response::SimulateWorkload)
+            }
             Request::Build(b) => {
                 let summary = self.run(&b.0)?;
                 let model = summary
@@ -490,7 +494,7 @@ impl Engine {
                 rtlgen::emit(&bundle, &Path::new(dir).join(format!("design_{rank}")))?;
             }
         }
-        let result_json = obj(vec![
+        let mut result_pairs: Vec<(&str, Json)> = vec![
             ("model", model.name.as_str().into()),
             (
                 "moves",
@@ -541,12 +545,38 @@ impl Engine {
                                 ("fill_cycles", r.fill_cycles.into()),
                                 ("steady_period_cycles", r.steady_period_cycles.into()),
                                 ("steady_fps", r.steady_fps.into()),
+                                (
+                                    "occupancy",
+                                    Json::Arr(
+                                        r.occupancy.iter().map(|&o| o.into()).collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),
                 ),
             ),
-        ]);
+        ];
+        // Serving runs additionally replay the spec's workload (at the
+        // full default horizon, not the DSE probe size) against the best
+        // surviving design and publish the report.
+        if let Some(wspec) = cfg.spec.workload() {
+            if let Some(best) = build.survivors.first() {
+                let g = best.template.build(&model, &best.cfg)?;
+                let fine = simulate_batched(
+                    &g,
+                    cfg.spec.batch(),
+                    best.cfg.tech.costs.leakage_mw,
+                    false,
+                )?;
+                let report = workload::simulate_workload(
+                    &fine,
+                    &wspec.workload(workload::DEFAULT_REQUESTS),
+                )?;
+                result_pairs.push(("workload", report.to_json()));
+            }
+        }
+        let result_json = obj(result_pairs);
         if let Some(dir) = &cfg.out_dir {
             std::fs::create_dir_all(dir)?;
             // When instrumentation is on, the on-disk result.json also
@@ -724,6 +754,47 @@ impl Engine {
             fill_cycles: fine.fill_cycles,
             steady_period_cycles: fine.steady_period_cycles,
             steady_fps: fine.steady_fps(),
+            occupancy: fine.per_node.iter().map(|n| n.occupancy).collect(),
+        })
+    }
+
+    /// Serve a design point under a workload (the `simulate_workload`
+    /// route): build + fine-simulate the point at its serving batch depth
+    /// (default [`workload::SERVE_PROBE_BATCH`]), then replay the arrival
+    /// process against the steady-state model — O(requests), no
+    /// per-request fine-sim re-run.
+    fn simulate_workload(&self, r: &SimulateWorkloadRequest) -> Result<WorkloadResponse> {
+        let (model, template, cfg) = self.resolve_point(&r.point)?;
+        let g = template.build(&model, &cfg)?;
+        let batch = r.point.batch.unwrap_or(workload::SERVE_PROBE_BATCH);
+        let fine = simulate_batched(&g, batch, cfg.tech.costs.leakage_mw, false)?;
+        let wl = match &r.trace {
+            Some(path) => {
+                let ts = workload::load_trace(Path::new(path))?;
+                let mut w = Workload::from_trace(ts, r.queue_depth)?;
+                w.policy = r.policy;
+                w
+            }
+            None => {
+                let qps = r
+                    .qps
+                    .ok_or_else(|| anyhow!("simulate_workload requires 'qps' (or 'trace')"))?;
+                let spec = WorkloadSpec {
+                    arrival: r.arrival,
+                    qps,
+                    seed: r.seed,
+                    queue_depth: r.queue_depth,
+                    policy: r.policy,
+                };
+                spec.validate()?;
+                spec.workload(r.requests)
+            }
+        };
+        let report = workload::simulate_workload(&fine, &wl)?;
+        Ok(WorkloadResponse {
+            model: model.name,
+            template: template.name().to_string(),
+            report,
         })
     }
 
@@ -845,6 +916,42 @@ mod tests {
         assert!(j.get("fill_cycles").is_some());
         assert!(j.get("steady_period_cycles").is_some());
         assert!(j.get("steady_fps").is_some());
+        // Per-stage occupancy is surfaced typed and on the JSON line.
+        assert!(!s.occupancy.is_empty());
+        assert!(s.occupancy.iter().all(|o| (0.0..=1.0).contains(o)));
+        let occ = j.get("occupancy").unwrap().as_arr().unwrap();
+        assert_eq!(occ.len(), s.occupancy.len());
+    }
+
+    #[test]
+    fn simulate_workload_route_is_deterministic_and_reports_tails() {
+        let engine = Engine::builder().workers(1).isolated_cache().build();
+        let req = SimulateWorkloadRequest {
+            requests: 2_000,
+            seed: 42,
+            ..SimulateWorkloadRequest::poisson("SK", 20)
+        };
+        let submit = |r: &SimulateWorkloadRequest| {
+            let resp = engine.submit(Request::SimulateWorkload(r.clone())).expect("workload sim");
+            let Response::SimulateWorkload(w) = resp else { panic!("wrong response variant") };
+            w
+        };
+        let a = submit(&req);
+        assert_eq!(a.model, "SK");
+        assert_eq!(a.report.requests, 2_000);
+        assert!(a.report.p50_ms <= a.report.p95_ms && a.report.p95_ms <= a.report.p99_ms);
+        assert!(a.report.achieved_qps > 0.0);
+        // Same seed, byte-identical report; different seed diverges.
+        let b = submit(&req);
+        assert_eq!(a.report, b.report);
+        let c = submit(&SimulateWorkloadRequest { seed: 43, ..req.clone() });
+        assert_ne!(a.report, c.report);
+        // The JSON line carries the type tag and the tail percentiles.
+        let j = Response::SimulateWorkload(a).to_json();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "simulate_workload");
+        assert!(j.get("p99_ms").is_some());
+        assert!(j.get("drop_rate").is_some());
+        assert!(j.get("queue_hist").is_some());
     }
 
     #[test]

@@ -27,11 +27,12 @@ pub mod serve;
 
 pub use engine::{Engine, EngineBuilder};
 pub use request::{
-    parse_jsonl, BuildRequest, PredictRequest, Request, SimulateFineRequest, SweepRequest,
+    parse_jsonl, BuildRequest, PredictRequest, Request, SimulateFineRequest,
+    SimulateWorkloadRequest, SweepRequest,
 };
 pub use response::{
     BuildResponse, ErrorResponse, PredictResponse, Response, SimulateFineResponse, StatsResponse,
-    SweepResponse, SweepSelection,
+    SweepResponse, SweepSelection, WorkloadResponse,
 };
 pub use serve::{
     serve_lines, serve_lines_with, serve_path, serve_path_with, write_jsonl, LineStat,

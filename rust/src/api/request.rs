@@ -7,6 +7,7 @@
 //! ```json
 //! {"type":"predict","model":"SK","template":"hetero_dw_pw","tech":"ultra96"}
 //! {"type":"simulate_fine","model":"sdn_ocr","template":"systolic"}
+//! {"type":"simulate_workload","model":"SK","qps":100,"arrival":"poisson"}
 //! {"type":"build","model":"sdn_ocr","backend":"fpga","n2":2,"n_opt":1}
 //! {"type":"sweep","model":"SK8","backend":"fpga","n2":3}
 //! {"type":"batch","requests":[{"type":"predict","model":"SK8"}]}
@@ -21,6 +22,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::RunConfig;
 use crate::util::json::{obj, Json};
+use crate::workload::{ArrivalKind, QueuePolicy, DEFAULT_QUEUE_DEPTH, DEFAULT_REQUESTS};
 
 /// One unit of work the [`Engine`](super::Engine) can serve.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,6 +31,9 @@ pub enum Request {
     Predict(PredictRequest),
     /// Fine-grained (cycle-level) run-time simulation only.
     SimulateFine(SimulateFineRequest),
+    /// Serving simulation: the fine sim's steady-state model driven by a
+    /// synthetic or trace arrival process ([`crate::workload`]).
+    SimulateWorkload(SimulateWorkloadRequest),
     /// Full two-stage DSE → PnR → artifacts (the `coordinator::run` flow).
     Build(BuildRequest),
     /// Stage-1 coarse sweep only (the Fig. 11/14 design clouds).
@@ -85,6 +90,44 @@ impl PredictRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimulateFineRequest(pub PredictRequest);
 
+/// Serving-simulation request: a design point plus the workload driving
+/// it. Synthetic mode (`qps` required) generates arrivals in-process;
+/// `trace` mode replays a timestamp file and is mutually exclusive with
+/// the synthetic knobs (`qps`/`arrival`/`seed`/`requests`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateWorkloadRequest {
+    /// The design point to serve (same addressing as [`PredictRequest`];
+    /// its `batch` field sets the serving pipeline depth).
+    pub point: PredictRequest,
+    /// Offered load in requests/s (required unless `trace` is set).
+    pub qps: Option<u64>,
+    pub arrival: ArrivalKind,
+    pub seed: u64,
+    pub queue_depth: usize,
+    pub policy: QueuePolicy,
+    /// Synthetic arrivals simulated per run.
+    pub requests: usize,
+    /// Path of a JSON timestamp trace (`[ms, ...]` or
+    /// `{"timestamps_ms": [...]}`) replacing the synthetic process.
+    pub trace: Option<String>,
+}
+
+impl SimulateWorkloadRequest {
+    /// Poisson arrivals at `qps` against a default-configured point.
+    pub fn poisson(model: &str, qps: u64) -> SimulateWorkloadRequest {
+        SimulateWorkloadRequest {
+            point: PredictRequest::for_model(model),
+            qps: Some(qps),
+            arrival: ArrivalKind::Poisson,
+            seed: 0,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            policy: QueuePolicy::Drop,
+            requests: DEFAULT_REQUESTS,
+            trace: None,
+        }
+    }
+}
+
 /// Chip-Builder request: the coordinator's full run configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BuildRequest(pub RunConfig);
@@ -108,6 +151,13 @@ pub(crate) fn with_type(j: &Json, t: &str) -> Json {
 
 /// Allowed keys of `predict`/`simulate_fine` requests.
 const POINT_KEYS: &[&str] = &["type", "model", "template", "tech", "unroll", "pipeline", "batch"];
+
+/// Allowed keys of `simulate_workload` requests: the point keys plus the
+/// workload knobs (flat, mirroring the CLI's `--qps`/`--arrival`/... ).
+const WORKLOAD_POINT_KEYS: &[&str] = &[
+    "type", "model", "template", "tech", "unroll", "pipeline", "batch", "qps", "arrival", "seed",
+    "queue_depth", "policy", "requests", "trace",
+];
 
 /// Reject keys outside `allowed`: a misspelled key (`"modle"`) must be an
 /// error, not a silent fall-through to the defaults — the JSONL mirror of
@@ -138,8 +188,8 @@ fn str_or(j: &Json, key: &str, default: &str) -> Result<String> {
     }
 }
 
-fn point_from_json(j: &Json) -> Result<PredictRequest> {
-    reject_unknown_keys(j, POINT_KEYS)?;
+fn point_from_json(j: &Json, allowed: &[&str]) -> Result<PredictRequest> {
+    reject_unknown_keys(j, allowed)?;
     let d = PredictRequest::default();
     let bad_uint = |key: &str| anyhow!("request key '{key}' must be a non-negative integer");
     // `unroll` is usize in the domain model, `pipeline` is u64 — parse
@@ -169,6 +219,87 @@ fn point_from_json(j: &Json) -> Result<PredictRequest> {
     })
 }
 
+fn workload_point_from_json(j: &Json) -> Result<SimulateWorkloadRequest> {
+    let point = point_from_json(j, WORKLOAD_POINT_KEYS)?;
+    let bad_uint = |key: &str| anyhow!("request key '{key}' must be a non-negative integer");
+    let qps = match j.get("qps") {
+        None => None,
+        Some(v) => match v.as_u64() {
+            Some(q) if q >= 1 => Some(q),
+            _ => return Err(anyhow!("request key 'qps' must be an integer >= 1")),
+        },
+    };
+    let trace = match j.get("trace") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow!("request key 'trace' must be a string path"))?,
+        ),
+    };
+    if trace.is_some() {
+        for synthetic in ["qps", "arrival", "seed", "requests"] {
+            if j.get(synthetic).is_some() {
+                return Err(anyhow!(
+                    "request key '{synthetic}' conflicts with 'trace' \
+                     (a trace brings its own arrivals)"
+                ));
+            }
+        }
+    } else if qps.is_none() {
+        return Err(anyhow!("simulate_workload request requires 'qps' (or 'trace')"));
+    }
+    let arrival = match j.get("arrival") {
+        None => ArrivalKind::Poisson,
+        Some(v) => ArrivalKind::parse(
+            v.as_str().ok_or_else(|| anyhow!("request key 'arrival' must be a string"))?,
+        )?,
+    };
+    let policy = match j.get("policy") {
+        None => QueuePolicy::Drop,
+        Some(v) => QueuePolicy::parse(
+            v.as_str().ok_or_else(|| anyhow!("request key 'policy' must be a string"))?,
+        )?,
+    };
+    let seed = match j.get("seed") {
+        None => 0,
+        Some(v) => v.as_u64().ok_or_else(|| bad_uint("seed"))?,
+    };
+    let queue_depth = match j.get("queue_depth") {
+        None => DEFAULT_QUEUE_DEPTH,
+        Some(v) => match v.as_usize() {
+            Some(d) if d >= 1 => d,
+            _ => return Err(anyhow!("request key 'queue_depth' must be an integer >= 1")),
+        },
+    };
+    let requests = match j.get("requests") {
+        None => DEFAULT_REQUESTS,
+        Some(v) => match v.as_usize() {
+            Some(n) if n >= 1 => n,
+            _ => return Err(anyhow!("request key 'requests' must be an integer >= 1")),
+        },
+    };
+    Ok(SimulateWorkloadRequest { point, qps, arrival, seed, queue_depth, policy, requests, trace })
+}
+
+fn workload_point_to_json(r: &SimulateWorkloadRequest) -> Json {
+    let mut j = point_to_json(&r.point, "simulate_workload");
+    let Json::Obj(m) = &mut j else { unreachable!("point_to_json returns an object") };
+    if let Some(t) = &r.trace {
+        m.insert("trace".to_string(), t.as_str().into());
+    } else {
+        if let Some(q) = r.qps {
+            m.insert("qps".to_string(), q.into());
+        }
+        m.insert("arrival".to_string(), r.arrival.as_str().into());
+        m.insert("seed".to_string(), r.seed.into());
+        m.insert("requests".to_string(), r.requests.into());
+    }
+    m.insert("queue_depth".to_string(), r.queue_depth.into());
+    m.insert("policy".to_string(), r.policy.as_str().into());
+    j
+}
+
 fn point_to_json(p: &PredictRequest, t: &str) -> Json {
     let mut pairs: Vec<(&str, Json)> = vec![
         ("type", t.into()),
@@ -196,6 +327,7 @@ impl Request {
         match self {
             Request::Predict(_) => "predict",
             Request::SimulateFine(_) => "simulate_fine",
+            Request::SimulateWorkload(_) => "simulate_workload",
             Request::Build(_) => "build",
             Request::Sweep(_) => "sweep",
             Request::Batch(_) => "batch",
@@ -209,6 +341,7 @@ impl Request {
         match self {
             Request::Predict(p) => point_to_json(p, "predict"),
             Request::SimulateFine(s) => point_to_json(&s.0, "simulate_fine"),
+            Request::SimulateWorkload(w) => workload_point_to_json(w),
             Request::Build(b) => with_type(&b.0.to_json(), "build"),
             Request::Sweep(s) => with_type(&s.0.to_json(), "sweep"),
             Request::Batch(reqs) => obj(vec![
@@ -226,8 +359,13 @@ impl Request {
             .and_then(|t| t.as_str())
             .ok_or_else(|| anyhow!("request: missing 'type' tag"))?;
         match tag {
-            "predict" => Ok(Request::Predict(point_from_json(j)?)),
-            "simulate_fine" => Ok(Request::SimulateFine(SimulateFineRequest(point_from_json(j)?))),
+            "predict" => Ok(Request::Predict(point_from_json(j, POINT_KEYS)?)),
+            "simulate_fine" => {
+                Ok(Request::SimulateFine(SimulateFineRequest(point_from_json(j, POINT_KEYS)?)))
+            }
+            "simulate_workload" => {
+                Ok(Request::SimulateWorkload(workload_point_from_json(j)?))
+            }
             // `RunConfig::from_json` is itself strict (unknown keys and
             // wrong-typed values are errors), so build/sweep need no extra
             // validation here.
@@ -247,7 +385,7 @@ impl Request {
             }
             other => Err(anyhow!(
                 "unknown request type '{other}' \
-                 (expected predict|simulate_fine|build|sweep|batch|stats)"
+                 (expected predict|simulate_fine|simulate_workload|build|sweep|batch|stats)"
             )),
         }
     }
@@ -324,6 +462,20 @@ mod tests {
                 batch: Some(16),
                 ..PredictRequest::for_model("SK")
             })),
+            Request::SimulateWorkload(SimulateWorkloadRequest::poisson("SK", 100)),
+            Request::SimulateWorkload(SimulateWorkloadRequest {
+                arrival: ArrivalKind::Burst,
+                seed: 9,
+                queue_depth: 8,
+                policy: QueuePolicy::Block,
+                requests: 5_000,
+                ..SimulateWorkloadRequest::poisson("SK8", 250)
+            }),
+            Request::SimulateWorkload(SimulateWorkloadRequest {
+                qps: None,
+                trace: Some("examples/workloads/spike.json".to_string()),
+                ..SimulateWorkloadRequest::poisson("SK", 1)
+            }),
             Request::Build(BuildRequest(sample_cfg())),
             Request::Build(BuildRequest(with_json)),
             Request::Sweep(SweepRequest(asic)),
@@ -389,6 +541,15 @@ mod tests {
             r#"{"type":"simulate_fine","batch":0}"#,
             r#"{"type":"simulate_fine","batch":"8"}"#,
             r#"{"type":"simulate_fine","templte":"systolic"}"#,
+            r#"{"type":"simulate_workload","model":"SK"}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":0}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":100,"arrvial":"poisson"}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":100,"arrival":"steady"}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":100,"policy":"spill"}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":100,"queue_depth":0}"#,
+            r#"{"type":"simulate_workload","model":"SK","qps":100,"requests":0}"#,
+            r#"{"type":"simulate_workload","model":"SK","trace":"t.json","qps":5}"#,
+            r#"{"type":"simulate_workload","model":"SK","trace":7}"#,
             r#"{"type":"build","model":"SK","mvoes":"full"}"#,
             r#"{"type":"build","model":"SK","n2":"3","moves":3}"#,
             r#"{"type":"sweep","model":"SK","n_2":3}"#,

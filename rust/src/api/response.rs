@@ -13,6 +13,7 @@ use super::request::with_type;
 pub enum Response {
     Predict(PredictResponse),
     SimulateFine(SimulateFineResponse),
+    SimulateWorkload(WorkloadResponse),
     Build(BuildResponse),
     Sweep(SweepResponse),
     Batch(Vec<Response>),
@@ -63,6 +64,20 @@ pub struct SimulateFineResponse {
     pub steady_period_cycles: u64,
     /// Sustained throughput at this batch depth, in frames/s.
     pub steady_fps: f64,
+    /// Per-stage busy fraction over the simulated run, in graph node
+    /// order (`NodeSim::occupancy`).
+    pub occupancy: Vec<f64>,
+}
+
+/// Serving-simulation result: the full [`WorkloadReport`] for one design
+/// point under one workload.
+///
+/// [`WorkloadReport`]: crate::workload::WorkloadReport
+#[derive(Debug, Clone)]
+pub struct WorkloadResponse {
+    pub model: String,
+    pub template: String,
+    pub report: crate::workload::WorkloadReport,
 }
 
 /// Full Chip-Builder run result.
@@ -166,7 +181,17 @@ impl Response {
                 ("fill_cycles", s.fill_cycles.into()),
                 ("steady_period_cycles", s.steady_period_cycles.into()),
                 ("steady_fps", s.steady_fps.into()),
+                ("occupancy", Json::Arr(s.occupancy.iter().map(|&o| o.into()).collect())),
             ]),
+            Response::SimulateWorkload(w) => {
+                let mut j = w.report.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("type".to_string(), "simulate_workload".into());
+                    m.insert("model".to_string(), w.model.as_str().into());
+                    m.insert("template".to_string(), w.template.as_str().into());
+                }
+                j
+            }
             Response::Build(b) => with_type(&b.result_json, "build"),
             Response::Sweep(s) => obj(vec![
                 ("type", "sweep".into()),

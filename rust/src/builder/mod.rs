@@ -147,6 +147,33 @@ pub fn build_accelerator_with_moves(
     )
 }
 
+/// Final-ranking score of one refined design. Classic objectives rank by
+/// [`Spec::objective_score`] on the fine latency. The serving objective
+/// mirrors the stage-2 extension phase: an M/D/1-style tail proxy over the
+/// refined design's steady-state period — saturated designs land on a
+/// penalty shelf, designs that hold the p99 bound rank by energy (serve
+/// the SLO at minimum cost), and without a bound the tail itself ranks.
+fn survivor_score(spec: &Spec, r: &Stage2Report) -> f64 {
+    let Some(workload) = spec.workload() else {
+        return spec.objective_score(r.best.fine_latency_ms, r.best.coarse.energy_uj());
+    };
+    if r.steady_fps <= 0.0 {
+        return f64::INFINITY;
+    }
+    let period_ms = 1000.0 / r.steady_fps;
+    let rho = workload.qps as f64 * period_ms / 1000.0;
+    if rho >= 1.0 {
+        return 1.0e12 * rho;
+    }
+    let service_ms = r.best.fine_latency_ms / (r.batch.max(1) as f64);
+    let tail = service_ms + rho * period_ms / (2.0 * (1.0 - rho));
+    match spec.max_p99_ms {
+        Some(bound) if tail <= bound => r.best.coarse.energy_uj(),
+        Some(_) => 1.0e12 + tail,
+        None => tail,
+    }
+}
+
 /// The most general entry point: the full flow over an explicit pool,
 /// cache, stage-2 move registry *and* stage-1 [`DsePolicy`] — surrogate
 /// mode prunes the sweep to the planned slice, everything downstream
@@ -185,11 +212,8 @@ pub fn build_accelerator_with_policy(
     // then gate each through the feasibility re-check and the PnR model.
     let mut order: Vec<usize> = (0..stage2_reports.len()).collect();
     order.sort_by(|&a, &b| {
-        let score = |r: &Stage2Report| {
-            spec.objective_score(r.best.fine_latency_ms, r.best.coarse.energy_uj())
-        };
-        score(&stage2_reports[a])
-            .partial_cmp(&score(&stage2_reports[b]))
+        survivor_score(spec, &stage2_reports[a])
+            .partial_cmp(&survivor_score(spec, &stage2_reports[b]))
             .unwrap_or(std::cmp::Ordering::Equal)
     });
     let mut survivors = Vec::new();
@@ -245,6 +269,25 @@ mod tests {
         let out = build_accelerator(&m, &spec, 2, 1).unwrap();
         assert!(out.survivors.len() <= 1);
         assert_eq!(out.stage2_reports.len().min(2), out.stage2_reports.len());
+    }
+
+    #[test]
+    fn serve_slo_build_gates_on_rate_and_ranks_by_energy_under_slo() {
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective =
+            Objective::ServeSlo { workload: crate::workload::WorkloadSpec::poisson(10) };
+        spec.max_p99_ms = Some(1.0e6);
+        let out = build_accelerator(&m, &spec, 3, 2).unwrap();
+        assert!(!out.survivors.is_empty(), "skynet_tiny must serve 10 qps on Ultra96");
+        for s in &out.survivors {
+            assert!(spec.feasible(&s.coarse));
+            // The qps floor is part of feasibility for the serving objective.
+            assert!(s.coarse.steady_fps() >= 10.0);
+        }
+        for r in &out.stage2_reports {
+            assert!(!r.occupancy.is_empty(), "stage-2 report lost its occupancy vector");
+        }
     }
 
     #[test]

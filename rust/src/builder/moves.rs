@@ -15,7 +15,10 @@
 //!   byte-identical to the pre-refactor stage 2 (property-tested).
 //! * **Extension** moves — unroll rebalance between the hetero template's
 //!   DW/PW engines, precision down-scaling (16→12→8, gated by
-//!   [`Spec::min_precision_bits`]), and per-layer tiling overrides.
+//!   [`Spec::min_precision_bits`]), per-layer tiling overrides, and the
+//!   occupancy-fed [`BufferResize`] (grows saturated buffer sides,
+//!   shrinks idle ones, steered by the fine report through
+//!   [`Move::apply_observed`]).
 //!   [`MoveSet::full`] enables them in a second phase that starts from the
 //!   base fixed point and accepts only moves that improve the spec's
 //!   *objective*, so a full-set run can never end worse than a legacy run
@@ -26,7 +29,8 @@
 
 use crate::dnn::Model;
 use crate::graph::{Graph, NodeId};
-use crate::ip::Precision;
+use crate::ip::{IpClass, MemKind, Precision};
+use crate::predictor::FineReport;
 use crate::templates::HwConfig;
 
 use super::spec::Spec;
@@ -42,6 +46,14 @@ const TILE_CAP: u64 = 256;
 const SHARE_STEP: usize = 10;
 const SHARE_MIN: usize = 5;
 const SHARE_MAX: usize = 75;
+/// Occupancy thresholds for the observation-fed buffer resize: a side
+/// whose busiest on-chip buffer spends ≥ `BUF_GROW_AT` of the makespan
+/// busy is starving its consumers (grow it 4×); one under
+/// `BUF_SHRINK_AT` is over-provisioned (halve it, never below
+/// `BUF_FLOOR_BITS`).
+const BUF_GROW_AT: f64 = 0.80;
+const BUF_SHRINK_AT: f64 = 0.25;
+const BUF_FLOOR_BITS: u64 = 64 * 1024;
 
 /// A move's output: the candidate configuration plus the human-readable
 /// action recorded in the stage-2 step log.
@@ -69,6 +81,21 @@ pub trait Move: Send + Sync + std::fmt::Debug {
     /// Produce the candidate configuration, or `None` when the knob is
     /// already at its cap.
     fn apply(&self, cfg: &HwConfig) -> Option<AppliedMove>;
+
+    /// Like [`apply`](Move::apply), but with the current design's graph
+    /// and fine-simulation report in hand, so observation-fed moves (e.g.
+    /// [`BufferResize`] reading per-stage occupancy) can steer by measured
+    /// behaviour. The default delegates to `apply`, so existing moves are
+    /// byte-identical under either entry point; the stage-2 engine always
+    /// calls this one.
+    fn apply_observed(
+        &self,
+        _graph: &Graph,
+        _fine: &FineReport,
+        cfg: &HwConfig,
+    ) -> Option<AppliedMove> {
+        self.apply(cfg)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -349,6 +376,136 @@ impl Move for TileDeeper {
     }
 }
 
+/// Occupancy-fed buffer sizing: read the fine simulation's per-stage
+/// occupancy, classify on-chip buffer nodes into the activation and
+/// weight sides, and resize the config's buffer budgets toward the
+/// observed profile — a side whose busiest buffer runs ≥ [`BUF_GROW_AT`]
+/// occupancy grows 4× (it is saturating, and the base phase's 2× steps
+/// have already hit their fixed point), one under [`BUF_SHRINK_AT`]
+/// shrinks 2× (capacity nobody uses costs energy and fabric). Unlike the
+/// base buffer moves this one can *shrink*, which pays under objectives
+/// that price energy — including `ServeSlo`, which minimizes energy once
+/// the p99 bound is met.
+///
+/// The observation comes through [`Move::apply_observed`]; without a fine
+/// report there is no signal, so the plain [`Move::apply`] abstains.
+#[derive(Debug, Clone, Copy)]
+pub struct BufferResize;
+
+impl BufferResize {
+    /// Max occupancy over on-chip (non-DRAM) memory nodes, split into
+    /// (activation side, weight side) by the template naming convention:
+    /// weight buffers start with `w` (`wbuf`, `wbuf_dw`, `wsram`), the
+    /// rest (`ibuf`, `obuf`, `ubuf`, `accbuf`, `isram`, `gb_in`,
+    /// `gb_out`, …) hold activations. `None` when a side has no on-chip
+    /// buffer.
+    fn side_occupancy(graph: &Graph, fine: &FineReport) -> (Option<f64>, Option<f64>) {
+        let (mut act, mut weight) = (None::<f64>, None::<f64>);
+        for (i, n) in graph.nodes.iter().enumerate() {
+            let IpClass::Memory { kind, .. } = n.class else { continue };
+            if matches!(kind, MemKind::Dram) {
+                continue;
+            }
+            let Some(sim) = fine.per_node.get(i) else { continue };
+            let side = if n.name.starts_with('w') { &mut weight } else { &mut act };
+            *side = Some(side.map_or(sim.occupancy, |o: f64| o.max(sim.occupancy)));
+        }
+        (act, weight)
+    }
+}
+
+impl Move for BufferResize {
+    fn name(&self) -> &'static str {
+        "buffer_resize"
+    }
+    fn cost_hint(&self) -> u32 {
+        42
+    }
+    fn applicable(&self, g: &Graph, _bn: NodeId, cfg: &HwConfig) -> bool {
+        // Needs at least one on-chip buffer to observe and a knob with
+        // room to move; whether the occupancy actually asks for a resize
+        // is decided in `apply_observed`.
+        g.nodes.iter().any(|n| {
+            matches!(n.class, IpClass::Memory { kind, .. } if !matches!(kind, MemKind::Dram))
+        }) && (cfg.act_buf_bits < BUF_CAP_BITS
+            || cfg.w_buf_bits < BUF_CAP_BITS
+            || cfg.act_buf_bits > BUF_FLOOR_BITS
+            || cfg.w_buf_bits > BUF_FLOOR_BITS)
+    }
+    fn apply(&self, _cfg: &HwConfig) -> Option<AppliedMove> {
+        // Occupancy-fed only: without a fine report there is nothing to
+        // steer by.
+        None
+    }
+    fn apply_observed(
+        &self,
+        graph: &Graph,
+        fine: &FineReport,
+        cfg: &HwConfig,
+    ) -> Option<AppliedMove> {
+        let (act, weight) = BufferResize::side_occupancy(graph, fine);
+        // Grow the hotter saturated side first (4× — the base phase's 2×
+        // ladder already stalled), then shrink the colder idle side.
+        let mut grow: Vec<(f64, bool)> = Vec::new(); // (occ, is_act)
+        if let Some(o) = act {
+            if o >= BUF_GROW_AT && cfg.act_buf_bits < BUF_CAP_BITS {
+                grow.push((o, true));
+            }
+        }
+        if let Some(o) = weight {
+            if o >= BUF_GROW_AT && cfg.w_buf_bits < BUF_CAP_BITS {
+                grow.push((o, false));
+            }
+        }
+        grow.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        if let Some(&(occ, is_act)) = grow.first() {
+            let mut c = cfg.clone();
+            let (label, bits) = if is_act {
+                c.act_buf_bits = (cfg.act_buf_bits * 4).min(BUF_CAP_BITS);
+                ("act", c.act_buf_bits)
+            } else {
+                c.w_buf_bits = (cfg.w_buf_bits * 4).min(BUF_CAP_BITS);
+                ("weight", c.w_buf_bits)
+            };
+            return Some(AppliedMove {
+                action: format!(
+                    "buffer resize {label} -> {} Kib (occupancy {occ:.2})",
+                    bits / 1024
+                ),
+                cfg: c,
+            });
+        }
+        let mut shrink: Vec<(f64, bool)> = Vec::new();
+        if let Some(o) = act {
+            if o <= BUF_SHRINK_AT && cfg.act_buf_bits / 2 >= BUF_FLOOR_BITS {
+                shrink.push((o, true));
+            }
+        }
+        if let Some(o) = weight {
+            if o <= BUF_SHRINK_AT && cfg.w_buf_bits / 2 >= BUF_FLOOR_BITS {
+                shrink.push((o, false));
+            }
+        }
+        shrink.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let &(occ, is_act) = shrink.first()?;
+        let mut c = cfg.clone();
+        let (label, bits) = if is_act {
+            c.act_buf_bits = cfg.act_buf_bits / 2;
+            ("act", c.act_buf_bits)
+        } else {
+            c.w_buf_bits = cfg.w_buf_bits / 2;
+            ("weight", c.w_buf_bits)
+        };
+        Some(AppliedMove {
+            action: format!(
+                "buffer resize {label} -> {} Kib (occupancy {occ:.2})",
+                bits / 1024
+            ),
+            cfg: c,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------------
@@ -364,6 +521,7 @@ pub fn is_extension_action(action: &str) -> bool {
     action.starts_with("precision")
         || action.starts_with("dw share")
         || action.starts_with("tiles[")
+        || action.starts_with("buffer resize")
 }
 
 /// The ordered registry of moves the stage-2 loop iterates. Base moves run
@@ -414,6 +572,7 @@ impl MoveSet {
         for (li, _) in ranked.into_iter().take(2) {
             extension.push(Box::new(TileDeeper { layer: li }));
         }
+        extension.push(Box::new(BufferResize));
         extension.push(Box::new(UnrollRebalance { toward_dw: false }));
         extension.push(Box::new(UnrollRebalance { toward_dw: true }));
         extension.push(Box::new(PrecisionDown { min_bits: spec.min_precision_bits }));
@@ -622,6 +781,59 @@ mod tests {
         assert!(is_extension_action(&reb.action), "{}", reb.action);
         let tile = TileDeeper { layer: 1 }.apply(&cfg).unwrap();
         assert!(is_extension_action(&tile.action), "{}", tile.action);
+        // The base buffer actions ("act buffer …"/"weight buffer …") must
+        // not collide with the extension "buffer resize …" prefix.
+        assert!(is_extension_action("buffer resize act -> 8192 Kib (occupancy 0.91)"));
+    }
+
+    #[test]
+    fn buffer_resize_grows_hot_side_shrinks_cold_side_and_abstains_unobserved() {
+        let (g, _bn) = hetero_graph_and_bottleneck();
+        let cfg = HwConfig::ultra96_default();
+        let fine = crate::predictor::simulate(&g, 0.0, false).unwrap();
+        let mv = BufferResize;
+        assert!(mv.applicable(&g, 0, &cfg));
+        assert!(mv.apply(&cfg).is_none(), "no observation, no proposal");
+
+        let paint = |occ_w: f64, occ_act: f64| {
+            let mut f = fine.clone();
+            for (i, n) in g.nodes.iter().enumerate() {
+                if matches!(
+                    n.class,
+                    IpClass::Memory { kind, .. } if !matches!(kind, MemKind::Dram)
+                ) {
+                    f.per_node[i].occupancy =
+                        if n.name.starts_with('w') { occ_w } else { occ_act };
+                }
+            }
+            f
+        };
+
+        // Hot activation side: grow it 4x, leave the weight side alone.
+        let a = mv.apply_observed(&g, &paint(0.5, 0.95), &cfg).unwrap();
+        assert!(a.action.starts_with("buffer resize act"), "{}", a.action);
+        assert!(is_extension_action(&a.action));
+        assert_eq!(a.cfg.act_buf_bits, cfg.act_buf_bits * 4);
+        assert_eq!(a.cfg.w_buf_bits, cfg.w_buf_bits);
+
+        // Everything cold: shrink the coldest (weight) side by half.
+        let s = mv.apply_observed(&g, &paint(0.05, 0.15), &cfg).unwrap();
+        assert!(s.action.starts_with("buffer resize weight"), "{}", s.action);
+        assert_eq!(s.cfg.w_buf_bits, cfg.w_buf_bits / 2);
+        assert_eq!(s.cfg.act_buf_bits, cfg.act_buf_bits);
+
+        // Mid-band occupancy asks for nothing.
+        assert!(mv.apply_observed(&g, &paint(0.5, 0.5), &cfg).is_none());
+
+        // Growth respects the cap, shrink respects the floor.
+        let mut capped = cfg.clone();
+        capped.act_buf_bits = BUF_CAP_BITS;
+        capped.w_buf_bits = BUF_CAP_BITS;
+        assert!(mv.apply_observed(&g, &paint(0.95, 0.95), &capped).is_none());
+        let mut floored = cfg.clone();
+        floored.act_buf_bits = BUF_FLOOR_BITS;
+        floored.w_buf_bits = BUF_FLOOR_BITS;
+        assert!(mv.apply_observed(&g, &paint(0.05, 0.05), &floored).is_none());
     }
 
     #[test]
@@ -637,6 +849,7 @@ mod tests {
         let names = set.names();
         assert!(names.contains(&"deeper_pipeline"));
         assert!(names.contains(&"tile_deeper"));
+        assert!(names.contains(&"buffer_resize"));
         assert!(names.contains(&"unroll_rebalance_to_pw"));
         assert!(names.contains(&"precision_down"));
         // Base-only iteration hides the extension tier.

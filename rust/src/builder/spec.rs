@@ -2,10 +2,13 @@
 //! (paper Table 1's design factors: IP template, precision, unrolling,
 //! buffer volumes, bus width, inter-IP pipeline depth).
 
+use anyhow::{bail, Result};
+
 use crate::ip::tech;
 use crate::ip::{Precision, Technology};
 use crate::predictor::{CoarseReport, Resources};
 use crate::templates::{HwConfig, PeStyle, TemplateId};
+use crate::workload::{WorkloadSpec, SERVE_PROBE_BATCH};
 
 /// Implementation back-end and its resource budget.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,6 +56,14 @@ pub enum Objective {
     /// designs whose *fill* latency loses to a monolithic design can still
     /// win here, which is the point.
     Throughput { batch: usize },
+    /// Serving SLO: designs are ranked by p99 latency under the given
+    /// arrival workload (stage 1 by a closed-form M/D/1-style waiting
+    /// proxy on the coarse steady period, stage 2 by running the
+    /// discrete-event `workload::simulate_workload` on each candidate's
+    /// fine report). The workload's `qps` also acts as a throughput
+    /// floor in [`Spec::feasible`] — a design that cannot sustain the
+    /// offered rate has an unbounded queue, not a tail.
+    ServeSlo { workload: WorkloadSpec },
 }
 
 /// One Chip-Builder target: back-end budget, application constraints and
@@ -65,6 +76,12 @@ pub struct Spec {
     /// Power budget in mW.
     pub max_power_mw: f64,
     pub objective: Objective,
+    /// Optional tail-latency SLO in ms: when set, a design whose latency
+    /// floor already exceeds the bound is infeasible (p99 under any
+    /// arrival process is at least the single-inference latency), and
+    /// under [`Objective::ServeSlo`] the simulated p99 is checked against
+    /// it in stage 2.
+    pub max_p99_ms: Option<f64>,
     /// Accuracy floor for the stage-2 precision-down-scaling move: neither
     /// operand of the hardware precision may be scaled below this many
     /// bits. 8 permits the full 16→12→8 ladder; 9+ pins the precision the
@@ -81,6 +98,7 @@ impl Spec {
             min_fps: 20.0,
             max_power_mw: 10_000.0,
             objective: Objective::Latency,
+            max_p99_ms: None,
             min_precision_bits: 8,
         }
     }
@@ -94,6 +112,7 @@ impl Spec {
             min_fps: 15.0,
             max_power_mw: 600.0,
             objective: Objective::Edp,
+            max_p99_ms: None,
             min_precision_bits: 8,
         }
     }
@@ -103,8 +122,34 @@ impl Spec {
     pub fn batch(&self) -> usize {
         match self.objective {
             Objective::Throughput { batch } => batch.max(1),
+            // Serving cares about the steady-state rate, so probe the
+            // pipeline deep enough for overlap to show.
+            Objective::ServeSlo { .. } => SERVE_PROBE_BATCH,
             _ => 1,
         }
+    }
+
+    /// The workload a [`Objective::ServeSlo`] spec serves, if any.
+    pub fn workload(&self) -> Option<WorkloadSpec> {
+        match self.objective {
+            Objective::ServeSlo { workload } => Some(workload),
+            _ => None,
+        }
+    }
+
+    /// Structural validity of the spec itself, checked before any sweep:
+    /// a malformed SLO or workload should fail fast with a clear message
+    /// instead of sweeping the whole grid to zero candidates.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(bound) = self.max_p99_ms {
+            if !bound.is_finite() || bound <= 0.0 {
+                bail!("max_p99_ms must be a positive finite ms value, got {bound}");
+            }
+        }
+        if let Objective::ServeSlo { workload } = &self.objective {
+            workload.validate()?;
+        }
+        Ok(())
     }
 
     /// Stage-1 feasibility filter: the coarse prediction must fit the
@@ -115,9 +160,21 @@ impl Spec {
     pub fn feasible(&self, c: &CoarseReport) -> bool {
         let fps_ok = match self.objective {
             Objective::Throughput { .. } => c.steady_fps() >= self.min_fps,
+            // Serving adds the offered rate as a throughput floor: below
+            // it the queue is unbounded and no p99 exists.
+            Objective::ServeSlo { workload } => {
+                c.steady_fps() >= self.min_fps.max(workload.qps as f64)
+            }
             _ => c.fps() >= self.min_fps,
         };
-        self.backend.fits(&c.resources) && fps_ok && c.avg_power_mw() <= self.max_power_mw
+        // p99 under any arrival process is bounded below by the
+        // single-inference latency, so an SLO under that floor is
+        // structurally unsatisfiable for this design.
+        let p99_ok = self.max_p99_ms.map_or(true, |bound| c.latency_ms <= bound);
+        self.backend.fits(&c.resources)
+            && fps_ok
+            && p99_ok
+            && c.avg_power_mw() <= self.max_power_mw
     }
 
     /// Scalar score of a design under this spec's objective — lower is
@@ -130,6 +187,10 @@ impl Spec {
             Objective::Energy => energy_uj,
             Objective::Edp => energy_uj * latency_ms,
             Objective::Throughput { .. } => latency_ms,
+            // The p99 ordering is applied where the workload simulation
+            // runs (stage-1 queueing proxy, stage-2 phase score); at this
+            // scalar layer the batched makespan keeps scores comparable.
+            Objective::ServeSlo { .. } => latency_ms,
         }
     }
 }
@@ -300,6 +361,7 @@ mod tests {
             min_fps: 20.0,
             max_power_mw: 10_000.0,
             objective: Objective::Latency,
+            max_p99_ms: None,
             min_precision_bits: 8,
         };
         assert!(!tight.feasible(&c));
@@ -332,6 +394,49 @@ mod tests {
         assert!(batched.feasible(&c), "batch objective must read steady-state fps");
         assert_eq!(batched.batch(), 8);
         assert_eq!(single.batch(), 1);
+    }
+
+    #[test]
+    fn serve_slo_reads_qps_floor_and_p99_bound() {
+        use crate::workload::WorkloadSpec;
+        let m = zoo::by_name("SK8").unwrap();
+        let cfg = HwConfig::ultra96_default();
+        let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+        let c = predict_coarse(&g, &cfg.tech).unwrap();
+
+        // A sustainable qps passes; one above the steady rate fails even
+        // though min_fps alone would accept the design.
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective = Objective::ServeSlo { workload: WorkloadSpec::poisson(1) };
+        assert!(spec.feasible(&c));
+        assert_eq!(spec.batch(), crate::workload::SERVE_PROBE_BATCH);
+        assert_eq!(spec.workload().unwrap().qps, 1);
+        let over = (c.steady_fps() * 2.0) as u64;
+        spec.objective = Objective::ServeSlo { workload: WorkloadSpec::poisson(over) };
+        assert!(!spec.feasible(&c), "qps above steady rate must be infeasible");
+
+        // A p99 bound below the single-inference latency floor rules the
+        // design out regardless of objective.
+        let mut slo = Spec::ultra96_object_detection();
+        slo.max_p99_ms = Some(c.latency_ms / 2.0);
+        assert!(!slo.feasible(&c));
+        slo.max_p99_ms = Some(c.latency_ms * 2.0);
+        assert!(slo.feasible(&c));
+    }
+
+    #[test]
+    fn spec_validate_rejects_malformed_slos() {
+        use crate::workload::WorkloadSpec;
+        let mut spec = Spec::ultra96_object_detection();
+        assert!(spec.validate().is_ok());
+        spec.max_p99_ms = Some(0.0);
+        assert!(spec.validate().is_err());
+        spec.max_p99_ms = Some(f64::NAN);
+        assert!(spec.validate().is_err());
+        spec.max_p99_ms = Some(5.0);
+        assert!(spec.validate().is_ok());
+        spec.objective = Objective::ServeSlo { workload: WorkloadSpec::poisson(0) };
+        assert!(spec.validate().is_err(), "zero qps is a spec error");
     }
 
     #[test]

@@ -21,7 +21,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Pool;
 use crate::dnn::Model;
@@ -98,6 +98,26 @@ fn stage1_score(spec: &Spec, c: &CoarseReport) -> f64 {
                 1000.0 / fps
             }
         }
+        // Closed-form M/D/1-style p99 proxy: deterministic service at the
+        // coarse steady period T under offered rate λ gives utilization
+        // ρ = λT and expected waiting Wq = ρT / 2(1-ρ); rank candidates
+        // by latency + waiting. Saturated designs (ρ ≥ 1) sort after
+        // every stable one, ordered by how oversubscribed they are.
+        // Stage 2's discrete-event workload simulation settles the order
+        // exactly.
+        Objective::ServeSlo { workload } => {
+            let fps = c.steady_fps();
+            if fps <= 0.0 {
+                return f64::INFINITY;
+            }
+            let period_ms = 1000.0 / fps;
+            let rho = workload.qps as f64 * period_ms / 1000.0;
+            if rho >= 1.0 {
+                1.0e12 * rho
+            } else {
+                c.latency_ms + rho * period_ms / (2.0 * (1.0 - rho))
+            }
+        }
         _ => spec.objective_score(c.latency_ms, c.energy_uj()),
     }
 }
@@ -142,8 +162,11 @@ pub fn stage1_with_policy(
     policy: &DsePolicy,
 ) -> Result<Stage1Output> {
     // Validate the model once up front so per-point failures can only mean
-    // "this configuration cannot realize the model", not "bad model".
+    // "this configuration cannot realize the model", not "bad model" —
+    // and the spec likewise, so a malformed SLO fails here instead of
+    // sweeping the grid to zero candidates.
     model.stats()?;
+    spec.validate()?;
     let _sweep_span = crate::obs::span("stage1.sweep");
 
     let mut points = grid.points();
@@ -231,6 +254,26 @@ pub fn stage1_with_policy(
         .context("stage-1 sweep failed")?;
 
     let feasible = evals.iter().filter(|e| e.feasible).count();
+    // A p99 SLO below the latency floor of *every* swept design is
+    // structurally unsatisfiable: say so, naming the two numbers, rather
+    // than returning an empty candidate list the caller can't diagnose.
+    if feasible == 0 {
+        if let Some(bound) = spec.max_p99_ms {
+            let floor = evals
+                .iter()
+                .map(|e| e.latency_ms)
+                .filter(|l| l.is_finite())
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() && floor > bound {
+                bail!(
+                    "SLO unsatisfiable: max_p99_ms = {bound} ms, but the lowest \
+                     single-inference latency across {evaluated} swept designs is \
+                     {floor:.4} ms — p99 can never beat the latency floor; raise \
+                     max_p99_ms or widen the grid"
+                );
+            }
+        }
+    }
     let pruned = scored.saturating_sub(evaluated);
     let (cache_hits, cache_misses) =
         (hits.load(Ordering::Relaxed), misses.load(Ordering::Relaxed));
@@ -352,6 +395,7 @@ mod tests {
             min_fps: 1.0e9,
             max_power_mw: 0.001,
             objective: Objective::Latency,
+            max_p99_ms: None,
             min_precision_bits: 8,
         };
         let grid = SweepGrid::for_backend(&spec.backend);
@@ -359,6 +403,47 @@ mod tests {
         assert_eq!(s1.feasible, 0);
         assert!(s1.selected.is_empty());
         assert!(s1.evaluated > 0);
+    }
+
+    #[test]
+    fn unsatisfiable_p99_slo_fails_fast_with_floor_in_message() {
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        // Three orders of magnitude below any real design's latency.
+        spec.max_p99_ms = Some(1.0e-6);
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let err = stage1(&m, &spec, &grid, 4).unwrap_err().to_string();
+        assert!(err.contains("SLO unsatisfiable"), "unexpected error: {err}");
+        assert!(err.contains("latency floor"), "message must name the floor: {err}");
+        // A satisfiable bound on the same grid still sweeps normally.
+        spec.max_p99_ms = Some(1.0e6);
+        assert!(stage1(&m, &spec, &grid, 4).is_ok());
+    }
+
+    #[test]
+    fn serve_slo_ranks_stable_designs_before_saturated_ones() {
+        use crate::workload::WorkloadSpec;
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective = Objective::ServeSlo { workload: WorkloadSpec::poisson(5) };
+        let grid = SweepGrid::for_backend(&spec.backend);
+        let s1 = stage1(&m, &spec, &grid, 5).unwrap();
+        assert!(!s1.selected.is_empty(), "Ultra96 must serve 5 qps on skynet_tiny");
+        // Scores are finite and sorted for the selected set.
+        for w in s1.selected.windows(2) {
+            let a = stage1_score(&spec, &w[0].coarse);
+            let b = stage1_score(&spec, &w[1].coarse);
+            assert!(a.is_finite() && b.is_finite());
+            assert!(a <= b, "selection not sorted by the queueing proxy: {a} > {b}");
+        }
+        // The proxy adds a positive waiting term to latency for stable
+        // designs and explodes for saturated ones.
+        let best = &s1.selected[0].coarse;
+        assert!(stage1_score(&spec, best) >= best.latency_ms);
+        let mut saturated = spec.clone();
+        saturated.objective =
+            Objective::ServeSlo { workload: WorkloadSpec::poisson(u64::MAX / 1024) };
+        assert!(stage1_score(&saturated, best) >= 1.0e12);
     }
 
     #[test]

@@ -92,6 +92,10 @@ pub struct Stage2Report {
     /// Sustained steady-state throughput of the final design (equals
     /// `1000 / fine_latency_ms` when `batch == 1`).
     pub steady_fps: f64,
+    /// Per-stage busy fraction of the final design's fine simulation, in
+    /// graph node order (the signal the occupancy-fed `buffer_resize`
+    /// move acts on; surfaced in `result.json` steady-state entries).
+    pub occupancy: Vec<f64>,
 }
 
 /// A fully evaluated design point: graph plus both predictor modes.
@@ -175,7 +179,32 @@ enum Accept {
 fn phase_score(accept: Accept, spec: &Spec, e: &EvalPoint) -> f64 {
     match accept {
         Accept::Latency => e.fine.latency_ms,
-        Accept::Objective => spec.objective_score(e.fine.latency_ms, e.coarse.energy_uj()),
+        Accept::Objective => match spec.workload() {
+            // Serving objective: replay the spec's workload against this
+            // design's steady-state model (deterministic — the workload
+            // carries its own seed) and score "meet the p99 SLO at minimum
+            // energy". A dropped request is worse than any latency, so the
+            // tail folds the drop rate in at a scale that dominates p99.
+            // While the SLO is violated the score is the tail itself (on a
+            // penalty shelf), so moves that shrink p99 are accepted; once
+            // the SLO holds the score switches to energy, so buffer-shrink
+            // moves that keep the tail under the bound are accepted too.
+            Some(workload) => {
+                let wl = workload.workload(crate::workload::DSE_REQUESTS);
+                match crate::workload::simulate_workload(&e.fine, &wl) {
+                    Ok(rep) => {
+                        let tail = rep.p99_ms + rep.drop_rate * 1.0e6;
+                        match spec.max_p99_ms {
+                            Some(bound) if tail <= bound => e.coarse.energy_uj(),
+                            Some(_) => 1.0e12 + tail,
+                            None => tail,
+                        }
+                    }
+                    Err(_) => f64::INFINITY,
+                }
+            }
+            None => spec.objective_score(e.fine.latency_ms, e.coarse.energy_uj()),
+        },
     }
 }
 
@@ -236,7 +265,9 @@ fn run_phase(
             if !mv.applicable(&best.graph, bn_now, best_cfg) {
                 continue;
             }
-            let Some(applied) = mv.apply(best_cfg) else { continue };
+            let Some(applied) = mv.apply_observed(&best.graph, &best.fine, best_cfg) else {
+                continue;
+            };
             if observing {
                 crate::obs::metrics::counter(&format!("stage2.move.{}.proposed", mv.name()), 1);
                 proposed.push(mv.name());
@@ -383,6 +414,7 @@ pub fn stage2_with_moves(
     let fill_cycles = best.fine.fill_cycles;
     let steady_period_cycles = best.fine.steady_period_cycles;
     let steady_fps = best.fine.steady_fps();
+    let occupancy: Vec<f64> = best.fine.per_node.iter().map(|n| n.occupancy).collect();
     let feasible = spec.feasible(&best.coarse);
     let best = Candidate {
         template,
@@ -409,6 +441,7 @@ pub fn stage2_with_moves(
         fill_cycles,
         steady_period_cycles,
         steady_fps,
+        occupancy,
     })
 }
 
@@ -503,6 +536,7 @@ mod tests {
             min_fps: 0.0,
             max_power_mw: 1.0e12,
             objective: Objective::Latency,
+            max_p99_ms: None,
             min_precision_bits: 8,
         };
         let mut cfg = HwConfig::ultra96_default();
@@ -559,6 +593,47 @@ mod tests {
         let legacy = stage2(&m, &Spec::ultra96_object_detection(), unpipelined_candidate(&m)).unwrap();
         assert_eq!(legacy.batch, 1);
         assert_eq!(legacy.fill_cycles, legacy.steady_period_cycles);
+    }
+
+    #[test]
+    fn report_surfaces_per_stage_occupancy() {
+        let m = zoo::skynet_tiny();
+        let spec = Spec::ultra96_object_detection();
+        let rep = stage2(&m, &spec, unpipelined_candidate(&m)).unwrap();
+        let g = TemplateId::Hetero.build(&m, &rep.best.cfg).unwrap();
+        assert_eq!(rep.occupancy.len(), g.nodes.len());
+        assert!(rep.occupancy.iter().all(|o| (0.0..=1.0).contains(o)), "{:?}", rep.occupancy);
+        assert!(rep.occupancy.iter().any(|&o| o > 0.0), "all stages idle");
+    }
+
+    #[test]
+    fn serve_slo_objective_runs_workload_scored_extension_phase() {
+        // A loose p99 bound that the initial design already meets: the
+        // extension phase scores candidates by energy-under-SLO, so the
+        // refined design must still hold the bound and sustain the offered
+        // rate, and the probe batch is the serving one.
+        let m = zoo::skynet_tiny();
+        let mut spec = Spec::ultra96_object_detection();
+        spec.objective =
+            Objective::ServeSlo { workload: crate::workload::WorkloadSpec::poisson(5) };
+        spec.max_p99_ms = Some(1.0e9);
+        let cand = unpipelined_candidate(&m);
+        let rep =
+            stage2_with_moves(&m, &spec, cand, &MoveSet::full(&m, &spec)).unwrap();
+        assert_eq!(rep.batch, crate::workload::SERVE_PROBE_BATCH as u64);
+        assert!(rep.steady_fps > 5.0, "refined design cannot sustain 5 qps");
+        let wl = spec.workload().unwrap().workload(crate::workload::DSE_REQUESTS);
+        let g = TemplateId::Hetero.build(&m, &rep.best.cfg).unwrap();
+        let fine = simulate_batched_prevalidated(
+            &g,
+            crate::workload::SERVE_PROBE_BATCH,
+            rep.best.cfg.tech.costs.leakage_mw,
+            false,
+        )
+        .unwrap();
+        let wrep = crate::workload::simulate_workload(&fine, &wl).unwrap();
+        assert!(wrep.p99_ms <= 1.0e9);
+        assert_eq!(wrep.dropped, 0);
     }
 
     #[test]

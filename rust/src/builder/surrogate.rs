@@ -548,6 +548,9 @@ pub fn training_dump(
                 Objective::Energy => "energy".into(),
                 Objective::Edp => "edp".into(),
                 Objective::Throughput { batch } => Json::Str(format!("throughput@{batch}")),
+                Objective::ServeSlo { workload } => {
+                    Json::Str(format!("serve_slo@{}qps", workload.qps))
+                }
             },
         ),
         ("grid_points", points.len().into()),

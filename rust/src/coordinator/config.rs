@@ -12,6 +12,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::builder::{Backend, Objective, Spec};
 use crate::dnn::{parser, zoo, Model};
 use crate::util::json::{obj, Json};
+use crate::workload::{ArrivalKind, QueuePolicy, WorkloadSpec, DEFAULT_QUEUE_DEPTH};
 
 /// Which stage-2 move set a run co-optimizes with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -85,9 +86,13 @@ pub struct RunConfig {
 /// object can carry the `api` request tag).
 const CONFIG_KEYS: &[&str] = &[
     "type", "model", "model_json", "backend", "dsp", "bram18k", "lut", "ff", "sram_kb", "macs",
-    "objective", "batch", "min_fps", "max_power_mw", "min_precision_bits", "n2", "n_opt", "moves",
-    "dse", "grid", "out_dir", "rtl_out", "cache_dir",
+    "objective", "batch", "workload", "max_p99_ms", "min_fps", "max_power_mw",
+    "min_precision_bits", "n2", "n_opt", "moves", "dse", "grid", "out_dir", "rtl_out", "cache_dir",
 ];
+
+/// Keys the `"workload"` sub-object accepts (same strictness as the top
+/// level: unknown keys and wrong-typed values are errors).
+const WORKLOAD_KEYS: &[&str] = &["arrival", "qps", "seed", "queue_depth", "policy"];
 
 /// A string key with present-but-wrong-typed as an error, never a silent
 /// default.
@@ -115,6 +120,55 @@ fn want_f64(j: &Json, key: &str) -> Result<Option<f64>> {
         None => Ok(None),
         Some(v) => v.as_f64().map(Some).ok_or_else(|| anyhow!("config: '{key}' must be a number")),
     }
+}
+
+fn want_u64(j: &Json, key: &str) -> Result<Option<u64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("config: '{key}' must be a non-negative integer")),
+    }
+}
+
+/// Parse the strict `"workload"` sub-object of a serve_slo run. `"qps"`
+/// is required; arrival kind, seed, queue depth and overflow policy
+/// default to a Poisson open loop with a 64-deep dropping queue.
+fn parse_workload(j: &Json) -> Result<WorkloadSpec> {
+    let o = j.as_obj().ok_or_else(|| anyhow!("config: 'workload' must be an object"))?;
+    for key in o.keys() {
+        if !WORKLOAD_KEYS.contains(&key.as_str()) {
+            return Err(anyhow!(
+                "config: unknown workload key '{key}' (allowed: {})",
+                WORKLOAD_KEYS.join(", ")
+            ));
+        }
+    }
+    let qps = want_u64(j, "qps")?.ok_or_else(|| anyhow!("config: 'workload' requires 'qps'"))?;
+    let arrival = ArrivalKind::parse(want_str(j, "arrival")?.unwrap_or("poisson"))?;
+    let policy = QueuePolicy::parse(want_str(j, "policy")?.unwrap_or("drop"))?;
+    let spec = WorkloadSpec {
+        arrival,
+        qps,
+        seed: want_u64(j, "seed")?.unwrap_or(0),
+        queue_depth: want_usize(j, "queue_depth")?.unwrap_or(DEFAULT_QUEUE_DEPTH),
+        policy,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Serialize a [`WorkloadSpec`] to the exact shape [`parse_workload`]
+/// accepts.
+fn workload_to_json(w: &WorkloadSpec) -> Json {
+    obj(vec![
+        ("arrival", w.arrival.as_str().into()),
+        ("qps", w.qps.into()),
+        ("seed", w.seed.into()),
+        ("queue_depth", w.queue_depth.into()),
+        ("policy", w.policy.as_str().into()),
+    ])
 }
 
 impl RunConfig {
@@ -162,6 +216,10 @@ impl RunConfig {
             other => return Err(anyhow!("config: unknown backend '{other}'")),
         };
         let batch = want_usize(j, "batch")?;
+        let workload = match j.get("workload") {
+            None => None,
+            Some(w) => Some(parse_workload(w)?),
+        };
         let objective = match want_str(j, "objective")?.unwrap_or("latency") {
             "latency" => Objective::Latency,
             "energy" => Objective::Energy,
@@ -174,18 +232,29 @@ impl RunConfig {
                 }
                 Objective::Throughput { batch: b }
             }
+            "serve_slo" => {
+                let w = workload.ok_or_else(|| {
+                    anyhow!("config: objective 'serve_slo' requires a 'workload' object")
+                })?;
+                Objective::ServeSlo { workload: w }
+            }
             other => return Err(anyhow!("config: unknown objective '{other}'")),
         };
         if batch.is_some() && !matches!(objective, Objective::Throughput { .. }) {
             return Err(anyhow!("config: 'batch' requires \"objective\": \"throughput\""));
+        }
+        if workload.is_some() && !matches!(objective, Objective::ServeSlo { .. }) {
+            return Err(anyhow!("config: 'workload' requires \"objective\": \"serve_slo\""));
         }
         let spec = Spec {
             backend,
             min_fps: want_f64(j, "min_fps")?.unwrap_or(20.0),
             max_power_mw: want_f64(j, "max_power_mw")?.unwrap_or(10_000.0),
             objective,
+            max_p99_ms: want_f64(j, "max_p99_ms")?,
             min_precision_bits: want_usize(j, "min_precision_bits")?.unwrap_or(8),
         };
+        spec.validate()?;
         let moves = match want_str(j, "moves")?.unwrap_or("full") {
             "legacy" => MoveSetChoice::Legacy,
             "full" => MoveSetChoice::Full,
@@ -253,6 +322,13 @@ impl RunConfig {
                 pairs.push(("objective", "throughput".into()));
                 pairs.push(("batch", batch.into()));
             }
+            Objective::ServeSlo { workload } => {
+                pairs.push(("objective", "serve_slo".into()));
+                pairs.push(("workload", workload_to_json(&workload)));
+            }
+        }
+        if let Some(bound) = self.spec.max_p99_ms {
+            pairs.push(("max_p99_ms", bound.into()));
         }
         pairs.push(("min_fps", self.spec.min_fps.into()));
         pairs.push(("max_power_mw", self.spec.max_power_mw.into()));
@@ -389,6 +465,52 @@ mod tests {
     }
 
     #[test]
+    fn parses_serve_slo_objective_with_strict_workload_pairing() {
+        let j = Json::parse(
+            r#"{"model":"SK","objective":"serve_slo","max_p99_ms":4.5,
+                "workload":{"arrival":"burst","qps":120,"seed":7,
+                            "queue_depth":16,"policy":"block"}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        let w = c.spec.workload().expect("serve_slo carries a workload");
+        assert_eq!(w.arrival, ArrivalKind::Burst);
+        assert_eq!(w.qps, 120);
+        assert_eq!(w.seed, 7);
+        assert_eq!(w.queue_depth, 16);
+        assert_eq!(w.policy, QueuePolicy::Block);
+        assert_eq!(c.spec.max_p99_ms, Some(4.5));
+        // Defaults: poisson arrivals, seed 0, 64-deep dropping queue.
+        let j = Json::parse(r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30}}"#)
+            .unwrap();
+        let w = RunConfig::from_json(&j).unwrap().spec.workload().unwrap();
+        assert_eq!(w.arrival, ArrivalKind::Poisson);
+        assert_eq!(w.seed, 0);
+        assert_eq!(w.queue_depth, DEFAULT_QUEUE_DEPTH);
+        assert_eq!(w.policy, QueuePolicy::Drop);
+        // Strict both ways, strict sub-keys, strict values.
+        for bad in [
+            r#"{"model":"SK","objective":"serve_slo"}"#,
+            r#"{"model":"SK","workload":{"qps":30}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":0}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30,"arival":"poisson"}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30,"arrival":"steady"}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30,"policy":"spill"}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30,"queue_depth":0}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":"30"}}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":[30]}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30},"max_p99_ms":0}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30},"max_p99_ms":"x"}"#,
+        ] {
+            assert!(
+                RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "must reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
     fn rejects_unknown_backend() {
         let j = Json::parse(r#"{"model":"SK","backend":"quantum"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
@@ -427,6 +549,11 @@ mod tests {
             r#"{"model":"SK","dse":"surrogate","grid":"dense"}"#,
             r#"{"model":"SK","dse":"exhaustive"}"#,
             r#"{"model":"SK","objective":"throughput","batch":16}"#,
+            r#"{"model":"SK","objective":"serve_slo","workload":{"qps":30}}"#,
+            r#"{"model":"SK","objective":"serve_slo","max_p99_ms":4.5,
+                "workload":{"arrival":"uniform","qps":120,"seed":7,
+                            "queue_depth":16,"policy":"block"}}"#,
+            r#"{"model":"SK","max_p99_ms":9.25}"#,
         ] {
             let c = RunConfig::from_json(&Json::parse(text).unwrap()).unwrap();
             let back = RunConfig::from_json(&c.to_json()).unwrap();

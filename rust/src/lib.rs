@@ -25,8 +25,10 @@
 //! (single or batched), and backs the `autodnnchip serve` JSONL mode.
 //!
 //! Supporting substrates: the DNN intermediate representation and model zoo
-//! ([`dnn`]), the IP cost-model library ([`ip`]), the zero-dependency
-//! observability layer ([`obs`]: spans, metrics, Chrome-trace export
+//! ([`dnn`]), the IP cost-model library ([`ip`]), the workload-driven
+//! serving simulator ([`workload`]: arrival processes, bounded admission
+//! queues and tail-latency statistics over the fine sim's steady-state
+//! model), the zero-dependency observability layer ([`obs`]: spans, metrics, Chrome-trace export
 //! across the whole pipeline), virtual measured devices
 //! ([`devices`]), a functional accelerator simulator ([`funcsim`]), the
 //! PJRT runtime for golden-reference execution of AOT-compiled JAX models
@@ -48,5 +50,6 @@ pub mod rtlgen;
 pub mod runtime;
 pub mod templates;
 pub mod util;
+pub mod workload;
 
 pub mod testkit;

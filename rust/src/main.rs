@@ -4,16 +4,21 @@
 //! autodnnchip list-models
 //! autodnnchip predict  --model SK --template hetero_dw_pw --tech ultra96
 //!                      [--batch N]
+//!                      [--qps N | --workload FILE] [--arrival uniform|poisson|burst]
+//!                      [--seed N] [--queue-depth N] [--policy drop|block]
+//!                      [--requests N]
 //! autodnnchip build    --model SK [--backend fpga|asic] [--rtl-out DIR]
 //!                      [--moves legacy|full] [--cache-dir DIR]
 //!                      [--dse exhaustive|surrogate] [--grid standard|dense]
 //!                      [--batch N]
+//!                      [--qps N | --workload FILE] [--max-p99-ms MS]
 //! autodnnchip build    --model-json examples/models/tinyconv.json
 //! autodnnchip build    --config cfg.json
 //! autodnnchip sweep    --model SK [--backend fpga|asic] [--n2 N]
 //!                      [--cache-dir DIR] [--out DIR] [--workers N]
 //!                      [--dse exhaustive|surrogate] [--grid standard|dense]
 //!                      [--dump-training FILE]
+//!                      [--qps N | --workload FILE] [--max-p99-ms MS]
 //! autodnnchip serve    --requests file.jsonl [--out DIR] [--workers N]
 //!                      [--verbose] [--cache-dir DIR]
 //! autodnnchip exp      <fig7|fig8|fig9|fig10|table6|table7|table8|
@@ -38,6 +43,15 @@
 //! becomes the batched makespan) and `build`/`sweep` optimize the
 //! `throughput` objective at that depth instead of single-shot latency.
 //!
+//! `--qps N` (or `--workload FILE`, a JSON timestamp trace) switches a run
+//! to serving semantics: `predict` replays the workload through the
+//! discrete-event serving simulator and prints tail latency / drop-rate /
+//! queue statistics, while `build`/`sweep` optimize the `serve_slo`
+//! objective — meet `--max-p99-ms MS` (p99 tail under load) at minimum
+//! energy. `--arrival`, `--seed`, `--queue-depth` and `--policy` shape the
+//! synthetic arrival process; `--batch` and `--qps` are mutually
+//! exclusive.
+//!
 //! `predict` and `build` route through the `api::Engine` facade — the CLI
 //! is one consumer of the same typed request/response surface the JSONL
 //! serving mode (`serve`) exposes.
@@ -52,12 +66,13 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
-use autodnnchip::api::{self, Engine, PredictRequest, Request, Response};
+use autodnnchip::api::{self, Engine, PredictRequest, Request, Response, SimulateWorkloadRequest};
 use autodnnchip::builder::{surrogate, Objective, Spec};
 use autodnnchip::coordinator::{DseChoice, GridChoice, MoveSetChoice, RunConfig};
 use autodnnchip::dnn::zoo;
 use autodnnchip::util::cli::Args;
 use autodnnchip::util::table::{f, Table};
+use autodnnchip::workload::{self, ArrivalKind, QueuePolicy, WorkloadSpec};
 use autodnnchip::{experiments, obs, runtime};
 
 /// Where the `--trace-out`/`--metrics-out` telemetry goes. Every command
@@ -128,16 +143,27 @@ fn dispatch(args: &Args) -> Result<()> {
 /// command body runs).
 const OBS_FLAGS: [&str; 2] = ["trace-out", "metrics-out"];
 
+/// The serving-workload flag family, registered on every command
+/// (threaded into the run by predict/build/sweep, accepted as no-ops
+/// elsewhere so scripted flag sets can be shared across commands).
+const WORKLOAD_FLAGS: [&str; 6] = ["workload", "qps", "arrival", "seed", "queue-depth", "policy"];
+
 /// `known` command flags plus the global observability flags, for
 /// `warn_unknown_flags`.
 fn with_obs_flags<'a>(known: &[&'a str]) -> Vec<&'a str> {
     known.iter().copied().chain(OBS_FLAGS).collect()
 }
 
+/// [`with_obs_flags`] plus the workload flag family — the allowlist every
+/// command registers.
+fn with_shared_flags<'a>(known: &[&'a str]) -> Vec<&'a str> {
+    known.iter().copied().chain(OBS_FLAGS).chain(WORKLOAD_FLAGS).collect()
+}
+
 fn run_command(args: &Args) -> Result<()> {
     match args.subcommand.first().map(|s| s.as_str()) {
         Some("list-models") => {
-            args.warn_unknown_flags(&with_obs_flags(&["batch"]));
+            args.warn_unknown_flags(&with_shared_flags(&["batch"]));
             let mut t = Table::new("model zoo", &["name", "layers", "params (M)", "MACs (M)"]);
             for name in zoo::all_names() {
                 let m = zoo::by_name(&name).unwrap();
@@ -213,10 +239,75 @@ fn apply_batch_flag(args: &Args, spec: &mut Spec) -> Result<()> {
     Ok(())
 }
 
+/// The shared serving flags (build and sweep): `--qps N` — or `--workload
+/// FILE`, summarized to the trace's mean arrival rate — switches the run
+/// to the `serve_slo` objective, with `--arrival uniform|poisson|burst`,
+/// `--seed S`, `--queue-depth D` and `--policy drop|block` shaping the
+/// arrival process and `--max-p99-ms MS` setting the tail-latency bound.
+fn apply_workload_flags(args: &Args, spec: &mut Spec) -> Result<()> {
+    if let Some(bound) = numeric_flag::<f64>(args, "max-p99-ms") {
+        spec.max_p99_ms = Some(bound);
+    }
+    let trace = args.flag("workload");
+    let qps = match (trace, numeric_flag::<u64>(args, "qps")) {
+        (Some(_), Some(_)) => bail!("--workload FILE and --qps N are mutually exclusive"),
+        (Some(path), None) => trace_mean_qps(Path::new(path))?,
+        (None, Some(0)) => bail!("--qps must be >= 1"),
+        (None, Some(q)) => q,
+        (None, None) => {
+            for dependent in ["arrival", "queue-depth", "policy"] {
+                if args.flag(dependent).is_some() {
+                    bail!("--{dependent} requires --qps N (or --workload FILE)");
+                }
+            }
+            spec.validate()?;
+            return Ok(());
+        }
+    };
+    if matches!(spec.objective, Objective::Throughput { .. }) {
+        bail!("--batch and --qps/--workload are mutually exclusive (throughput vs serve_slo)");
+    }
+    let mut w = WorkloadSpec::poisson(qps);
+    if let Some(kind) = args.flag("arrival") {
+        w.arrival = ArrivalKind::parse(kind)?;
+    }
+    if let Some(seed) = numeric_flag::<u64>(args, "seed") {
+        w.seed = seed;
+    }
+    if let Some(depth) = numeric_flag::<usize>(args, "queue-depth") {
+        w.queue_depth = depth;
+    }
+    if let Some(policy) = args.flag("policy") {
+        w.policy = QueuePolicy::parse(policy)?;
+    }
+    spec.objective = Objective::ServeSlo { workload: w };
+    spec.validate()?;
+    Ok(())
+}
+
+/// Mean offered rate of a timestamp trace, for runs whose `serve_slo`
+/// workload must stay synthetic (the DSE's `WorkloadSpec` is `Copy`; the
+/// literal trace replays only in `predict --workload` /
+/// `simulate_workload` requests).
+fn trace_mean_qps(path: &Path) -> Result<u64> {
+    let ts = workload::load_trace(path)?;
+    let (Some(first), Some(last)) = (ts.first(), ts.last()) else {
+        bail!("workload trace {} is empty", path.display());
+    };
+    let span_ms = last - first;
+    if ts.len() < 2 || span_ms <= 0.0 {
+        bail!("workload trace {} needs >= 2 distinct timestamps to derive a rate", path.display());
+    }
+    let qps = ((ts.len() - 1) as f64 * 1000.0 / span_ms).round();
+    Ok((qps as u64).max(1))
+}
+
 fn cmd_predict(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&[
+    let mut known = with_shared_flags(&[
         "model", "template", "tech", "unroll", "pipeline", "batch",
-    ]));
+    ]);
+    known.push("requests");
+    args.warn_unknown_flags(&known);
     let req = PredictRequest {
         model: args.flag_or("model", "SK"),
         template: args.flag_or("template", "hetero_dw_pw"),
@@ -225,6 +316,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
         pipeline: numeric_flag(args, "pipeline"),
         batch: numeric_flag(args, "batch"),
     };
+    if args.flag("qps").is_some() || args.flag("workload").is_some() {
+        return predict_workload(args, req);
+    }
     // Predict runs on the calling thread, so a single-worker engine avoids
     // spawning a machine-sized pool for the most common CLI command.
     let engine = Engine::builder().workers(1).build();
@@ -246,10 +340,71 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `predict --qps N` / `predict --workload FILE`: serve the design point
+/// under the requested arrival process and print the tail-latency report
+/// (the CLI face of the `simulate_workload` JSONL request).
+fn predict_workload(args: &Args, point: PredictRequest) -> Result<()> {
+    let trace = args.flag("workload").map(|s| s.to_string());
+    if trace.is_some() {
+        for synthetic in ["qps", "arrival", "requests"] {
+            if args.flag(synthetic).is_some() {
+                bail!("--{synthetic} conflicts with --workload FILE (the trace brings its own arrivals)");
+            }
+        }
+        if args.flag("seed").is_some() {
+            bail!("--seed conflicts with --workload FILE (the trace brings its own arrivals)");
+        }
+    }
+    let mut req = SimulateWorkloadRequest {
+        point,
+        qps: numeric_flag::<u64>(args, "qps"),
+        trace,
+        ..SimulateWorkloadRequest::poisson("SK", 1)
+    };
+    if let Some(kind) = args.flag("arrival") {
+        req.arrival = ArrivalKind::parse(kind)?;
+    }
+    if let Some(seed) = numeric_flag::<u64>(args, "seed") {
+        req.seed = seed;
+    }
+    if let Some(depth) = numeric_flag::<usize>(args, "queue-depth") {
+        req.queue_depth = depth;
+    }
+    if let Some(policy) = args.flag("policy") {
+        req.policy = QueuePolicy::parse(policy)?;
+    }
+    if let Some(n) = numeric_flag::<usize>(args, "requests") {
+        req.requests = n;
+    }
+    let engine = Engine::builder().workers(1).build();
+    let Response::SimulateWorkload(w) = engine.submit(Request::SimulateWorkload(req))? else {
+        bail!("engine returned a non-workload response");
+    };
+    let r = &w.report;
+    let mut t = Table::new(
+        &format!("Workload simulation — {} on {}", w.model, w.template),
+        &["metric", "value"],
+    );
+    t.row(vec!["requests".into(), r.requests.to_string()]);
+    t.row(vec!["completed".into(), r.completed.to_string()]);
+    t.row(vec!["dropped".into(), r.dropped.to_string()]);
+    t.row(vec!["blocked".into(), r.blocked.to_string()]);
+    t.row(vec!["p50 latency (ms)".into(), f(r.p50_ms, 3)]);
+    t.row(vec!["p95 latency (ms)".into(), f(r.p95_ms, 3)]);
+    t.row(vec!["p99 latency (ms)".into(), f(r.p99_ms, 3)]);
+    t.row(vec!["offered qps".into(), f(r.offered_qps, 1)]);
+    t.row(vec!["achieved qps".into(), f(r.achieved_qps, 1)]);
+    t.row(vec!["drop rate".into(), f(r.drop_rate, 4)]);
+    t.row(vec!["utilization".into(), f(r.utilization, 3)]);
+    t.row(vec!["max queue depth".into(), r.max_queue_depth.to_string()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_build(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&[
+    args.warn_unknown_flags(&with_shared_flags(&[
         "config", "model", "model-json", "backend", "moves", "n2", "n-opt", "out", "rtl-out",
-        "cache-dir", "dse", "grid", "batch",
+        "cache-dir", "dse", "grid", "batch", "max-p99-ms",
     ]));
     let cfg = if let Some(path) = args.flag("config") {
         // The config file carries the whole run; any other flag on the
@@ -272,6 +427,7 @@ fn cmd_build(args: &Args) -> Result<()> {
             other => bail!("unknown backend '{other}'"),
         };
         apply_batch_flag(args, &mut spec)?;
+        apply_workload_flags(args, &mut spec)?;
         let moves = match args.flag_or("moves", "full").as_str() {
             "legacy" => MoveSetChoice::Legacy,
             "full" => MoveSetChoice::Full,
@@ -310,9 +466,9 @@ fn cmd_build(args: &Args) -> Result<()> {
 /// stage-2 move accept/reject counters are written to FILE after the
 /// sweep.
 fn cmd_sweep(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&[
+    args.warn_unknown_flags(&with_shared_flags(&[
         "model", "model-json", "backend", "n2", "cache-dir", "out", "workers", "dse", "grid",
-        "dump-training", "batch",
+        "dump-training", "batch", "max-p99-ms",
     ]));
     let backend = args.flag_or("backend", "fpga");
     let mut spec = match backend.as_str() {
@@ -321,6 +477,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         other => bail!("unknown backend '{other}'"),
     };
     apply_batch_flag(args, &mut spec)?;
+    apply_workload_flags(args, &mut spec)?;
     let cfg = RunConfig {
         model: args.flag_or("model", "SK"),
         model_json: args.flag("model-json").map(|s| s.to_string()),
@@ -380,7 +537,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 /// have finished (see `api::serve`'s ordering contract), so one slow
 /// build does not hold back the output of the cheap requests ahead of it.
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&[
+    args.warn_unknown_flags(&with_shared_flags(&[
         "requests", "out", "workers", "verbose", "cache-dir", "batch",
     ]));
     let path = args.flag("requests").ok_or_else(|| {
@@ -433,7 +590,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["seed", "results", "batch"]));
+    args.warn_unknown_flags(&with_shared_flags(&["seed", "results", "batch"]));
     let id = args
         .subcommand
         .get(1)
@@ -453,7 +610,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> Result<()> {
-    args.warn_unknown_flags(&with_obs_flags(&["artifacts", "batch"]));
+    args.warn_unknown_flags(&with_shared_flags(&["artifacts", "batch"]));
     let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let rt = runtime::Runtime::new(&dir)?;
     println!("PJRT platform: {}", rt.platform());

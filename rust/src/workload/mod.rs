@@ -1,0 +1,695 @@
+//! Workload-driven serving simulation: arrival processes, a bounded
+//! admission queue, and tail-latency statistics over the fine simulator's
+//! fill/steady-period model.
+//!
+//! The fine mode answers "how fast is one (batched) inference"; serving
+//! heavy traffic is governed by *tail latency under bursty arrivals*,
+//! which depends on the arrival process and queueing, not just the
+//! service time. [`simulate_workload`] is a deterministic discrete-event
+//! simulation of that regime, O(events) in the number of requests:
+//!
+//! - The design is abstracted to two numbers taken from a [`FineReport`]:
+//!   the steady-state **initiation interval** (`1000 / steady_fps()` ms —
+//!   a new inference can start this often once the pipeline is full) and
+//!   the **service latency** per inference
+//!   (`latency_per_inference_ms()`). No per-request fine-sim re-run.
+//! - Arrivals come from an [`ArrivalProcess`]: deterministic `Uniform`
+//!   spacing, `Poisson` exponential gaps, a two-state Markov-modulated
+//!   `MarkovBurst` (both via the seeded in-tree PRNG — same seed, same
+//!   byte-identical report), or a literal `Trace` of timestamps loaded
+//!   from a JSON file.
+//! - A bounded admission queue (depth [`Workload::queue_depth`]) either
+//!   **drops** excess arrivals or **blocks** them until a slot frees
+//!   ([`QueuePolicy`]).
+//!
+//! The resulting [`WorkloadReport`] carries p50/p95/p99/mean/max latency,
+//! achieved QPS, the queue-depth histogram, drop/block counts, server
+//! utilization and per-stage occupancy under load — the inputs the
+//! builder's `ServeSlo` objective and the occupancy-fed `BufferResize`
+//! move optimize against.
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Graph;
+use crate::predictor::{simulate_batched, FineReport};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Batch used when probing a design's steady state for serving: deep
+/// enough that `steady_fps()` reflects pipeline overlap rather than the
+/// single-shot latency, small enough to stay cheap inside the DSE loop.
+pub const SERVE_PROBE_BATCH: usize = 8;
+
+/// Request count used when the stage-2 move engine scores a candidate
+/// under the `ServeSlo` objective — enough events for a stable p99 at a
+/// cost far below one fine simulation.
+pub const DSE_REQUESTS: usize = 2_000;
+
+/// Default request count for user-facing runs (CLI, JSONL requests,
+/// result.json's `"workload"` section).
+pub const DEFAULT_REQUESTS: usize = 10_000;
+
+/// Default admission-queue depth when a config does not name one.
+pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+
+/// In a `MarkovBurst` arrival process the burst state emits at
+/// `BURST_FACTOR ×` the nominal rate and the calm state at
+/// `1/BURST_FACTOR ×`; state runs last [`BURST_RUN`] arrivals in
+/// expectation.
+pub const BURST_FACTOR: f64 = 4.0;
+/// Expected arrivals per Markov state run (switch probability 1/16).
+pub const BURST_RUN: f64 = 16.0;
+
+/// Synthetic arrival-process kinds — fieldless so the builder's
+/// `Objective::ServeSlo` stays `Copy + Eq`. `Trace` arrivals (which carry
+/// their timestamps) exist only at the [`ArrivalProcess`] level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrivalKind {
+    /// Deterministic spacing at exactly `1000/qps` ms.
+    Uniform,
+    /// Exponential inter-arrival gaps with mean `1000/qps` ms.
+    Poisson,
+    /// Two-state Markov-modulated Poisson: bursts at `BURST_FACTOR × qps`
+    /// alternate with calm at `qps / BURST_FACTOR`.
+    Burst,
+}
+
+impl ArrivalKind {
+    /// Strict config-schema spelling (`"arrival"` key).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Burst => "burst",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str); errors name the valid set.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(ArrivalKind::Uniform),
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "burst" => Ok(ArrivalKind::Burst),
+            other => bail!("unknown arrival kind {other:?} (expected uniform|poisson|burst)"),
+        }
+    }
+}
+
+/// What happens when a request arrives to a full admission queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueuePolicy {
+    /// The request is discarded and counted in `WorkloadReport::dropped`.
+    Drop,
+    /// The client waits for a slot; the wait counts toward its latency
+    /// and the request is counted in `WorkloadReport::blocked`.
+    Block,
+}
+
+impl QueuePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QueuePolicy::Drop => "drop",
+            QueuePolicy::Block => "block",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "drop" => Ok(QueuePolicy::Drop),
+            "block" => Ok(QueuePolicy::Block),
+            other => bail!("unknown queue policy {other:?} (expected drop|block)"),
+        }
+    }
+}
+
+/// The `Copy + Eq` workload description embedded in
+/// `Objective::ServeSlo` and the strict `"workload"` config object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkloadSpec {
+    pub arrival: ArrivalKind,
+    /// Offered load in requests/s (≥ 1).
+    pub qps: u64,
+    /// PRNG seed — same seed, byte-identical [`WorkloadReport`].
+    pub seed: u64,
+    /// Admission-queue bound (≥ 1).
+    pub queue_depth: usize,
+    pub policy: QueuePolicy,
+}
+
+impl WorkloadSpec {
+    /// Poisson arrivals at `qps` with the default seed/queue/policy —
+    /// the shape `--qps N` constructs before `--arrival`/`--seed`/
+    /// `--queue-depth` override fields.
+    pub fn poisson(qps: u64) -> Self {
+        WorkloadSpec {
+            arrival: ArrivalKind::Poisson,
+            qps,
+            seed: 0,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            policy: QueuePolicy::Drop,
+        }
+    }
+
+    /// Structural validity: zero-rate traffic or a zero-slot queue is a
+    /// spec error, not a simulation outcome.
+    pub fn validate(&self) -> Result<()> {
+        if self.qps == 0 {
+            bail!("workload qps must be >= 1");
+        }
+        if self.queue_depth == 0 {
+            bail!("workload queue_depth must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Expand into a runnable [`Workload`] over `requests` arrivals.
+    pub fn workload(&self, requests: usize) -> Workload {
+        Workload {
+            arrival: ArrivalProcess::from(self.arrival),
+            qps: self.qps,
+            seed: self.seed,
+            queue_depth: self.queue_depth,
+            policy: self.policy,
+            requests,
+        }
+    }
+}
+
+/// A full arrival process, including literal traces. Synthetic kinds are
+/// generated lazily from (`qps`, `seed`); a `Trace` carries its
+/// timestamps (milliseconds, sorted ascending).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    Uniform,
+    Poisson,
+    MarkovBurst,
+    Trace(Vec<f64>),
+}
+
+impl From<ArrivalKind> for ArrivalProcess {
+    fn from(k: ArrivalKind) -> Self {
+        match k {
+            ArrivalKind::Uniform => ArrivalProcess::Uniform,
+            ArrivalKind::Poisson => ArrivalProcess::Poisson,
+            ArrivalKind::Burst => ArrivalProcess::MarkovBurst,
+        }
+    }
+}
+
+/// A runnable workload: arrival process + load + queue discipline +
+/// horizon. Built from a [`WorkloadSpec`] (synthetic) or a trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub arrival: ArrivalProcess,
+    pub qps: u64,
+    pub seed: u64,
+    pub queue_depth: usize,
+    pub policy: QueuePolicy,
+    /// Number of requests for synthetic processes (a `Trace` brings its
+    /// own length).
+    pub requests: usize,
+}
+
+impl Workload {
+    /// A workload replaying `timestamps_ms` (sorted on construction).
+    pub fn from_trace(mut timestamps_ms: Vec<f64>, queue_depth: usize) -> Result<Self> {
+        if timestamps_ms.is_empty() {
+            bail!("workload trace is empty");
+        }
+        for &t in &timestamps_ms {
+            if !t.is_finite() || t < 0.0 {
+                bail!("workload trace timestamp {t} is not a finite non-negative ms value");
+            }
+        }
+        timestamps_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite timestamps"));
+        let requests = timestamps_ms.len();
+        Ok(Workload {
+            arrival: ArrivalProcess::Trace(timestamps_ms),
+            qps: 0,
+            seed: 0,
+            queue_depth,
+            policy: QueuePolicy::Drop,
+            requests,
+        })
+    }
+
+    /// Arrival timestamps in ms, deterministic in (`arrival`, `qps`,
+    /// `seed`, `requests`).
+    pub fn arrival_times(&self) -> Result<Vec<f64>> {
+        if let ArrivalProcess::Trace(ts) = &self.arrival {
+            return Ok(ts.clone());
+        }
+        if self.qps == 0 {
+            bail!("workload qps must be >= 1 for synthetic arrivals");
+        }
+        if self.requests == 0 {
+            bail!("workload must carry at least one request");
+        }
+        let gap = 1000.0 / self.qps as f64;
+        let mut times = Vec::with_capacity(self.requests);
+        match &self.arrival {
+            ArrivalProcess::Uniform => {
+                for i in 0..self.requests {
+                    times.push(i as f64 * gap);
+                }
+            }
+            ArrivalProcess::Poisson => {
+                let mut rng = Rng::new(self.seed).fork("workload.poisson");
+                let mut t = 0.0;
+                for _ in 0..self.requests {
+                    times.push(t);
+                    t += exp_gap(&mut rng, gap);
+                }
+            }
+            ArrivalProcess::MarkovBurst => {
+                let mut rng = Rng::new(self.seed).fork("workload.burst");
+                let mut bursting = rng.bool(0.5);
+                let mut t = 0.0;
+                for _ in 0..self.requests {
+                    times.push(t);
+                    let mean = if bursting { gap / BURST_FACTOR } else { gap * BURST_FACTOR };
+                    t += exp_gap(&mut rng, mean);
+                    if rng.bool(1.0 / BURST_RUN) {
+                        bursting = !bursting;
+                    }
+                }
+            }
+            ArrivalProcess::Trace(_) => unreachable!("handled above"),
+        }
+        Ok(times)
+    }
+}
+
+/// Exponential gap with the given mean (ms). `1 - f64()` keeps the log
+/// argument in (0, 1].
+fn exp_gap(rng: &mut Rng, mean_ms: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_ms
+}
+
+/// Load a `Trace` workload from a JSON file: either a bare array of
+/// millisecond timestamps or `{"timestamps_ms": [...]}`.
+pub fn load_trace(path: &std::path::Path) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workload trace {}", path.display()))?;
+    let json = Json::parse(&text)
+        .with_context(|| format!("parsing workload trace {}", path.display()))?;
+    let arr = json
+        .as_arr()
+        .or_else(|| json.get("timestamps_ms").and_then(|v| v.as_arr()))
+        .with_context(|| {
+            format!(
+                "workload trace {} must be a JSON array of ms timestamps \
+                 or an object with \"timestamps_ms\"",
+                path.display()
+            )
+        })?;
+    let mut ts = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let t = v
+            .as_f64()
+            .with_context(|| format!("trace entry {i} is not a number"))?;
+        ts.push(t);
+    }
+    Ok(ts)
+}
+
+/// Everything the serving simulation observed. Deterministic in
+/// (`FineReport`, `Workload`): same inputs, byte-identical report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadReport {
+    /// Arrivals offered (trace length or `Workload::requests`).
+    pub requests: usize,
+    /// Requests that completed service.
+    pub completed: usize,
+    /// Requests discarded by the `Drop` policy.
+    pub dropped: usize,
+    /// Requests that had to wait for queue room under `Block`.
+    pub blocked: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Completions per second over the simulated horizon.
+    pub achieved_qps: f64,
+    /// Offered rate (nominal `qps`, or the trace's empirical rate).
+    pub offered_qps: f64,
+    /// First arrival to last completion, ms.
+    pub horizon_ms: f64,
+    /// `queue_hist[d]` = arrivals that found `d` requests queued ahead of
+    /// them (last bin saturates at `queue_depth`).
+    pub queue_hist: Vec<u64>,
+    pub max_queue_depth: usize,
+    /// `dropped / requests`.
+    pub drop_rate: f64,
+    /// Fraction of the horizon the design was initiating inferences.
+    pub utilization: f64,
+    /// Service latency per inference fed to the queue model
+    /// (`FineReport::latency_per_inference_ms`).
+    pub service_ms: f64,
+    /// Steady-state initiation interval (`1000 / steady_fps`).
+    pub period_ms: f64,
+    /// Per-stage pipeline occupancy *under this load*: the fine sim's
+    /// per-node occupancy scaled by server utilization — the signal the
+    /// `BufferResize` move reads.
+    pub occupancy: Vec<f64>,
+}
+
+impl WorkloadReport {
+    /// The tail statistic `Spec::max_p99_ms` bounds.
+    pub fn p99_ms(&self) -> f64 {
+        self.p99_ms
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests", (self.requests as u64).into()),
+            ("completed", (self.completed as u64).into()),
+            ("dropped", (self.dropped as u64).into()),
+            ("blocked", (self.blocked as u64).into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("max_ms", self.max_ms.into()),
+            ("achieved_qps", self.achieved_qps.into()),
+            ("offered_qps", self.offered_qps.into()),
+            ("horizon_ms", self.horizon_ms.into()),
+            ("queue_hist", Json::Arr(self.queue_hist.iter().map(|&c| c.into()).collect())),
+            ("max_queue_depth", (self.max_queue_depth as u64).into()),
+            ("drop_rate", self.drop_rate.into()),
+            ("utilization", self.utilization.into()),
+            ("service_ms", self.service_ms.into()),
+            ("period_ms", self.period_ms.into()),
+            ("occupancy", Json::Arr(self.occupancy.iter().map(|&o| o.into()).collect())),
+        ])
+    }
+}
+
+/// Sorted-sample percentile with deterministic nearest-rank-style
+/// indexing (`p` in [0, 100]).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Serve `workload` on the design summarized by `fine`.
+///
+/// The design acts as a pipelined server: it *initiates* at most one
+/// inference per `period_ms = 1000 / fine.steady_fps()` and each
+/// initiated inference *completes* `service_ms =
+/// fine.latency_per_inference_ms()` later, so
+/// `start_i = max(arrival_i, start_{i-1} + period_ms)` and
+/// `latency_i = start_i + service_ms - arrival_i`. Arrivals that find
+/// `queue_depth` requests already waiting are dropped or blocked per
+/// [`QueuePolicy`]. O(requests) time, deterministic.
+pub fn simulate_workload(fine: &FineReport, workload: &Workload) -> Result<WorkloadReport> {
+    let _span = crate::obs::span("workload.simulate");
+    let service_ms = fine.latency_per_inference_ms();
+    let steady_fps = fine.steady_fps();
+    if steady_fps <= 0.0 || !service_ms.is_finite() || service_ms <= 0.0 {
+        bail!(
+            "design has no sustainable service rate (steady_fps {steady_fps}, \
+             service {service_ms} ms) — cannot serve a workload"
+        );
+    }
+    if workload.queue_depth == 0 {
+        bail!("workload queue_depth must be >= 1");
+    }
+    let period_ms = 1000.0 / steady_fps;
+    let arrivals = workload.arrival_times()?;
+    let requests = arrivals.len();
+
+    // Admitted-request start times are monotone nondecreasing, so the
+    // queue depth seen by an arrival is `admitted - started` with a
+    // single pointer advancing over `starts` — O(requests) total.
+    let mut starts: Vec<f64> = Vec::with_capacity(requests);
+    let mut started = 0usize; // starts[..started] have begun service
+    let mut latencies: Vec<f64> = Vec::with_capacity(requests);
+    let mut queue_hist = vec![0u64; workload.queue_depth + 1];
+    let mut max_queue_depth = 0usize;
+    let mut dropped = 0usize;
+    let mut blocked = 0usize;
+    let mut last_complete: f64 = 0.0;
+
+    for &arrival in &arrivals {
+        while started < starts.len() && starts[started] <= arrival {
+            started += 1;
+        }
+        let depth = starts.len() - started;
+        queue_hist[depth.min(workload.queue_depth)] += 1;
+        max_queue_depth = max_queue_depth.max(depth);
+
+        let mut effective_arrival = arrival;
+        if depth >= workload.queue_depth {
+            match workload.policy {
+                QueuePolicy::Drop => {
+                    dropped += 1;
+                    continue;
+                }
+                QueuePolicy::Block => {
+                    // Wait until the request `queue_depth` places ahead
+                    // starts, freeing one slot.
+                    blocked += 1;
+                    let room_at = starts[starts.len() - workload.queue_depth];
+                    effective_arrival = effective_arrival.max(room_at);
+                }
+            }
+        }
+        let start = match starts.last() {
+            Some(&prev) => effective_arrival.max(prev + period_ms),
+            None => effective_arrival,
+        };
+        starts.push(start);
+        let complete = start + service_ms;
+        latencies.push(complete - arrival);
+        last_complete = last_complete.max(complete);
+    }
+
+    let completed = latencies.len();
+    let first_arrival = arrivals.first().copied().unwrap_or(0.0);
+    let last_arrival = arrivals.last().copied().unwrap_or(0.0);
+    let horizon_ms = (last_complete.max(last_arrival) - first_arrival).max(f64::MIN_POSITIVE);
+    let achieved_qps = completed as f64 * 1000.0 / horizon_ms;
+    let offered_qps = match &workload.arrival {
+        ArrivalProcess::Trace(_) => requests as f64 * 1000.0 / horizon_ms,
+        _ => workload.qps as f64,
+    };
+    let utilization = (completed as f64 * period_ms / horizon_ms).min(1.0);
+    let occupancy: Vec<f64> =
+        fine.per_node.iter().map(|n| n.occupancy * utilization).collect();
+
+    let mean_ms = if completed == 0 {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / completed as f64
+    };
+    let mut sorted = latencies;
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let report = WorkloadReport {
+        requests,
+        completed,
+        dropped,
+        blocked,
+        p50_ms: percentile(&sorted, 50.0),
+        p95_ms: percentile(&sorted, 95.0),
+        p99_ms: percentile(&sorted, 99.0),
+        mean_ms,
+        max_ms: sorted.last().copied().unwrap_or(0.0),
+        achieved_qps,
+        offered_qps,
+        horizon_ms,
+        queue_hist,
+        max_queue_depth,
+        drop_rate: dropped as f64 / requests.max(1) as f64,
+        utilization,
+        service_ms,
+        period_ms,
+        occupancy,
+    };
+    if crate::obs::enabled() {
+        crate::obs::metrics::counter("workload.requests", report.requests as u64);
+        crate::obs::metrics::counter("workload.completed", report.completed as u64);
+        crate::obs::metrics::counter("workload.dropped", report.dropped as u64);
+        crate::obs::metrics::counter("workload.blocked", report.blocked as u64);
+        crate::obs::metrics::record("workload.p99_us", (report.p99_ms * 1000.0) as u64);
+        crate::obs::metrics::record(
+            "workload.queue_depth_max",
+            report.max_queue_depth as u64,
+        );
+    }
+    Ok(report)
+}
+
+/// Convenience entry over a design graph: probe the steady state with a
+/// [`SERVE_PROBE_BATCH`]-deep batched fine simulation, then serve the
+/// workload on that report.
+pub fn simulate_workload_graph(
+    g: &Graph,
+    leakage_mw: f64,
+    workload: &Workload,
+) -> Result<WorkloadReport> {
+    let fine = simulate_batched(g, SERVE_PROBE_BATCH, leakage_mw, false)?;
+    simulate_workload(&fine, workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+    use crate::predictor::NodeSim;
+
+    /// A synthetic steady-state report: 8 inferences, 10 ms makespan,
+    /// period 100 cycles of 1000 → service 1.25 ms, period 1 ms.
+    fn probe_report() -> FineReport {
+        FineReport {
+            cycles: 1000,
+            latency_ms: 10.0,
+            energy_pj: 1.0,
+            per_node: vec![
+                NodeSim { occupancy: 0.9, ..Default::default() },
+                NodeSim { occupancy: 0.4, ..Default::default() },
+            ],
+            bottleneck: NodeId::default(),
+            trace: Vec::new(),
+            batch: 8,
+            fill_cycles: 300,
+            steady_period_cycles: 100,
+        }
+    }
+
+    fn spec(qps: u64, arrival: ArrivalKind) -> WorkloadSpec {
+        WorkloadSpec { arrival, ..WorkloadSpec::poisson(qps) }
+    }
+
+    #[test]
+    fn uniform_low_qps_p99_is_service_latency() {
+        let fine = probe_report();
+        // steady_fps = 100 per period-ms → 1000 fps; offer 10 qps.
+        let w = spec(10, ArrivalKind::Uniform).workload(500);
+        let r = simulate_workload(&fine, &w).unwrap();
+        assert_eq!(r.completed, 500);
+        assert_eq!(r.dropped + r.blocked, 0);
+        assert!((r.p99_ms - fine.latency_per_inference_ms()).abs() < 1e-9);
+        assert!((r.p50_ms - r.p99_ms).abs() < 1e-9, "no queueing at low load");
+        assert_eq!(r.max_queue_depth, 0);
+        assert_eq!(r.queue_hist[0], 500);
+    }
+
+    #[test]
+    fn overload_drops_with_drop_policy_and_blocks_with_block_policy() {
+        let fine = probe_report(); // sustains 1000 qps
+        let mut w = spec(4000, ArrivalKind::Uniform).workload(2000);
+        w.queue_depth = 4;
+        let r = simulate_workload(&fine, &w).unwrap();
+        assert!(r.dropped > 0, "overload must drop under Drop policy");
+        assert!(r.achieved_qps < 4000.0 * 0.9);
+        assert!(r.drop_rate > 0.0);
+
+        w.policy = QueuePolicy::Block;
+        let rb = simulate_workload(&fine, &w).unwrap();
+        assert_eq!(rb.dropped, 0);
+        assert!(rb.blocked > 0, "overload must block under Block policy");
+        assert!(rb.p99_ms > r.p99_ms, "blocking waits show up in the tail");
+        assert_eq!(rb.completed, rb.requests);
+    }
+
+    #[test]
+    fn seeded_poisson_and_burst_are_deterministic() {
+        let fine = probe_report();
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Burst] {
+            let w = WorkloadSpec { seed: 42, ..spec(800, kind) }.workload(3000);
+            let a = simulate_workload(&fine, &w).unwrap();
+            let b = simulate_workload(&fine, &w).unwrap();
+            assert_eq!(a, b, "same seed must be byte-identical ({kind:?})");
+            let w2 = WorkloadSpec { seed: 43, ..spec(800, kind) }.workload(3000);
+            let c = simulate_workload(&fine, &w2).unwrap();
+            assert_ne!(a, c, "different seed must differ ({kind:?})");
+        }
+    }
+
+    #[test]
+    fn burst_arrivals_have_heavier_tail_than_uniform() {
+        let fine = probe_report();
+        let near = 900; // near saturation (sustains 1000)
+        let uni = simulate_workload(&fine, &spec(near, ArrivalKind::Uniform).workload(5000))
+            .unwrap();
+        let burst = simulate_workload(&fine, &spec(near, ArrivalKind::Burst).workload(5000))
+            .unwrap();
+        assert!(
+            burst.p99_ms > uni.p99_ms,
+            "burst p99 {} must exceed uniform p99 {}",
+            burst.p99_ms,
+            uni.p99_ms
+        );
+    }
+
+    #[test]
+    fn trace_workload_replays_timestamps() {
+        let fine = probe_report();
+        let w = Workload::from_trace(vec![5.0, 0.0, 2.0, 100.0], 8).unwrap();
+        let r = simulate_workload(&fine, &w).unwrap();
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.completed, 4);
+        assert!(r.offered_qps > 0.0);
+    }
+
+    #[test]
+    fn occupancy_scales_with_utilization() {
+        let fine = probe_report();
+        let light = simulate_workload(&fine, &spec(10, ArrivalKind::Uniform).workload(500))
+            .unwrap();
+        let heavy = simulate_workload(&fine, &spec(990, ArrivalKind::Uniform).workload(500))
+            .unwrap();
+        assert_eq!(light.occupancy.len(), 2);
+        assert!(light.utilization < heavy.utilization);
+        assert!(light.occupancy[0] < heavy.occupancy[0]);
+        assert!(heavy.occupancy[0] <= fine.per_node[0].occupancy + 1e-12);
+    }
+
+    #[test]
+    fn zero_rate_designs_and_empty_traces_are_errors() {
+        let mut fine = probe_report();
+        fine.steady_period_cycles = 0;
+        let w = spec(10, ArrivalKind::Uniform).workload(10);
+        assert!(simulate_workload(&fine, &w).is_err());
+        assert!(Workload::from_trace(Vec::new(), 8).is_err());
+        assert!(Workload::from_trace(vec![f64::NAN], 8).is_err());
+        assert!(WorkloadSpec { qps: 0, ..WorkloadSpec::poisson(1) }.validate().is_err());
+        assert!(
+            WorkloadSpec { queue_depth: 0, ..WorkloadSpec::poisson(1) }.validate().is_err()
+        );
+    }
+
+    #[test]
+    fn arrival_kind_and_policy_round_trip_strings() {
+        for k in [ArrivalKind::Uniform, ArrivalKind::Poisson, ArrivalKind::Burst] {
+            assert_eq!(ArrivalKind::parse(k.as_str()).unwrap(), k);
+        }
+        for p in [QueuePolicy::Drop, QueuePolicy::Block] {
+            assert_eq!(QueuePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(ArrivalKind::parse("bursty").is_err());
+        assert!(QueuePolicy::parse("shed").is_err());
+    }
+
+    #[test]
+    fn report_json_carries_every_field() {
+        let fine = probe_report();
+        let r = simulate_workload(&fine, &spec(700, ArrivalKind::Poisson).workload(1000))
+            .unwrap();
+        let j = r.to_json();
+        for key in [
+            "requests", "completed", "dropped", "blocked", "p50_ms", "p95_ms", "p99_ms",
+            "mean_ms", "max_ms", "achieved_qps", "offered_qps", "horizon_ms", "queue_hist",
+            "max_queue_depth", "drop_rate", "utilization", "service_ms", "period_ms",
+            "occupancy",
+        ] {
+            assert!(j.get(key).is_some(), "report JSON missing {key}");
+        }
+        assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(1000));
+    }
+}

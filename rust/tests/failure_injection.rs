@@ -108,6 +108,7 @@ fn builder_with_impossible_budget_yields_no_survivors_not_a_panic() {
         min_fps: 10_000.0,
         max_power_mw: 1.0,
         objective: Objective::Latency,
+        max_p99_ms: None,
         min_precision_bits: 8,
     };
     let out = build_accelerator(&m, &spec, 3, 1).expect("flow completes");

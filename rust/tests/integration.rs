@@ -519,6 +519,80 @@ fn surrogate_sweep_request_matches_exhaustive_through_engine() {
 }
 
 #[test]
+fn serve_slo_config_flow_writes_workload_section() {
+    // The serving objective end to end through the config surface: a JSON
+    // config with `"objective":"serve_slo"` + a strict `"workload"` object
+    // + `"max_p99_ms"` must drive a full build whose result.json carries
+    // the workload replay (tail latencies, drops, queue histogram) and
+    // whose steady_state entries surface per-stage occupancy.
+    let dir = std::env::temp_dir().join(format!("adc_slo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("serve.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{"model":"sdn_smile","backend":"fpga","objective":"serve_slo",
+               "workload":{{"qps":20,"arrival":"poisson","seed":1,"queue_depth":32,
+               "policy":"drop"}},"max_p99_ms":1000000,"n2":1,"n_opt":1,"out_dir":"{}"}}"#,
+            dir.to_string_lossy()
+        ),
+    )
+    .unwrap();
+    let cfg = RunConfig::from_file(cfg_path.to_str().unwrap()).expect("serve_slo config parses");
+    assert!(cfg.spec.workload().is_some(), "spec must carry the workload");
+    let summary = coordinator::run(&cfg).expect("serve_slo build");
+    assert!(!summary.build.survivors.is_empty());
+    let written = std::fs::read_to_string(dir.join("result.json")).unwrap();
+    let j = Json::parse(&written).unwrap();
+    let wl = j.get("workload").expect("result.json must carry the workload replay");
+    assert!(wl.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    let requests = wl.get("requests").unwrap().as_f64().unwrap();
+    let completed = wl.get("completed").unwrap().as_f64().unwrap();
+    let dropped = wl.get("dropped").unwrap().as_f64().unwrap();
+    assert_eq!(completed + dropped, requests);
+    assert!(!wl.get("queue_hist").unwrap().as_arr().unwrap().is_empty());
+    assert!(!wl.get("occupancy").unwrap().as_arr().unwrap().is_empty());
+    for entry in j.get("steady_state").unwrap().as_arr().unwrap() {
+        let occ = entry.get("occupancy").expect("per-survivor occupancy").as_arr().unwrap();
+        assert!(!occ.is_empty());
+        for o in occ {
+            let v = o.as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&v), "occupancy {v} out of range");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn simulate_workload_jsonl_round_trip_is_deterministic() {
+    // The simulate_workload request through the JSONL serving loop: the
+    // line parses, routes, and answers with a tagged report — and the
+    // same line served twice produces byte-identical output (seeded
+    // arrival process, deterministic queue replay).
+    let engine = Engine::builder().isolated_cache().build();
+    let text = "{\"type\":\"simulate_workload\",\"model\":\"sdn_gaze\",\"qps\":25,\
+                \"arrival\":\"burst\",\"seed\":3,\"queue_depth\":16,\"requests\":500}\n";
+    let first = api::serve_lines(&engine, text);
+    assert_eq!(first.failed, 0, "{:?}", first.responses[0].to_json().to_string());
+    let line = first.responses[0].to_json();
+    assert_eq!(line.get("type").unwrap().as_str().unwrap(), "simulate_workload");
+    assert_eq!(line.get("model").unwrap().as_str().unwrap(), "sdn_gaze");
+    assert_eq!(line.get("requests").unwrap().as_f64().unwrap(), 500.0);
+    assert!(line.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(line.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    let second = api::serve_lines(&engine, text);
+    assert_eq!(
+        line.to_string(),
+        second.responses[0].to_json().to_string(),
+        "replaying the same seeded workload line must be byte-identical"
+    );
+    // The request itself round-trips through its JSON encoding.
+    let req = Request::from_json(&Json::parse(text.trim()).unwrap()).expect("parses");
+    let re = Request::from_json(&req.to_json()).expect("re-parses");
+    assert_eq!(req.to_json().to_string(), re.to_json().to_string());
+}
+
+#[test]
 fn worker_pool_parallel_model_evaluation() {
     // The coordinator's pool evaluating the full zoo concurrently must
     // agree with serial evaluation.

@@ -23,6 +23,9 @@ use autodnnchip::templates::{HwConfig, TemplateId};
 use autodnnchip::testkit::{check, check_cfg, Config};
 use autodnnchip::util::json::Json;
 use autodnnchip::util::rng::Rng;
+use autodnnchip::workload::{
+    simulate_workload, ArrivalKind, QueuePolicy, WorkloadSpec, SERVE_PROBE_BATCH,
+};
 
 fn comp(name: &str) -> autodnnchip::graph::Node {
     bare_node(
@@ -1055,6 +1058,123 @@ fn prop_build_accelerator_respects_n_opt() {
         }
         Ok(())
     });
+}
+
+/// The serving-probe design point used by the workload properties below:
+/// the zoo-wide template/config pairing of the batch=1 identity test,
+/// fine-simulated at the `ServeSlo` probe batch depth.
+fn serve_probe(m: &Model, spec: &Spec) -> Option<FineReport> {
+    let (template, cfg) = match spec.backend {
+        Backend::Fpga { .. } => (TemplateId::Hetero, HwConfig::ultra96_default()),
+        Backend::Asic { .. } => {
+            let mut c = HwConfig::asic_default();
+            c.unroll = 48;
+            c.act_buf_bits = 48 * 8 * 1024;
+            c.w_buf_bits = 48 * 8 * 1024;
+            (TemplateId::Systolic, c)
+        }
+    };
+    let g = template.build(m, &cfg).ok()?;
+    g.validate().ok()?;
+    simulate_batched(&g, SERVE_PROBE_BATCH, cfg.tech.costs.leakage_mw, false).ok()
+}
+
+#[test]
+fn prop_low_qps_uniform_p99_converges_to_single_inference_latency_on_zoo() {
+    // At an offered rate far below the design's steady-state service rate,
+    // uniform arrivals never queue: every request starts the instant it
+    // arrives, so its latency is exactly `latency_per_inference_ms()` —
+    // p99 must be *bit-equal* to it on every zoo model on both backends.
+    let mut checked = 0usize;
+    for name in zoo::all_names() {
+        let m = zoo::by_name(&name).unwrap();
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let Some(fine) = serve_probe(&m, &spec) else { continue };
+            let fps = fine.steady_fps();
+            if fps <= 2.0 {
+                continue; // nothing to under-drive
+            }
+            let qps = ((fps / 100.0).floor() as u64).max(1);
+            assert!((qps as f64) < fps, "{name}: probe rate {qps} not below capacity {fps}");
+            let wspec =
+                WorkloadSpec { arrival: ArrivalKind::Uniform, qps, ..WorkloadSpec::poisson(1) };
+            let rep = simulate_workload(&fine, &wspec.workload(512)).unwrap();
+            assert_eq!(rep.completed, 512, "{name} × {:?}", spec.backend);
+            assert_eq!(rep.dropped + rep.blocked, 0, "{name} × {:?}", spec.backend);
+            assert_eq!(rep.max_queue_depth, 0, "{name} × {:?}", spec.backend);
+            assert_eq!(
+                rep.p99_ms.to_bits(),
+                fine.latency_per_inference_ms().to_bits(),
+                "{name} × {:?}: idle-server p99 {} != single-inference latency {}",
+                spec.backend,
+                rep.p99_ms,
+                fine.latency_per_inference_ms()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= zoo::all_names().len(), "too few zoo designs exercised: {checked}");
+}
+
+#[test]
+fn prop_overload_surfaces_drops_under_drop_and_blocking_under_block() {
+    // Offered load above the steady-state service rate must surface as
+    // back-pressure, never as silent queue growth: the Drop policy counts
+    // drops (and never blocks), Block counts blocked requests (and never
+    // drops), and the observed queue depth respects the configured bound.
+    let mut checked = 0usize;
+    for name in zoo::all_names() {
+        let m = zoo::by_name(&name).unwrap();
+        for spec in [Spec::ultra96_object_detection(), Spec::asic_vision()] {
+            let Some(fine) = serve_probe(&m, &spec) else { continue };
+            let qps = (fine.steady_fps() * 4.0).ceil() as u64 + 1;
+            let base = WorkloadSpec {
+                arrival: ArrivalKind::Uniform,
+                qps,
+                queue_depth: 4,
+                ..WorkloadSpec::poisson(1)
+            };
+            let drop = simulate_workload(&fine, &base.workload(400)).unwrap();
+            assert!(drop.dropped > 0, "{name} × {:?}: overload never dropped", spec.backend);
+            assert!(drop.drop_rate > 0.0 && drop.blocked == 0);
+            assert!(drop.max_queue_depth <= 4, "queue bound violated: {}", drop.max_queue_depth);
+            assert!(drop.completed + drop.dropped == drop.requests);
+
+            let blocking = WorkloadSpec { policy: QueuePolicy::Block, ..base };
+            let blk = simulate_workload(&fine, &blocking.workload(400)).unwrap();
+            assert!(blk.blocked > 0, "{name} × {:?}: overload never blocked", spec.backend);
+            assert!(blk.dropped == 0 && blk.completed == blk.requests);
+            // Blocking trades drops for latency: the tail must sit above
+            // the unloaded single-inference service time.
+            assert!(blk.p99_ms > fine.latency_per_inference_ms());
+            checked += 1;
+        }
+    }
+    assert!(checked >= zoo::all_names().len(), "too few zoo designs exercised: {checked}");
+}
+
+#[test]
+fn prop_workload_report_seed_deterministic_and_seed_sensitive() {
+    // The serving simulator is a pure function of (FineReport, Workload):
+    // the same seed reproduces the WorkloadReport byte for byte, and a
+    // different seed actually perturbs the stochastic arrival processes.
+    let m = zoo::skynet_tiny();
+    let cfg = HwConfig::ultra96_default();
+    let g = TemplateId::Hetero.build(&m, &cfg).unwrap();
+    g.validate().unwrap();
+    let fine = simulate_batched(&g, SERVE_PROBE_BATCH, cfg.tech.costs.leakage_mw, false).unwrap();
+    // Drive near capacity so waiting times depend on the arrival sequence.
+    let qps = ((fine.steady_fps() * 0.9) as u64).max(1);
+    for arrival in [ArrivalKind::Poisson, ArrivalKind::Burst] {
+        let wspec = WorkloadSpec { arrival, qps, seed: 7, ..WorkloadSpec::poisson(1) };
+        let a = simulate_workload(&fine, &wspec.workload(2000)).unwrap();
+        let b = simulate_workload(&fine, &wspec.workload(2000)).unwrap();
+        assert_eq!(a, b, "{arrival:?}: same seed must reproduce the report exactly");
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "{arrival:?}: Debug bits diverged");
+        let reseeded = WorkloadSpec { seed: 8, ..wspec };
+        let c = simulate_workload(&fine, &reseeded.workload(2000)).unwrap();
+        assert_ne!(a, c, "{arrival:?}: a different seed left the report untouched");
+    }
 }
 
 #[test]
